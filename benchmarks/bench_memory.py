@@ -1,0 +1,39 @@
+"""Fig 13: throughput vs memory budget (2.5%-25% of dataset) for YCSB-A/B.
+At the smallest budget F2 disables its read cache, like the paper."""
+from __future__ import annotations
+
+from repro.core import KV
+
+from .harness import Zipf, load_store, make_f2_config, make_faster_kv, run_workload
+
+
+def run(n_keys: int = 1 << 16, n_ops: int = 1 << 15, batch: int = 4096,
+        fracs=(0.025, 0.05, 0.10, 0.25)):
+    zipf = Zipf(n_keys, 0.99)
+    out = {}
+    for system in ("F2", "FASTER"):
+        out[system] = {}
+        for wl in ("A", "B"):
+            row = {}
+            for f in fracs:
+                if system == "F2":
+                    cfg = make_f2_config(n_keys, f, rc_enabled=(f > 0.03))
+                    kv = KV(cfg, mode="f2", compact_batch=batch)
+                else:
+                    kv = make_faster_kv(n_keys, f, batch=batch)
+                load_store(kv, n_keys, batch)
+                r = run_workload(kv, wl, zipf, n_ops, batch,
+                                 warmup_ops=n_keys)
+                kv.check_invariants()
+                row[f] = r.modeled_kops
+            out[system][wl] = row
+    return out
+
+
+def report(res) -> str:
+    lines = ["fig13: modeled kops vs memory budget (fraction of dataset)"]
+    for system, per_wl in res.items():
+        for wl, row in per_wl.items():
+            s = " ".join(f"{f*100:4.1f}%:{v:9.1f}" for f, v in row.items())
+            lines.append(f"  {system:7s} YCSB-{wl}: {s}")
+    return "\n".join(lines)

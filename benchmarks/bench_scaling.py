@@ -1,0 +1,32 @@
+"""Fig 11: concurrency scaling.  CPU threads map to vector lanes in the
+tensorized port (DESIGN.md S2): we sweep the op-batch width B and report
+wall-clock CPU throughput (the modeled-NVMe number is lane-invariant)."""
+from __future__ import annotations
+
+from repro.core import KV
+
+from .harness import Zipf, load_store, make_f2_config, run_workload
+
+
+def run(n_keys: int = 1 << 16, n_ops: int = 1 << 15,
+        batches=(512, 1024, 4096, 8192)):
+    zipf = Zipf(n_keys, 0.99)
+    out = {}
+    for wl in ("A", "B"):
+        row = {}
+        for b in batches:
+            kv = KV(make_f2_config(n_keys, 0.10), mode="f2", compact_batch=b)
+            load_store(kv, n_keys, b)
+            r = run_workload(kv, wl, zipf, n_ops, b)
+            kv.check_invariants()
+            row[b] = r.wall_kops
+        out[wl] = row
+    return out
+
+
+def report(res) -> str:
+    lines = ["fig11: wall kops vs batch lanes (thread-scaling analogue)"]
+    for wl, row in res.items():
+        s = " ".join(f"B={b}:{v:7.1f}" for b, v in row.items())
+        lines.append(f"  YCSB-{wl}: {s}")
+    return "\n".join(lines)

@@ -1,0 +1,57 @@
+"""Fig 14: (left) cold-index hash-chunk size sweep — throughput + write
+amplification; (right) read-cache size sweep for read-heavy workloads."""
+from __future__ import annotations
+
+from repro.core import KV
+
+from .harness import Zipf, load_store, make_f2_config, run_workload
+
+
+def run_chunks(n_keys: int = 1 << 16, n_ops: int = 1 << 15,
+               batch: int = 4096, chunk_slots=(8, 16, 32, 128, 512)):
+    """chunk_slots * 8B = chunk bytes: 64B .. 4KiB (paper's x-axis)."""
+    zipf = Zipf(n_keys, 0.99)
+    out = {}
+    for wl in ("A", "B"):
+        row = {}
+        for cs in chunk_slots:
+            kv = KV(make_f2_config(n_keys, 0.10, chunk_slots=cs),
+                    mode="f2", compact_batch=batch)
+            load_store(kv, n_keys, batch)
+            r = run_workload(kv, wl, zipf, n_ops, batch,
+                             warmup_ops=n_keys)
+            kv.check_invariants()
+            row[cs * 8] = (r.modeled_kops, r.write_amp)
+        out[wl] = row
+    return out
+
+
+def run_rc(n_keys: int = 1 << 16, n_ops: int = 1 << 15, batch: int = 4096,
+           rc_fracs=(0.0, 0.08, 0.17, 0.34)):
+    zipf = Zipf(n_keys, 0.99)
+    out = {}
+    for wl in ("B", "C"):
+        row = {}
+        for f in rc_fracs:
+            kv = KV(make_f2_config(n_keys, 0.10, rc_frac=max(f, 0.01),
+                                   rc_enabled=(f > 0)),
+                    mode="f2", compact_batch=batch)
+            load_store(kv, n_keys, batch)
+            r = run_workload(kv, wl, zipf, n_ops, batch,
+                             warmup_ops=n_keys)
+            kv.check_invariants()
+            row[f] = r.modeled_kops
+        out[wl] = row
+    return out
+
+
+def report(chunks, rc) -> str:
+    lines = ["fig14-left: chunk-size -> (modeled kops, write-amp)"]
+    for wl, row in chunks.items():
+        s = " ".join(f"{b}B:({v[0]:8.1f},{v[1]:4.2f})" for b, v in row.items())
+        lines.append(f"  YCSB-{wl}: {s}")
+    lines.append("fig14-right: read-cache budget fraction -> modeled kops")
+    for wl, row in rc.items():
+        s = " ".join(f"{f*100:4.1f}%:{v:9.1f}" for f, v in row.items())
+        lines.append(f"  YCSB-{wl}: {s}")
+    return "\n".join(lines)

@@ -1,0 +1,40 @@
+"""Fig 12: throughput vs Zipfian skew (alpha in [3,1000] -> theta) for
+YCSB-A and YCSB-B."""
+from __future__ import annotations
+
+from repro.core import KV
+
+from .harness import Zipf, load_store, make_f2_config, make_faster_kv, run_workload
+from .ycsb import ALPHA_TO_THETA
+
+
+def run(n_keys: int = 1 << 16, n_ops: int = 1 << 15, batch: int = 4096,
+        alphas=(3, 10, 100, 1000)):
+    out = {}
+    for system in ("F2", "FASTER"):
+        out[system] = {}
+        for wl in ("A", "B"):
+            row = {}
+            for a in alphas:
+                zipf = Zipf(n_keys, ALPHA_TO_THETA[a])
+                if system == "F2":
+                    kv = KV(make_f2_config(n_keys, 0.10), mode="f2",
+                            compact_batch=batch)
+                else:
+                    kv = make_faster_kv(n_keys, 0.10, batch=batch)
+                load_store(kv, n_keys, batch)
+                r = run_workload(kv, wl, zipf, n_ops, batch,
+                                 warmup_ops=n_keys)
+                kv.check_invariants()
+                row[a] = r.modeled_kops
+            out[system][wl] = row
+    return out
+
+
+def report(res) -> str:
+    lines = ["fig12: modeled kops vs skew alpha"]
+    for system, per_wl in res.items():
+        for wl, row in per_wl.items():
+            s = " ".join(f"a={a}:{v:9.1f}" for a, v in row.items())
+            lines.append(f"  {system:7s} YCSB-{wl}: {s}")
+    return "\n".join(lines)

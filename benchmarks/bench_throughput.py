@@ -1,0 +1,46 @@
+"""Fig 10: F2 vs FASTER throughput on Zipfian YCSB A/B/C/F (modeled NVMe).
+Also supplies Table 2 (I/O amplification) numbers for A and B."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core import KV
+
+from .harness import (RunResult, Zipf, load_store, make_f2_config,
+                      make_faster_kv, run_workload)
+
+
+def run(n_keys: int = 1 << 16, n_ops: int = 1 << 16, mem_frac: float = 0.10,
+        theta: float = None, batch: int = 4096) -> Dict[str, Dict[str, RunResult]]:
+    zipf = Zipf(n_keys, theta or 0.99)
+    out: Dict[str, Dict[str, RunResult]] = {}
+    for system in ("F2", "FASTER"):
+        out[system] = {}
+        for wl in ("A", "B", "C", "F"):
+            if system == "F2":
+                kv = KV(make_f2_config(n_keys, mem_frac), mode="f2",
+                        compact_batch=batch)
+            else:
+                kv = make_faster_kv(n_keys, mem_frac, batch=batch)
+            load_store(kv, n_keys, batch)
+            # steady state first: a full dataset pass of warmup so both
+            # systems hit their disk budgets (the paper warms with 25M ops
+            # then measures 300M — compaction churn included)
+            res = run_workload(kv, wl, zipf, n_ops, batch,
+                               warmup_ops=n_keys)
+            kv.check_invariants()
+            out[system][wl] = res
+    return out
+
+
+def report(results) -> str:
+    lines = ["fig10: modeled kops (wall kops) | read-amp / write-amp"]
+    for system, per_wl in results.items():
+        for wl, r in per_wl.items():
+            lines.append(
+                f"  {system:7s} YCSB-{wl}: {r.modeled_kops:9.1f} kops"
+                f" ({r.wall_kops:6.1f} wall) | RA {r.read_amp:6.2f}"
+                f" WA {r.write_amp:5.2f}")
+    a, b = results["F2"]["A"], results["FASTER"]["A"]
+    lines.append(f"  F2/FASTER speedup YCSB-A: {a.modeled_kops/b.modeled_kops:.2f}x")
+    return "\n".join(lines)

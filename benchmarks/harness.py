@@ -1,0 +1,177 @@
+"""Shared benchmark harness: store construction per the paper's memory
+budgeting, workload execution, and the modeled-NVMe throughput metric.
+
+The container has no NVMe array, so cross-system comparisons use the I/O
+model (4 KiB-block accounting identical to the paper's /proc/io method)
+against the paper's testbed: 4x Samsung PM9A3 in RAID-0:
+
+    read BW 6.8 GB/s/disk, rand-read 625 KIOPS/disk, write BW 2.0 GB/s/disk
+
+modeled step time = max(read_ops/IOPS, read_bytes/readBW) + write_bytes/writeBW
+modeled kops      = ops / modeled time  (CPU assumed off the critical path,
+which Fig 1 of the paper establishes for CPU-optimized designs).
+Wall-clock CPU ops/s of the tensorized store is reported alongside.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import KV, F2Config, OP_UPSERT
+from .ycsb import Zipf, make_ops
+
+N_DISKS = 4
+READ_BW = 6.8e9 * N_DISKS
+WRITE_BW = 2.0e9 * N_DISKS
+READ_IOPS = 625e3 * N_DISKS
+
+
+def _p2(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def make_f2_config(n_keys: int, mem_frac: float = 0.10,
+                   value_width: int = 25, chunk_slots: int = 32,
+                   rc_frac: float = 0.17, index_frac: float = 0.17,
+                   rc_enabled: bool = True) -> F2Config:
+    """Split the memory budget like the paper's S8.1 F2 configuration:
+    ~1/6 hot index, ~1/6 read cache, ~1/2 hot-log memory, small cold-log
+    and chunk-log windows; hot disk budget n/6, cold 7n/6."""
+    rec = 16 + 4 * value_width
+    budget = int(n_keys * rec * mem_frac)
+    hot_index = _p2(max(256, int(budget * index_frac / 8)))
+    rc = _p2(max(2, int(budget * rc_frac / rec))) if rc_enabled else 1
+    hot_mem = _p2(max(64, int(budget * 0.5 / rec)))
+    cold_mem = _p2(max(32, hot_mem // 16))
+    n_chunks = _p2(max(64, n_keys // chunk_slots))
+    chunklog_mem = _p2(max(32, int(budget * 0.03 / (8 * chunk_slots))))
+    return F2Config(
+        hot_index_size=hot_index,
+        hot_capacity=_p2(max(2 * hot_mem, n_keys // 4)),
+        hot_mem=hot_mem,
+        cold_capacity=_p2(2 * n_keys),
+        cold_mem=cold_mem,
+        n_chunks=n_chunks,
+        chunk_slots=chunk_slots,
+        chunklog_capacity=_p2(max(4 * n_chunks, 256)),
+        chunklog_mem=chunklog_mem,
+        rc_capacity=rc,
+        value_width=value_width,
+        chain_max=48,
+    )
+
+
+def make_faster_config(n_keys: int, mem_frac: float = 0.10,
+                       value_width: int = 25) -> F2Config:
+    """FASTER (paper S8.1): fixed index ~1/3 of budget, log memory ~2/3.
+    The log DISK budget is ~1.33x the dataset (paper: 40 GiB for 30 GiB),
+    so steady-state updates force regular single-log compactions — the
+    Fig 2 behavior.  (The ring itself gets 2x headroom: compaction appends
+    live records before truncating.)"""
+    rec = 16 + 4 * value_width
+    budget = int(n_keys * rec * mem_frac)
+    return F2Config(
+        hot_index_size=_p2(max(256, int(budget / 3 / 8))),
+        hot_capacity=_p2(2 * n_keys),
+        hot_mem=_p2(max(64, int(budget * 2 / 3 / rec))),
+        cold_capacity=2, cold_mem=1, n_chunks=2, chunklog_capacity=2,
+        chunklog_mem=1, rc_capacity=1,
+        value_width=value_width, chain_max=64,
+    )
+
+
+# Effective steady-state log budget: the paper gives FASTER 40 GiB for a
+# 30 GiB dataset; dead-version inflation keeps it at the budget, compacting
+# continuously (Fig 2).  At bench scale the higher in-place absorption of a
+# small mutable window delays that equilibrium, so 1.2x reproduces the
+# same churn regime (EXPERIMENTS.md notes the scaling).
+FASTER_DISK_BUDGET_FRAC = 1.2
+
+
+def make_faster_kv(n_keys: int, mem_frac: float = 0.10,
+                   value_width: int = 25, batch: int = 4096,
+                   compaction: str = "lookup") -> KV:
+    cfg = make_faster_config(n_keys, mem_frac, value_width)
+    kv = KV(cfg, mode="faster", faster_compaction=compaction,
+            compact_batch=batch,
+            # trigger as a fraction of the ring is scaled so the effective
+            # disk budget is FASTER_DISK_BUDGET_FRAC * dataset
+            trigger=FASTER_DISK_BUDGET_FRAC * n_keys / cfg.hot_capacity,
+            compact_frac=0.15)
+    return kv
+
+
+def load_store(kv: KV, n_keys: int, batch: int = 4096, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    for start in range(0, n_keys, batch):
+        keys = np.arange(start, min(start + batch, n_keys), dtype=np.int32)
+        if len(keys) < batch:
+            keys = np.pad(keys, (0, batch - len(keys)), mode="edge")
+        vals = rng.integers(0, 127, (batch, kv.cfg.value_width)).astype(np.int32)
+        kv.upsert(keys, vals)
+    return kv
+
+
+@dataclasses.dataclass
+class RunResult:
+    ops: int
+    wall_s: float
+    modeled_s: float
+    read_bytes: int
+    write_bytes: int
+    read_ops: int
+    user_bytes: int
+
+    @property
+    def modeled_kops(self) -> float:
+        return self.ops / self.modeled_s / 1e3 if self.modeled_s else float("inf")
+
+    @property
+    def wall_kops(self) -> float:
+        return self.ops / self.wall_s / 1e3
+
+    @property
+    def read_amp(self) -> float:
+        return self.read_bytes / max(self.user_bytes, 1)
+
+    @property
+    def write_amp(self) -> float:
+        return self.write_bytes / max(self.user_bytes, 1)
+
+
+def run_workload(kv: KV, workload: str, zipf: Zipf, n_ops: int,
+                 batch: int = 4096, seed: int = 2, warmup_ops: int = 0,
+                 insert_base: int = 0) -> RunResult:
+    rng = np.random.default_rng(seed)
+    vw = kv.cfg.value_width
+    ins = insert_base
+    for _ in range(warmup_ops // batch):
+        keys, ops, vals, n_ins = make_ops(rng, workload, zipf, batch, vw, ins)
+        ins += n_ins
+        kv.apply(keys, ops, vals)
+    io0 = kv.io_stats()
+    t0 = time.perf_counter()
+    done = 0
+    for _ in range(max(1, n_ops // batch)):
+        keys, ops, vals, n_ins = make_ops(rng, workload, zipf, batch, vw, ins)
+        ins += n_ins
+        kv.apply(keys, ops, vals)
+        done += batch
+    import jax
+    jax.block_until_ready(kv.state.hot.tail)
+    wall = time.perf_counter() - t0
+    io1 = kv.io_stats()
+    rb = io1["read_bytes"] - io0["read_bytes"]
+    wb = io1["write_bytes"] - io0["write_bytes"]
+    ro = io1["read_ops"] - io0["read_ops"]
+    modeled = max(ro / READ_IOPS, rb / READ_BW) + wb / WRITE_BW
+    user = done * (16 + 4 * vw)
+    return RunResult(ops=done, wall_s=wall, modeled_s=modeled,
+                     read_bytes=rb, write_bytes=wb, read_ops=ro,
+                     user_bytes=user)

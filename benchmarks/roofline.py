@@ -1,0 +1,82 @@
+"""Roofline report from the dry-run artifacts (EXPERIMENTS.md SRoofline).
+
+    PYTHONPATH=src python -m benchmarks.roofline dryrun_results.json
+
+Per (arch x shape x mesh): the three terms (compute / memory / collective,
+in seconds per step per device), the dominant bottleneck, MODEL_FLOPS /
+HLO_FLOPs usefulness ratio, and a one-line 'what would move the dominant
+term' note.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+NOTES = {
+    ("collective", "train"): "cut ZeRO-3 regather: TP for attn/MLP weights "
+                             "or overlap AG with layer compute",
+    ("collective", "prefill"): "shard KV heads instead of gathering; fuse "
+                               "qkv collectives",
+    ("collective", "decode"): "batch more sequences per chip; widen "
+                              "flash-decode combine groups",
+    ("compute", "train"): "already MXU-bound: raise per-chip batch or "
+                          "accept (good place to be)",
+    ("compute", "prefill"): "MXU-bound: quantize KV / widen blocks",
+    ("compute", "decode"): "decode rarely compute-bound; check batching",
+    ("memory", "train"): "recompute less (selective remat) or fuse "
+                         "elementwise chains",
+    ("memory", "prefill"): "KV cache layout: pack head_dim for fewer "
+                           "HBM transactions",
+    ("memory", "decode"): "decode is HBM-bound by weights+KV streaming: "
+                          "quantize weights/KV to 8-bit",
+}
+
+
+def kind_of(shape: str) -> str:
+    return {"train_4k": "train", "prefill_32k": "prefill"}.get(shape, "decode")
+
+
+def fmt_row(r: Dict) -> str:
+    roof = r["roofline"]
+    t = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
+    mf = r.get("model_flops", 0.0) / r["n_devices"]
+    useful = mf / max(r["cost"]["flops_per_device"], 1.0)
+    mfu_bound = mf / 197e12 / t if t else 0.0
+    return (f"| {r['arch']} | {r['shape']} | {r['n_devices']} "
+            f"| {roof['compute_s']*1e3:9.3f} | {roof['memory_s']*1e3:9.3f} "
+            f"| {roof['collective_s']*1e3:9.3f} | {roof['dominant']:10s} "
+            f"| {useful:5.2f} | {mfu_bound*100:5.1f}% |")
+
+
+def main(path: str = "dryrun_results.json") -> None:
+    recs = json.load(open(path))
+    ok = [r for r in recs if r["status"] == "ok"]
+    print("| arch | shape | devs | compute ms | memory ms | collective ms "
+          "| dominant | useful | roofline-frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(ok, key=lambda r: (r["n_devices"], r["arch"], r["shape"])):
+        print(fmt_row(r))
+    print()
+    # bottleneck census + hillclimb candidates
+    by_dom: Dict[str, int] = {}
+    worst: List = []
+    for r in ok:
+        d = r["roofline"]["dominant"]
+        by_dom[d] = by_dom.get(d, 0) + 1
+        t = max(r["roofline"].values(), key=lambda v: v if isinstance(v, float) else 0)
+        mf = r.get("model_flops", 0.0) / r["n_devices"]
+        tt = max(r["roofline"]["compute_s"], r["roofline"]["memory_s"],
+                 r["roofline"]["collective_s"])
+        frac = mf / 197e12 / tt if tt else 0.0
+        worst.append((frac, r["arch"], r["shape"], r["n_devices"], d))
+    print("dominant-term census:", by_dom)
+    print("\nlowest roofline fraction (hillclimb candidates):")
+    for frac, a, s, n, d in sorted(worst)[:6]:
+        k = kind_of(s)
+        print(f"  {a} x {s} x {n}d: {frac*100:.1f}% ({d}) -> "
+              f"{NOTES.get((d, k), '')}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json")

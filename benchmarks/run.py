@@ -1,0 +1,117 @@
+"""Benchmark driver: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints a human-readable report plus `name,us_per_call,derived` CSV lines.
+Default sizes finish on one CPU core in minutes; --full quadruples them.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig2,fig7,fig10,fig11,fig12,fig13,fig14")
+    args = ap.parse_args()
+    scale = 2 if args.full else 1
+    n_keys = (1 << 16) * scale
+    n_ops = (1 << 15) * scale
+    only = set(args.only.split(",")) if args.only else None
+    csv = []
+
+    def section(name):
+        return only is None or name in only
+
+    t_all = time.time()
+    if section("fig10"):
+        from . import bench_throughput
+        t0 = time.time()
+        res = bench_throughput.run(n_keys=n_keys, n_ops=n_ops * 2)
+        print(bench_throughput.report(res))
+        print("table2: I/O amplification (from fig10 runs)")
+        for system in ("F2", "FASTER"):
+            for wl in ("A", "B"):
+                r = res[system][wl]
+                print(f"  {system:7s} YCSB-{wl}: read-amp {r.read_amp:6.2f}"
+                      f" write-amp {r.write_amp:5.2f}")
+        f2a = res["F2"]["A"]
+        csv.append(("fig10_f2_ycsb_a", 1e6 * f2a.wall_s / f2a.ops,
+                    f"{f2a.modeled_kops:.1f}kops"))
+        csv.append(("table2_f2_a_writeamp", 0.0, f"{f2a.write_amp:.2f}"))
+        print(f"[fig10+table2 {time.time()-t0:.0f}s]\n")
+
+    if section("fig7"):
+        from . import bench_compaction
+        t0 = time.time()
+        res = bench_compaction.run(n_keys=n_keys)
+        print(bench_compaction.report(res))
+        csv.append(("fig7_lookup_vs_scan", 0.0,
+                    f"{res['scan']['modeled_s']/max(res['lookup']['modeled_s'],1e-12):.2f}x"))
+        print(f"[fig7 {time.time()-t0:.0f}s]\n")
+
+    if section("fig2"):
+        from . import bench_deathspiral
+        t0 = time.time()
+        res = bench_deathspiral.run(n_keys=n_keys)
+        print(bench_deathspiral.report(res))
+        f = res["FASTER"]["kops_per_window"]
+        f2 = res["F2"]["kops_per_window"]
+        h = len(f) // 2
+        csv.append(("fig2_postbudget_ratio", 0.0,
+                    f"{(sum(f2[h:])/len(f2[h:]))/max(sum(f[h:])/len(f[h:]),1e-9):.2f}x"))
+        print(f"[fig2 {time.time()-t0:.0f}s]\n")
+
+    if section("fig11"):
+        from . import bench_scaling
+        t0 = time.time()
+        res = bench_scaling.run(n_keys=n_keys, n_ops=n_ops)
+        print(bench_scaling.report(res))
+        b = res["A"]
+        ks = sorted(b)
+        csv.append(("fig11_scaling", 0.0,
+                    f"{b[ks[-1]]/max(b[ks[0]],1e-9):.2f}x_B{ks[0]}to{ks[-1]}"))
+        print(f"[fig11 {time.time()-t0:.0f}s]\n")
+
+    if section("fig12"):
+        from . import bench_skew
+        t0 = time.time()
+        res = bench_skew.run(n_keys=n_keys, n_ops=n_ops)
+        print(bench_skew.report(res))
+        csv.append(("fig12_f2_a_alpha100", 0.0,
+                    f"{res['F2']['A'][100]:.1f}kops"))
+        print(f"[fig12 {time.time()-t0:.0f}s]\n")
+
+    if section("fig13"):
+        from . import bench_memory
+        t0 = time.time()
+        res = bench_memory.run(n_keys=n_keys, n_ops=n_ops)
+        print(bench_memory.report(res))
+        csv.append(("fig13_f2_b_10pct", 0.0,
+                    f"{res['F2']['B'][0.10]:.1f}kops"))
+        print(f"[fig13 {time.time()-t0:.0f}s]\n")
+
+    if section("fig14"):
+        from . import bench_sensitivity
+        t0 = time.time()
+        chunks = bench_sensitivity.run_chunks(n_keys=n_keys, n_ops=n_ops)
+        rc = bench_sensitivity.run_rc(n_keys=n_keys, n_ops=n_ops)
+        print(bench_sensitivity.report(chunks, rc))
+        wa = chunks["A"]
+        sizes = sorted(wa)
+        csv.append(("fig14_writeamp_64B_vs_4K", 0.0,
+                    f"{wa[sizes[0]][1]:.2f}->{wa[sizes[-1]][1]:.2f}"))
+        print(f"[fig14 {time.time()-t0:.0f}s]\n")
+
+    print("name,us_per_call,derived")
+    for name, us, derived in csv:
+        print(f"{name},{us:.3f},{derived}")
+    print(f"\n[benchmarks total {time.time()-t_all:.0f}s]")
+
+
+if __name__ == "__main__":
+    main()

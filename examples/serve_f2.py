@@ -1,0 +1,50 @@
+"""Serving with the F2-tiered paged KV cache: continuous batching of ragged
+requests, page demotion under hot-pool pressure, cold-read metering, and
+an exactness check against the contiguous-cache baseline.
+
+    PYTHONPATH=src python examples/serve_f2.py
+"""
+import numpy as np
+import jax
+
+from repro.models import transformer as tf
+from repro.models.registry import get_config
+from repro.serve.engine import Engine, Request
+
+
+def main():
+    cfg = get_config("granite-3-8b").reduced()
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    # equal-length prompts: check the F2-paged backend is token-exact
+    prompts = [rng.integers(1, cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(4)]
+    outs = {}
+    for backend in ("contiguous", "paged"):
+        eng = Engine(cfg, params, max_batch=2, max_len=64,
+                     backend=backend, page_size=8)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=8))
+        outs[backend] = {r.rid: r.out_tokens for r in eng.run()}
+    assert outs["contiguous"] == outs["paged"]
+    print("paged == contiguous, token-for-token:", outs["paged"][0])
+
+    # ragged continuous batching (only the paged backend supports it)
+    eng = Engine(cfg, params, max_batch=2, max_len=96, backend="paged",
+                 page_size=8)
+    for i in range(8):
+        plen = int(rng.integers(3, 20))
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(1, cfg.vocab_size,
+                                               plen).astype(np.int32),
+                           max_new_tokens=12))
+    fin = eng.run()
+    print(f"served {len(fin)} ragged requests |"
+          f" page demotions (hot->cold): {eng.pkv.demotions} |"
+          f" promotions (read-cache): {eng.pkv.promotions} |"
+          f" metered cold-page attends: {int(eng.pkv.state.cold_reads)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: F2 (tiered key-value store) reproduced and adapted as a TPU-pod
+JAX training/serving framework.  See DESIGN.md and EXPERIMENTS.md."""
+__version__ = "1.0.0"

@@ -1,0 +1,20 @@
+"""F2 core: tensorized tiered key-value store (the paper's contribution).
+
+Public API:
+    F2Config, KV (facade), plus the functional layers for power users:
+    store.{create,apply,read_batch,write_batch,read_begin,read_finish},
+    compaction.{hot_cold_step,cold_cold_step,conditional_insert_hot,...}.
+"""
+from .api import KV
+from .types import (BLOCK_BYTES, OP_DELETE, OP_NOOP, OP_READ, OP_RMW,
+                    OP_UPSERT, ST_CREATED, ST_NONE, ST_NOT_FOUND, ST_OK,
+                    F2Config, IoStats)
+from . import chain, cold_index, compaction, groups, hybrid_log, read_cache, store
+
+__all__ = [
+    "KV", "F2Config", "IoStats", "BLOCK_BYTES",
+    "OP_NOOP", "OP_READ", "OP_UPSERT", "OP_RMW", "OP_DELETE",
+    "ST_NONE", "ST_OK", "ST_NOT_FOUND", "ST_CREATED",
+    "chain", "cold_index", "compaction", "groups", "hybrid_log",
+    "read_cache", "store",
+]

@@ -1,0 +1,209 @@
+"""User-facing store facade: owns the jitted step functions, the background
+compaction policy (trigger % / compact % of the paper's S5.2 Configuration),
+and the modeled memory/I-O reporting used by the benchmarks.
+
+Two modes:
+  mode="f2"      — tiered hot/cold logs, two-level cold index, read cache,
+                   lookup-based compactions (the paper's system).
+  mode="faster"  — single HybridLog + flat index, no read cache; compaction
+                   either "scan" (FASTER's original: full-log sequential scan
+                   + O(live-set) temp table) or "lookup" (the paper's
+                   replacement used for its memory-constrained baselines).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import compaction, store
+from .types import (BLOCK_BYTES, OP_DELETE, OP_READ, OP_RMW, OP_UPSERT,
+                    F2Config)
+
+
+class KV:
+    def __init__(
+        self,
+        cfg: F2Config,
+        mode: str = "f2",
+        trigger: float = 0.8,
+        compact_frac: float = 0.1,
+        compact_batch: int = 2048,
+        faster_compaction: str = "scan",
+        donate: bool = True,
+    ):
+        assert mode in ("f2", "faster")
+        if mode == "faster":
+            assert cfg.rc_capacity >= 1  # arrays exist; admission disabled
+        self.cfg = cfg
+        self.mode = mode
+        self.trigger = trigger
+        self.compact_frac = compact_frac
+        self.compact_batch = compact_batch
+        self.faster_compaction = faster_compaction
+        self.state = store.create(cfg)
+        self.compactions = 0
+        self.temp_table_peak_bytes = 0   # scan-based memory overhead (Fig 7)
+        self.frontier_bytes = compact_batch * cfg.record_bytes  # lookup-based
+
+        dn = dict(donate_argnums=0) if donate else {}
+        admit = (mode == "f2") and cfg.rc_capacity > 1
+        self._apply = jax.jit(
+            functools.partial(store.apply, cfg, admit_rc=admit), **dn)
+        self._read = jax.jit(
+            functools.partial(store.read_batch, cfg, admit_rc=admit), **dn)
+        self._write = jax.jit(functools.partial(store.write_batch, cfg), **dn)
+        self._hc_step = jax.jit(functools.partial(
+            compaction.hot_cold_step, cfg, B=compact_batch), **dn)
+        self._cc_step = jax.jit(functools.partial(
+            compaction.cold_cold_step, cfg, B=compact_batch), **dn)
+        self._sl_step = jax.jit(functools.partial(
+            compaction.single_log_lookup_step, cfg, B=compact_batch,
+            charge_walk_io=(faster_compaction == "lookup")), **dn)
+        self._hot_trunc = jax.jit(
+            functools.partial(compaction.hot_truncate, cfg), **dn)
+        self._cold_trunc = jax.jit(
+            functools.partial(compaction.cold_truncate, cfg), **dn)
+        self._full_scan = jax.jit(
+            functools.partial(compaction.charge_full_scan, cfg), **dn)
+        from . import cold_index as _ci
+        self._chunk_gc = jax.jit(
+            lambda s: s._replace(**dict(zip(
+                ("cold_idx", "stats"),
+                _ci.compact_chunklog(s.cold_idx, cfg, s.stats)))))
+
+    # -- batched operations --------------------------------------------------
+    def apply(self, keys, ops, vals=None):
+        keys = jnp.asarray(keys, jnp.int32)
+        ops = jnp.asarray(ops, jnp.int32)
+        if vals is None:
+            vals = jnp.zeros((keys.shape[0], self.cfg.value_width), jnp.int32)
+        else:
+            vals = jnp.asarray(vals, jnp.int32)
+        self.state, status, rvals = self._apply(self.state, keys, ops, vals)
+        self.maybe_compact()
+        return status, rvals
+
+    def upsert(self, keys, vals):
+        ops = jnp.full((len(keys),), OP_UPSERT, jnp.int32)
+        return self.apply(keys, ops, vals)
+
+    def read(self, keys):
+        keys = jnp.asarray(keys, jnp.int32)
+        active = jnp.ones((keys.shape[0],), jnp.bool_)
+        self.state, status, vals = self._read(self.state, keys, active)
+        return status, vals
+
+    def rmw(self, keys, deltas):
+        ops = jnp.full((len(keys),), OP_RMW, jnp.int32)
+        return self.apply(keys, ops, deltas)
+
+    def delete(self, keys):
+        ops = jnp.full((len(keys),), OP_DELETE, jnp.int32)
+        return self.apply(keys, ops)
+
+    # -- compaction policy (paper S5.2 Configuration) ------------------------
+    def hot_fill(self) -> float:
+        s = self.state.hot
+        return float(s.tail - s.begin) / self.cfg.hot_capacity
+
+    def cold_fill(self) -> float:
+        s = self.state.cold
+        return float(s.tail - s.begin) / self.cfg.cold_capacity
+
+    def chunklog_fill(self) -> float:
+        ci = self.state.cold_idx
+        return float(ci.tail - ci.begin) / self.cfg.chunklog_capacity
+
+    def maybe_compact(self):
+        if self.mode == "faster":
+            if self.hot_fill() > self.trigger:
+                self.compact_single_log()
+            return
+        if self.hot_fill() > self.trigger:
+            self.compact_hot_cold()
+        if self.cold_fill() > self.trigger:
+            self.compact_cold_cold()
+        if self.chunklog_fill() > self.trigger:
+            self.state = self._chunk_gc(self.state)
+
+    def _region(self, log_tail, log_begin):
+        n = int(log_tail - log_begin)
+        return max(min(int(n * self.compact_frac), n), self.compact_batch)
+
+    def compact_hot_cold(self, n_records: Optional[int] = None):
+        """Copying phase over the oldest records, then truncation."""
+        begin = int(self.state.hot.begin)
+        n = n_records or self._region(int(self.state.hot.tail), begin)
+        n = min(n, int(self.state.hot.tail) - begin)
+        until = jnp.int32(begin + n)
+        for start in range(begin, begin + n, self.compact_batch):
+            self.state, _ = self._hc_step(self.state, jnp.int32(start), until)
+        self.state = self._hot_trunc(self.state, until)
+        self.compactions += 1
+
+    def compact_cold_cold(self, n_records: Optional[int] = None):
+        begin = int(self.state.cold.begin)
+        n = n_records or self._region(int(self.state.cold.tail), begin)
+        n = min(n, int(self.state.cold.tail) - begin)
+        until = jnp.int32(begin + n)
+        for start in range(begin, begin + n, self.compact_batch):
+            self.state, _ = self._cc_step(self.state, jnp.int32(start), until)
+        self.state = self._cold_trunc(self.state, until)
+        self.compactions += 1
+
+    def compact_single_log(self, n_records: Optional[int] = None):
+        begin = int(self.state.hot.begin)
+        n = n_records or self._region(int(self.state.hot.tail), begin)
+        n = min(n, int(self.state.hot.tail) - begin)
+        until = jnp.int32(begin + n)
+        live_total = 0
+        for start in range(begin, begin + n, self.compact_batch):
+            self.state, n_live = self._sl_step(self.state, jnp.int32(start),
+                                               until)
+            live_total += int(n_live)
+        if self.faster_compaction == "scan":
+            # full-log sequential liveness scan + temp hash table memory
+            self.state = self._full_scan(self.state)
+            self.temp_table_peak_bytes = max(
+                self.temp_table_peak_bytes,
+                live_total * (self.cfg.record_bytes + 16))
+        self.state = self._hot_trunc(self.state, until)
+        self.compactions += 1
+
+    # -- reporting ------------------------------------------------------------
+    def io_stats(self) -> dict:
+        s = self.state.stats
+        return dict(
+            read_bytes=int(s.read_blocks) * BLOCK_BYTES,
+            write_bytes=int(s.write_blocks) * BLOCK_BYTES,
+            read_ops=int(s.read_ops),
+            mem_hits=int(s.mem_hits),
+        )
+
+    def memory_model_bytes(self) -> dict:
+        """In-memory footprint of each component under the paper's geometry
+        (8 B index entries, record_bytes records, 256 B chunks)."""
+        c = self.cfg
+        out = dict(
+            hot_index=c.hot_index_size * 8,
+            hot_log_mem=c.hot_mem * c.record_bytes,
+            read_cache=(c.rc_capacity if self.mode == "f2" else 0) * c.record_bytes,
+            cold_log_mem=(c.cold_mem if self.mode == "f2" else 0) * c.record_bytes,
+            chunk_index=(c.n_chunks if self.mode == "f2" else 0) * 8,
+            chunklog_mem=(c.chunklog_mem if self.mode == "f2" else 0) * c.chunk_bytes,
+        )
+        out["total"] = sum(out.values())
+        return out
+
+    def check_invariants(self):
+        st = self.state
+        assert not bool(st.hot.overflowed), "hot log ring overflow"
+        assert not bool(st.cold.overflowed), "cold log ring overflow"
+        assert not bool(st.cold_idx.overflowed), "chunk log overwrote live chunk"
+        assert not bool(st.walk_exhausted), "hash chain exceeded chain_max"
+        assert int(st.hot.begin) <= int(st.hot.tail)
+        assert int(st.cold.begin) <= int(st.cold.tail)

@@ -1,0 +1,101 @@
+"""Bounded, vectorized hash-chain traversal.
+
+The walker follows `prev` pointers from a batch of chain heads, looking for
+the first (= most recent) record matching each lane's key.  Addresses may be
+RC-tagged (replica in the read cache) — the walker transparently resolves
+both stores and can be told to skip RC replicas (liveness checks during
+compaction must only consider *log* records, since replicas are not log
+residents).
+
+Every hop that lands on a stable-tier log address (addr < head) is charged
+one 4 KiB block read — the paper's "each chain hop on disk is one random
+I/O" cost model.  The walk is a lax.fori_loop over `chain_max` steps with
+per-lane active masks: the TPU-native replacement for pointer chasing.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import hybrid_log, read_cache
+from .types import META_INVALID, NULL_ADDR, is_rc, rc_untag
+
+
+class WalkResult(NamedTuple):
+    found: jax.Array       # bool [B] a matching, valid record was found
+    addr: jax.Array        # int32 [B] its address (RC-tagged if in the RC)
+    io_blocks: jax.Array   # int32 scalar: stable-tier blocks read
+    io_ops: jax.Array      # int32 scalar: random read ops issued
+    mem_hits: jax.Array    # int32 scalar: in-memory record touches
+    truncated: jax.Array   # bool [B] walk ended by hitting addr < lower bound
+    exhausted: jax.Array   # bool [B] chain_max hops without resolution
+
+
+def walk(
+    keys: jax.Array,        # int32 [B]
+    heads: jax.Array,       # int32 [B] chain heads (maybe RC-tagged / NULL)
+    log: hybrid_log.LogState,
+    lower: jax.Array,       # int32 [B] stop when addr < lower (search [lower, tail])
+    head_boundary: jax.Array,  # scalar: first in-memory address (I/O model)
+    active: jax.Array,      # bool [B]
+    chain_max: int,
+    rc: Optional[read_cache.RCState] = None,
+    rc_match: bool = True,  # False: skip RC replicas (liveness walks)
+) -> WalkResult:
+    B = keys.shape[0]
+
+    def body(_, carry):
+        cur, done, faddr, io_b, io_o, mem_h, trunc = carry
+        cur_is_rc = is_rc(cur)
+        log_addr = jnp.where(cur_is_rc, NULL_ADDR, cur)
+        in_range = jnp.where(cur_is_rc, cur != NULL_ADDR,
+                             (cur != NULL_ADDR) & (cur >= lower))
+        live = active & ~done & in_range
+        # newly observed truncation: lane still searching but chain dips below
+        newly_trunc = active & ~done & ~cur_is_rc & (cur != NULL_ADDR) & (cur < lower)
+        trunc = trunc | newly_trunc
+
+        # resolve record from whichever store the address names
+        k_l, _, p_l, m_l = hybrid_log.gather(log, jnp.maximum(log_addr, 0))
+        if rc is not None:
+            k_r, _, p_r, m_r = read_cache.gather(rc, rc_untag(cur))
+            k = jnp.where(cur_is_rc, k_r, k_l)
+            p = jnp.where(cur_is_rc, p_r, p_l)
+            m = jnp.where(cur_is_rc, m_r, m_l)
+        else:
+            k, p, m = k_l, p_l, m_l
+
+        valid = (m & META_INVALID) == 0
+        key_match = live & valid & (k == keys)
+        if not rc_match:
+            key_match = key_match & ~cur_is_rc
+        # I/O accounting: stable-tier log touches are random block reads
+        is_io = live & ~cur_is_rc & (cur < head_boundary)
+        io_b = io_b + jnp.sum(is_io.astype(jnp.int32))
+        io_o = io_o + jnp.sum(is_io.astype(jnp.int32))
+        mem_h = mem_h + jnp.sum((live & ~is_io).astype(jnp.int32))
+
+        faddr = jnp.where(key_match, cur, faddr)
+        done = done | key_match
+        nxt = jnp.where(live & ~key_match, p, cur)
+        nxt = jnp.where(done | ~live, cur, nxt)
+        return nxt, done, faddr, io_b, io_o, mem_h, trunc
+
+    init = (
+        heads,
+        jnp.zeros((B,), jnp.bool_),
+        jnp.full((B,), NULL_ADDR, jnp.int32),
+        jnp.int32(0), jnp.int32(0), jnp.int32(0),
+        jnp.zeros((B,), jnp.bool_),
+    )
+    cur, done, faddr, io_b, io_o, mem_h, trunc = jax.lax.fori_loop(
+        0, chain_max, body, init)
+    cur_is_rc = is_rc(cur)
+    still_in_range = jnp.where(cur_is_rc, cur != NULL_ADDR,
+                               (cur != NULL_ADDR) & (cur >= lower))
+    exhausted = active & ~done & still_in_range
+    return WalkResult(found=done & active, addr=faddr, io_blocks=io_b,
+                      io_ops=io_o, mem_hits=mem_h, truncated=trunc & ~done,
+                      exhausted=exhausted)

@@ -1,0 +1,194 @@
+"""Two-level cold-log hash index (paper S6).
+
+Level 1: an in-memory array `chunk_addr[n_chunks]` mapping chunk-id -> the
+logical address of that chunk's latest version in the *hash-chunk log*.
+Level 2: the hash-chunk log itself — a HybridLog whose records are fixed
+256 B chunks of `chunk_slots` (32) hash entries.  Chunks mostly live on the
+stable tier; a small in-memory window absorbs chunk RMWs.
+
+Entry lookup for key k:   g = hash(k) mod (n_chunks*chunk_slots)
+                          chunk_id = g / chunk_slots, offset = g % chunk_slots
+Reading an entry = 1 chunk read (one 4 KiB block I/O when stable-resident).
+Modifying entries = chunk RMW: in-place scatter when the chunk version sits
+in the chunk log's mutable window, else read-modify-append of a new chunk
+version (the log-structured trick that keeps write-amp low for sub-block
+chunks, paper S6.1).  Batched updates to the same chunk coalesce into one
+new version — the tensorized analogue of tail-region update absorption.
+
+Stale chunk versions are garbage; `compact_chunklog` relocates live chunks
+(those still referenced by level 1) — liveness is a single O(1) lookup, the
+same lookup-based idea as record compaction.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import groups
+from .types import NULL_ADDR, F2Config, IoStats, hash32, records_to_blocks
+
+
+class ColdIndexState(NamedTuple):
+    chunk_addr: jax.Array   # int32 [n_chunks] -> chunk-log logical addr
+    chunks: jax.Array       # int32 [chunklog_capacity, chunk_slots]
+    chunk_ids: jax.Array    # int32 [chunklog_capacity] owner chunk id per slot
+    tail: jax.Array         # int32 scalar
+    begin: jax.Array        # int32 scalar
+    flushed_upto: jax.Array # int32 scalar
+    overflowed: jax.Array   # bool: a live chunk was overwritten (bug guard)
+
+
+def create(cfg: F2Config) -> ColdIndexState:
+    return ColdIndexState(
+        chunk_addr=jnp.full((cfg.n_chunks,), NULL_ADDR, jnp.int32),
+        chunks=jnp.full((cfg.chunklog_capacity, cfg.chunk_slots), NULL_ADDR, jnp.int32),
+        chunk_ids=jnp.full((cfg.chunklog_capacity,), -1, jnp.int32),
+        tail=jnp.int32(0),
+        begin=jnp.int32(0),
+        flushed_upto=jnp.int32(0),
+        overflowed=jnp.bool_(False),
+    )
+
+
+def _mem_head(ci: ColdIndexState, cfg: F2Config) -> jax.Array:
+    return jnp.maximum(ci.begin, ci.tail - jnp.int32(cfg.chunklog_mem))
+
+
+def slot_coords(cfg: F2Config, keys: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(global_slot, chunk_id, offset) for each key."""
+    g = (hash32(keys) & jnp.uint32(cfg.cold_index_slots - 1)).astype(jnp.int32)
+    return g, g // jnp.int32(cfg.chunk_slots), g % jnp.int32(cfg.chunk_slots)
+
+
+def find_entries(
+    ci: ColdIndexState, cfg: F2Config, keys: jax.Array, active: jax.Array,
+    stats: IoStats,
+) -> Tuple[jax.Array, IoStats]:
+    """Cold-chain heads for keys; charges one chunk I/O per active lookup
+    whose chunk version is stable-resident (paper: 'retrieving the hash
+    chain from the cold-log index' is the first of the two cold I/Os)."""
+    _, cid, off = slot_coords(cfg, keys)
+    caddr = ci.chunk_addr[cid]
+    present = active & (caddr != NULL_ADDR)
+    phys = jnp.maximum(caddr, 0) & jnp.int32(cfg.chunklog_capacity - 1)
+    entry = ci.chunks[phys, off]
+    entry = jnp.where(present, entry, NULL_ADDR)
+    is_io = present & (caddr < _mem_head(ci, cfg))
+    n = jnp.sum(is_io.astype(jnp.int32))
+    stats = stats.add_reads(n, n)
+    stats = stats.add_mem_hits(jnp.sum((present & ~is_io).astype(jnp.int32)))
+    return entry, stats
+
+
+def update_entries(
+    ci: ColdIndexState, cfg: F2Config,
+    mask: jax.Array,        # bool [B] lanes writing their entry (last per slot)
+    keys: jax.Array,        # int32 [B]
+    new_addrs: jax.Array,   # int32 [B] cold-log addresses to publish
+    stats: IoStats,
+    charge_rmw_read: bool = True,  # False when the caller already charged it
+) -> Tuple[ColdIndexState, IoStats]:
+    """Batched chunk RMW.  Lanes updating the same chunk coalesce into one
+    new chunk version; chunks currently in the mutable window are updated in
+    place (no new version)."""
+    cap = cfg.chunklog_capacity
+    _, cid, off = slot_coords(cfg, keys)
+    info = groups.group_info(mask, cid)
+    is_rep = mask & info.is_first                 # one representative per chunk
+    cur = ci.chunk_addr[cid]
+    mem_head = _mem_head(ci, cfg)
+    in_place = (cur != NULL_ADDR) & (cur >= mem_head)
+
+    # --- representatives of non-in-place chunks append a new version --------
+    appends = is_rep & ~in_place
+    a32 = appends.astype(jnp.int32)
+    offs = jnp.cumsum(a32) - a32
+    new_caddr = jnp.where(appends, ci.tail + offs, NULL_ADDR)
+    n_app = jnp.sum(a32)
+
+    # charge a read for RMW-ing a stable-resident existing chunk
+    if charge_rmw_read:
+        rmw_read = appends & (cur != NULL_ADDR) & (cur < mem_head)
+        n_r = jnp.sum(rmw_read.astype(jnp.int32))
+        stats = stats.add_reads(n_r, n_r)
+
+    # copy old content (or empty) into the new physical rows
+    old_phys = jnp.maximum(cur, 0) & jnp.int32(cap - 1)
+    old_content = jnp.where(((cur != NULL_ADDR) & appends)[:, None],
+                            ci.chunks[old_phys], NULL_ADDR)
+    new_phys = jnp.maximum(new_caddr, 0) & jnp.int32(cap - 1)
+    # overwriting a still-live chunk version would corrupt: flag it
+    dying_owner = ci.chunk_ids[new_phys]
+    owner_addr = ci.chunk_addr[jnp.maximum(dying_owner, 0)]
+    owner_live = ((dying_owner >= 0) & (owner_addr >= 0)
+                  & ((owner_addr & jnp.int32(cap - 1)) == new_phys)
+                  & (owner_addr < new_caddr))
+    overflow = jnp.any(appends & owner_live)
+    widx = jnp.where(appends, new_phys, jnp.int32(cap))
+    chunks = ci.chunks.at[widx].set(old_content, mode="drop")
+    chunk_ids = ci.chunk_ids.at[widx].set(cid, mode="drop")
+    chunk_addr = ci.chunk_addr.at[jnp.where(appends, cid, cfg.n_chunks)].set(
+        new_caddr, mode="drop")
+
+    # --- scatter the individual entries -------------------------------------
+    # map chunk_id -> row chosen for this batch (new version or in-place)
+    row_of_chunk = jnp.full((cfg.n_chunks,), -1, jnp.int32)
+    rep_row = jnp.where(in_place, old_phys, new_phys)
+    row_of_chunk = row_of_chunk.at[jnp.where(is_rep, cid, cfg.n_chunks)].set(
+        rep_row, mode="drop")
+    lane_row = row_of_chunk[jnp.minimum(cid, cfg.n_chunks - 1)]
+    do_write = mask & (lane_row >= 0)
+    flat = jnp.where(do_write, lane_row * jnp.int32(cfg.chunk_slots) + off,
+                     jnp.int32(cap * cfg.chunk_slots))
+    chunks = chunks.reshape(-1).at[flat].set(new_addrs, mode="drop").reshape(
+        cap, cfg.chunk_slots)
+
+    ci = ci._replace(chunks=chunks, chunk_ids=chunk_ids, chunk_addr=chunk_addr,
+                     tail=ci.tail + n_app,
+                     overflowed=ci.overflowed | overflow)
+    # implicit flush accounting for chunk versions leaving the memory window
+    h = _mem_head(ci, cfg)
+    newly = jnp.maximum(h - jnp.maximum(ci.flushed_upto, ci.begin), 0)
+    stats = stats.add_writes(records_to_blocks(newly, cfg.chunk_bytes))
+    ci = ci._replace(flushed_upto=jnp.maximum(ci.flushed_upto, h))
+    return ci, stats
+
+
+def compact_chunklog(ci: ColdIndexState, cfg: F2Config, stats: IoStats,
+                     frac: float = 0.5) -> Tuple[ColdIndexState, IoStats]:
+    """Relocate live chunks out of the oldest `frac` of the chunk log, then
+    truncate.  Liveness of a chunk version = level-1 still points at it
+    (one O(1) lookup — lookup-based compaction applied to the index itself).
+
+    Vectorized over all n_chunks level-1 entries.
+    """
+    cap = cfg.chunklog_capacity
+    until = ci.begin + jnp.maximum(
+        ((ci.tail - ci.begin).astype(jnp.float32) * frac).astype(jnp.int32), 1)
+    addr = ci.chunk_addr
+    live = (addr != NULL_ADDR) & (addr < until)         # needs relocation
+    l32 = live.astype(jnp.int32)
+    offs = jnp.cumsum(l32) - l32
+    n = jnp.sum(l32)
+    new_addr = jnp.where(live, ci.tail + offs, addr)
+    mem_head = _mem_head(ci, cfg)
+    n_io = jnp.sum((live & (addr < mem_head)).astype(jnp.int32))
+    stats = stats.add_reads(n_io, n_io)
+
+    old_phys = jnp.maximum(addr, 0) & jnp.int32(cap - 1)
+    content = ci.chunks[old_phys]
+    new_phys = jnp.maximum(new_addr, 0) & jnp.int32(cap - 1)
+    widx = jnp.where(live, new_phys, jnp.int32(cap))
+    cids = jnp.arange(cfg.n_chunks, dtype=jnp.int32)
+    chunks = ci.chunks.at[widx].set(content, mode="drop")
+    chunk_ids = ci.chunk_ids.at[widx].set(cids, mode="drop")
+    ci = ci._replace(chunks=chunks, chunk_ids=chunk_ids, chunk_addr=new_addr,
+                     tail=ci.tail + n, begin=until,
+                     flushed_upto=jnp.maximum(ci.flushed_upto, until))
+    h = _mem_head(ci, cfg)
+    newly = jnp.maximum(h - jnp.maximum(ci.flushed_upto, ci.begin), 0)
+    stats = stats.add_writes(records_to_blocks(newly, cfg.chunk_bytes))
+    ci = ci._replace(flushed_upto=jnp.maximum(ci.flushed_upto, h))
+    return ci, stats

@@ -1,0 +1,277 @@
+"""ConditionalInsert + lookup-based compaction (paper S5.1-S5.2), and the
+scan-based FASTER baseline the paper compares against.
+
+ConditionalInsert(R, START): append R to the target log iff no record with a
+matching key exists in (START, TAIL] of the source log.  Tensorized: the
+liveness probe is a bounded chain walk from the *current* index head with
+lower bound START+1; abort on the first match that is not R itself.  Because
+a whole compaction frontier is processed in one traced call, the paper's
+CAS-failure/restart loop collapses into deterministic intra-batch chaining
+(DESIGN.md S2); the abort rule — "exactly one copy per key wins, and it is
+the one at the highest address" — is enforced by construction (the walk from
+the head reaches the newest candidate first).
+
+Compaction = copying phase (ConditionalInsert every record of the frontier)
++ truncation phase (advance BEGIN, then invalidate index entries below it).
+The frontier is a fixed-width batch, the analogue of the paper's in-memory
+frame buffer: memory overhead is O(B), not O(live set) — the paper's 25x
+memory headline vs scan-based compaction.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import chain, cold_index, groups, hybrid_log, read_cache
+from .store import F2State, hot_slots, _merge_walk_io
+from .types import (META_INVALID, META_TOMBSTONE, NULL_ADDR, F2Config,
+                    IoStats, records_to_blocks)
+
+
+def _frontier(log: hybrid_log.LogState, start: jax.Array, until: jax.Array,
+              B: int):
+    """Gather B records at [start, start+B), masked to < until and valid."""
+    addrs = start + jnp.arange(B, dtype=jnp.int32)
+    m = (addrs < until) & (addrs < log.tail) & (addrs >= log.begin)
+    k, v, p, meta = hybrid_log.gather(log, addrs)
+    m = m & ((meta & META_INVALID) == 0)
+    return addrs, m, k, v, meta
+
+
+def _charge_sequential_read(stats: IoStats, n_records: jax.Array,
+                            record_bytes: int) -> IoStats:
+    """The frontier scan itself: sequential stable-tier page reads
+    (one I/O op per 32 KiB read-ahead page)."""
+    blocks = records_to_blocks(n_records, record_bytes)
+    return stats.add_reads(blocks, (blocks + jnp.int32(7)) // jnp.int32(8))
+
+
+# ---------------------------------------------------------------------------
+# ConditionalInsert as a standalone primitive (paper S5.1)
+# ---------------------------------------------------------------------------
+
+def conditional_insert_hot(
+    cfg: F2Config, state: F2State, mask: jax.Array, keys: jax.Array,
+    vals: jax.Array, start_addrs: jax.Array,
+) -> Tuple[F2State, jax.Array]:
+    """Append (key, val) to the hot-log tail iff no record with a matching
+    key exists in (start_addr, TAIL] of the hot log; returns (state, ok[B])
+    where ok=False means the insert aborted (a newer record exists)."""
+    slots = hot_slots(cfg, keys)
+    heads = state.hot_index[slots]
+    hot_head = hybrid_log.head_addr(state.hot, cfg.hot_mem)
+    res = chain.walk(keys, heads, state.hot, lower=start_addrs + 1,
+                     head_boundary=hot_head, active=mask,
+                     chain_max=cfg.chain_max, rc=state.rc, rc_match=False)
+    stats = _merge_walk_io(state.stats, res)
+    ok = mask & ~res.found
+
+    from .types import is_rc, rc_untag
+    head_is_rc = is_rc(heads)
+    _, _, rc_p, _ = read_cache.gather(state.rc, rc_untag(heads))
+    eff_prev = jnp.where(head_is_rc, rc_p, heads)
+    rc = read_cache.invalidate(state.rc, ok & head_is_rc, rc_untag(heads))
+
+    ginfo = groups.group_info(ok, slots)
+    o32 = ok.astype(jnp.int32)
+    offs = jnp.cumsum(o32) - o32
+    new_addrs = jnp.where(ok, state.hot.tail + offs, NULL_ADDR)
+    pos = jnp.arange(keys.shape[0], dtype=jnp.int32)
+    pred_addr = groups.select_at_pos(new_addrs, pos, ginfo.pred)
+    prevs = jnp.where(ginfo.pred >= 0, pred_addr, eff_prev)
+    hot, _ = hybrid_log.append(state.hot, ok, keys, vals,
+                               prevs, jnp.zeros_like(keys))
+    pidx = jnp.where(ok & ginfo.is_last, slots, jnp.int32(cfg.hot_index_size))
+    hot_index = state.hot_index.at[pidx].set(new_addrs, mode="drop")
+    hot, stats = hybrid_log.charge_flush(hot, stats, cfg.hot_mem,
+                                         cfg.record_bytes)
+    state = state._replace(
+        hot=hot, hot_index=hot_index, rc=rc, stats=stats,
+        walk_exhausted=state.walk_exhausted | jnp.any(res.exhausted))
+    return state, ok
+
+
+# ---------------------------------------------------------------------------
+# Hot -> Cold compaction (paper S5.2 "Hot-Cold Compaction")
+# ---------------------------------------------------------------------------
+
+def hot_cold_step(cfg: F2Config, state: F2State, start: jax.Array,
+                  until: jax.Array, B: int) -> Tuple[F2State, jax.Array]:
+    """Process one frontier of the hot log; live records (including live
+    tombstones, which must shadow older cold versions) are upserted into the
+    cold log.  Returns (state, n_copied)."""
+    addrs, m, k, v, meta = _frontier(state.hot, start, until, B)
+    stats = _charge_sequential_read(state.stats, jnp.sum(m.astype(jnp.int32)),
+                                    cfg.record_bytes)
+
+    # liveness: most recent *log* record for the key must be this record.
+    # Fast path (the reason lookup-based compaction does 'only the
+    # absolutely necessary disk operations', paper S5.2): if the index
+    # entry ALREADY points at this record, it is live — a pure address
+    # compare, zero I/O.  Only records whose chain head differs walk.
+    heads = state.hot_index[hot_slots(cfg, k)]
+    live_fast = m & (heads == addrs)
+    need_walk = m & ~live_fast
+    hot_head = hybrid_log.head_addr(state.hot, cfg.hot_mem)
+    res = chain.walk(k, heads, state.hot, lower=addrs, head_boundary=hot_head,
+                     active=need_walk, chain_max=cfg.chain_max, rc=state.rc,
+                     rc_match=False)
+    stats = _merge_walk_io(stats, res)
+    live = live_fast | (need_walk & res.found & (res.addr == addrs))
+
+    # upsert into the cold log (cold records are older by design, paper S5.2)
+    entries, stats = cold_index.find_entries(state.cold_idx, cfg, k, live,
+                                             stats)
+    g, _, _ = cold_index.slot_coords(cfg, k)
+    ginfo = groups.group_info(live, g)
+    l32 = live.astype(jnp.int32)
+    offs = jnp.cumsum(l32) - l32
+    new_addrs = jnp.where(live, state.cold.tail + offs, NULL_ADDR)
+    pos = jnp.arange(B, dtype=jnp.int32)
+    pred_addr = groups.select_at_pos(new_addrs, pos, ginfo.pred)
+    prevs = jnp.where(ginfo.pred >= 0, pred_addr, entries)
+    keep_meta = meta & META_TOMBSTONE
+    cold, new_addrs2 = hybrid_log.append(state.cold, live, k, v, prevs,
+                                         keep_meta)
+    ci, stats = cold_index.update_entries(state.cold_idx, cfg,
+                                          live & ginfo.is_last, k, new_addrs,
+                                          stats, charge_rmw_read=False)
+    cold, stats = hybrid_log.charge_flush(cold, stats, cfg.cold_mem,
+                                          cfg.record_bytes)
+    state = state._replace(
+        cold=cold, cold_idx=ci, stats=stats,
+        walk_exhausted=state.walk_exhausted | jnp.any(res.exhausted))
+    return state, jnp.sum(l32)
+
+
+def hot_truncate(cfg: F2Config, state: F2State, until: jax.Array) -> F2State:
+    """Truncation phase: advance BEGIN and invalidate hot-index entries that
+    point below it (RC-tagged heads survive — replicas remain readable)."""
+    hot = hybrid_log.truncate(state.hot, until)
+    a = state.hot_index
+    from .types import RC_FLAG
+    dangling = (a >= 0) & ((a & RC_FLAG) == 0) & (a < hot.begin)
+    idx = jnp.where(dangling, NULL_ADDR, a)
+    hot = hot._replace(flushed_upto=jnp.maximum(hot.flushed_upto, hot.begin))
+    return state._replace(hot=hot, hot_index=idx,
+                          hot_truncs=state.hot_truncs + 1)
+
+
+# ---------------------------------------------------------------------------
+# Cold -> Cold compaction (paper S5.2 "Cold-Cold Compaction")
+# ---------------------------------------------------------------------------
+
+def cold_cold_step(cfg: F2Config, state: F2State, start: jax.Array,
+                   until: jax.Array, B: int) -> Tuple[F2State, jax.Array]:
+    """ConditionalInsert live cold records to the cold tail.  Live tombstones
+    are dropped entirely (everything older dies with the truncation)."""
+    addrs, m, k, v, meta = _frontier(state.cold, start, until, B)
+    stats = _charge_sequential_read(state.stats, jnp.sum(m.astype(jnp.int32)),
+                                    cfg.record_bytes)
+
+    entries, stats = cold_index.find_entries(state.cold_idx, cfg, k, m, stats)
+    live_fast = m & (entries == addrs)               # zero-I/O address check
+    need_walk = m & ~live_fast
+    cold_head = hybrid_log.head_addr(state.cold, cfg.cold_mem)
+    res = chain.walk(k, entries, state.cold, lower=addrs,
+                     head_boundary=cold_head, active=need_walk,
+                     chain_max=cfg.chain_max, rc=None)
+    stats = _merge_walk_io(stats, res)
+    live = live_fast | (need_walk & res.found & (res.addr == addrs))
+    live = live & ((meta & META_TOMBSTONE) == 0)      # drop dead keys for good
+
+    g, _, _ = cold_index.slot_coords(cfg, k)
+    ginfo = groups.group_info(live, g)
+    l32 = live.astype(jnp.int32)
+    offs = jnp.cumsum(l32) - l32
+    new_addrs = jnp.where(live, state.cold.tail + offs, NULL_ADDR)
+    pos = jnp.arange(B, dtype=jnp.int32)
+    pred_addr = groups.select_at_pos(new_addrs, pos, ginfo.pred)
+    prevs = jnp.where(ginfo.pred >= 0, pred_addr, entries)
+    cold, _ = hybrid_log.append(state.cold, live, k, v, prevs,
+                                jnp.zeros_like(meta))
+    ci, stats = cold_index.update_entries(state.cold_idx, cfg,
+                                          live & ginfo.is_last, k, new_addrs,
+                                          stats, charge_rmw_read=False)
+    cold, stats = hybrid_log.charge_flush(cold, stats, cfg.cold_mem,
+                                          cfg.record_bytes)
+    state = state._replace(
+        cold=cold, cold_idx=ci, stats=stats,
+        walk_exhausted=state.walk_exhausted | jnp.any(res.exhausted))
+    return state, jnp.sum(l32)
+
+
+def cold_truncate(cfg: F2Config, state: F2State, until: jax.Array) -> F2State:
+    """Cold truncation; index entries below BEGIN are invalidated *lazily*
+    by the walk guard (addr < begin terminates a chain) — touching every
+    on-disk chunk eagerly would defeat the two-level index (DESIGN.md S2).
+    num_truncs (cold_truncs) increments for the S5.4 anomaly fix."""
+    cold = hybrid_log.truncate(state.cold, until)
+    cold = cold._replace(flushed_upto=jnp.maximum(cold.flushed_upto, cold.begin))
+    return state._replace(cold=cold, cold_truncs=state.cold_truncs + 1)
+
+
+# ---------------------------------------------------------------------------
+# Single-log compaction primitives (FASTER baseline + Fig 7 comparison)
+# ---------------------------------------------------------------------------
+
+def single_log_lookup_step(cfg: F2Config, state: F2State, start: jax.Array,
+                           until: jax.Array, B: int,
+                           charge_walk_io: bool = True
+                           ) -> Tuple[F2State, jax.Array]:
+    """F2's lookup-based compaction applied to a *single* log (the paper
+    swaps this into FASTER for the 3 GiB-budget experiments): live records
+    from the frontier are ConditionalInserted at the hot-log tail.
+
+    With charge_walk_io=False this doubles as FASTER's scan-based step: the
+    liveness verdict is identical, but the cost is the full-log sequential
+    scan, which the driver charges once per compaction via
+    charge_full_scan() — plus the temp-table memory the caller accounts."""
+    addrs, m, k, v, meta = _frontier(state.hot, start, until, B)
+    stats = _charge_sequential_read(state.stats, jnp.sum(m.astype(jnp.int32)),
+                                    cfg.record_bytes)
+    slots = hot_slots(cfg, k)
+    heads = state.hot_index[slots]
+    live_fast = m & (heads == addrs)                 # zero-I/O address check
+    need_walk = m & ~live_fast
+    hot_head = hybrid_log.head_addr(state.hot, cfg.hot_mem)
+    res = chain.walk(k, heads, state.hot, lower=addrs, head_boundary=hot_head,
+                     active=need_walk, chain_max=cfg.chain_max, rc=state.rc,
+                     rc_match=False)
+    if charge_walk_io:
+        stats = _merge_walk_io(stats, res)
+    live = live_fast | (need_walk & res.found & (res.addr == addrs))
+    live = live & ((meta & META_TOMBSTONE) == 0)      # single log: drop dead
+
+    ginfo = groups.group_info(live, slots)
+    l32 = live.astype(jnp.int32)
+    offs = jnp.cumsum(l32) - l32
+    new_addrs = jnp.where(live, state.hot.tail + offs, NULL_ADDR)
+    pos = jnp.arange(B, dtype=jnp.int32)
+    pred_addr = groups.select_at_pos(new_addrs, pos, ginfo.pred)
+    # skip + detach RC heads exactly like the user append path
+    from .types import is_rc, rc_untag
+    head_is_rc = is_rc(heads)
+    _, _, rc_p, _ = read_cache.gather(state.rc, rc_untag(heads))
+    eff_prev = jnp.where(head_is_rc, rc_p, heads)
+    rc = read_cache.invalidate(state.rc, live & head_is_rc, rc_untag(heads))
+    prevs = jnp.where(ginfo.pred >= 0, pred_addr, eff_prev)
+    hot, _ = hybrid_log.append(state.hot, live, k, v, prevs,
+                               jnp.zeros_like(meta))
+    pidx = jnp.where(live & ginfo.is_last, slots, jnp.int32(cfg.hot_index_size))
+    hot_index = state.hot_index.at[pidx].set(new_addrs, mode="drop")
+    hot, stats = hybrid_log.charge_flush(hot, stats, cfg.hot_mem,
+                                         cfg.record_bytes)
+    state = state._replace(
+        hot=hot, hot_index=hot_index, rc=rc, stats=stats,
+        walk_exhausted=state.walk_exhausted | jnp.any(res.exhausted))
+    return state, jnp.sum(l32)
+
+
+def charge_full_scan(cfg: F2Config, state: F2State) -> F2State:
+    """Sequential read of [until, TAIL) — scan-based liveness cost."""
+    n = jnp.maximum(state.hot.tail - state.hot.begin, 0)
+    stats = _charge_sequential_read(state.stats, n, cfg.record_bytes)
+    return state._replace(stats=stats)

@@ -1,0 +1,100 @@
+"""Deterministic intra-batch linearization helpers.
+
+In F2, N racing threads are ordered by whoever wins the CAS on a hash-index
+entry.  In the tensorized port, a batch of B operations is linearized by
+*batch position*: these helpers compute, per lane, its group structure
+(lanes sharing a hash slot or key) using one stable argsort — the batched,
+deterministic replacement for CAS retry loops (DESIGN.md S2).
+
+All helpers take a boolean `mask` (inactive lanes never group with anything)
+and int32 `gid` group ids.  They return per-lane arrays aligned with the
+original batch order.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_BIG = jnp.int32(2**30)
+
+
+class GroupInfo(NamedTuple):
+    pred: jax.Array      # int32 [B]: previous masked lane in my group, -1 if none
+    is_first: jax.Array  # bool  [B]: first masked lane of my group
+    is_last: jax.Array   # bool  [B]: last masked lane of my group
+    run_id: jax.Array    # int32 [B]: dense group index (by sorted order), -1 if unmasked
+    order: jax.Array     # int32 [B]: the stable sort permutation (masked first)
+
+
+def group_info(mask: jax.Array, gid: jax.Array) -> GroupInfo:
+    B = gid.shape[0]
+    skey = jnp.where(mask, gid, _BIG)
+    order = jnp.argsort(skey, stable=True)          # masked lanes first, grouped
+    g_s = skey[order]                               # sorted group ids
+    m_s = mask[order]
+    same_prev = jnp.concatenate([jnp.array([False]), (g_s[1:] == g_s[:-1])]) & m_s
+    same_next = jnp.concatenate([(g_s[:-1] == g_s[1:]), jnp.array([False])]) & m_s
+    pred_s = jnp.where(same_prev, jnp.roll(order, 1), -1)
+    first_s = m_s & ~same_prev
+    last_s = m_s & ~same_next
+    run_id_s = jnp.where(m_s, jnp.cumsum(first_s.astype(jnp.int32)) - 1, -1)
+    # scatter back to batch order
+    inv = jnp.argsort(order)
+    return GroupInfo(
+        pred=pred_s[inv],
+        is_first=first_s[inv],
+        is_last=last_s[inv],
+        run_id=run_id_s[inv],
+        order=order,
+    )
+
+
+def segment_reduce_last_set(
+    mask: jax.Array,       # bool [B] lane participates
+    gid: jax.Array,        # int32 [B]
+    is_set: jax.Array,     # bool [B] lane is a "set" op (upsert/delete)
+    B_segments: int,
+):
+    """Per group: batch position of the last set op (-1 if none).
+
+    Returns (run_id, last_set_pos_per_lane).
+    """
+    info = group_info(mask, gid)
+    pos = jnp.arange(gid.shape[0], dtype=jnp.int32)
+    seg = jnp.where(info.run_id >= 0, info.run_id, B_segments - 1)
+    contrib = jnp.where(mask & is_set, pos, -1)
+    last_set = jax.ops.segment_max(contrib, seg, num_segments=B_segments)
+    last_set = jnp.maximum(last_set, -1)
+    return info, jnp.where(mask, last_set[seg], -1)
+
+
+def segment_sum_where(
+    values: jax.Array,     # [B, ...] contributions
+    mask: jax.Array,       # bool [B]
+    run_id: jax.Array,     # int32 [B] (-1 for unmasked)
+    B_segments: int,
+) -> jax.Array:
+    """Per-lane gather of its group's masked sum (shape-preserving)."""
+    seg = jnp.where(run_id >= 0, run_id, B_segments - 1)
+    m = mask
+    if values.ndim > 1:
+        mv = jnp.where(m[:, None], values, 0)
+    else:
+        mv = jnp.where(m, values, 0)
+    sums = jax.ops.segment_sum(mv, seg, num_segments=B_segments)
+    out = sums[seg]
+    if values.ndim > 1:
+        return jnp.where((run_id >= 0)[:, None], out, 0)
+    return jnp.where(run_id >= 0, out, 0)
+
+
+def select_at_pos(values: jax.Array, pos_per_lane: jax.Array, target_pos: jax.Array) -> jax.Array:
+    """Gather values[target_pos] per lane; target_pos may be -1 (returns 0s)."""
+    safe = jnp.maximum(target_pos, 0)
+    out = values[safe]
+    cond = (target_pos >= 0)
+    if values.ndim > 1:
+        return jnp.where(cond[:, None], out, 0)
+    return jnp.where(cond, out, 0)

@@ -1,0 +1,159 @@
+"""Tensorized HybridLog: an append-only record log over a ring buffer.
+
+The log owns four non-decreasing logical addresses (paper Fig 3):
+
+    begin <= head <= read_only <= tail
+
+`head` and `read_only` are *derived* from `tail` given the static in-memory
+budget (`mem`) and mutable fraction, exactly like FASTER's
+HeadOffsetLagAddress: the in-memory window trails the tail.  Flushing is
+therefore implicit — when `tail` advances, the records that fall out of the
+in-memory window are charged as sequential writes to the stable tier by the
+I/O model (they are never moved; the ring buffer *is* both tiers, with the
+boundary addresses deciding which tier a record logically occupies — on a
+real pod the stable tier maps to host memory and the accounting maps to the
+HBM<->host DMA traffic).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import META_INVALID, META_TOMBSTONE, NULL_ADDR, IoStats, records_to_blocks
+
+
+class LogState(NamedTuple):
+    key: jax.Array        # int32 [capacity]
+    val: jax.Array        # int32 [capacity, value_width]
+    prev: jax.Array       # int32 [capacity] logical addr of previous chain rec
+    meta: jax.Array       # int32 [capacity] bitfield
+    begin: jax.Array      # int32 scalar
+    tail: jax.Array       # int32 scalar
+    flushed_upto: jax.Array  # int32 scalar: stable-tier write accounting mark
+    overflowed: jax.Array    # bool scalar: live region exceeded capacity
+
+
+def create(capacity: int, value_width: int) -> LogState:
+    return LogState(
+        key=jnp.full((capacity,), -1, jnp.int32),
+        val=jnp.zeros((capacity, value_width), jnp.int32),
+        prev=jnp.full((capacity,), NULL_ADDR, jnp.int32),
+        meta=jnp.zeros((capacity,), jnp.int32),
+        begin=jnp.int32(0),
+        tail=jnp.int32(0),
+        flushed_upto=jnp.int32(0),
+        overflowed=jnp.bool_(False),
+    )
+
+
+def capacity_of(log: LogState) -> int:
+    return log.key.shape[0]
+
+
+def head_addr(log: LogState, mem: int) -> jax.Array:
+    """First in-memory address (everything below is stable tier)."""
+    return jnp.maximum(log.begin, log.tail - jnp.int32(mem))
+
+
+def read_only_addr(log: LogState, mem: int, mutable_frac: float) -> jax.Array:
+    mutable = max(1, int(mem * mutable_frac))
+    return jnp.maximum(log.begin, log.tail - jnp.int32(mutable))
+
+
+def slot_of(log: LogState, addr: jax.Array) -> jax.Array:
+    return addr & jnp.int32(capacity_of(log) - 1)
+
+
+def gather(log: LogState, addr: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Gather (key, val, prev, meta) at logical addresses (vectorized).
+
+    Callers must mask out lanes whose addr is invalid; we clamp the physical
+    index so the gather itself is always in-bounds.
+    """
+    slot = slot_of(log, jnp.maximum(addr, 0))
+    return (log.key[slot], log.val[slot], log.prev[slot], log.meta[slot])
+
+
+def append(
+    log: LogState,
+    mask: jax.Array,       # bool [B] lanes that append
+    keys: jax.Array,       # int32 [B]
+    vals: jax.Array,       # int32 [B, V]
+    prevs: jax.Array,      # int32 [B]
+    metas: jax.Array,      # int32 [B]
+) -> Tuple[LogState, jax.Array]:
+    """Append masked lanes at the tail; returns (log, new_addrs).
+
+    Slots are assigned by exclusive prefix sum over the mask — the batched
+    equivalent of FASTER's fetch-add tail allocation.  new_addrs is NULL for
+    unmasked lanes.
+    """
+    cap = capacity_of(log)
+    m32 = mask.astype(jnp.int32)
+    offs = jnp.cumsum(m32) - m32                     # exclusive prefix sum
+    n = jnp.sum(m32)
+    new_addrs = jnp.where(mask, log.tail + offs, NULL_ADDR)
+    slot = (jnp.maximum(new_addrs, 0)) & jnp.int32(cap - 1)
+    # drop-mode scatter: unmasked lanes all write slot of addr 0 — avoid by
+    # routing them to their own (harmless, overwritten-later) slot via clamp;
+    # instead scatter only masked lanes using where-select on a dummy index.
+    dummy = jnp.int32(cap)  # out-of-bounds -> dropped with mode='drop'
+    idx = jnp.where(mask, slot, dummy)
+    log = log._replace(
+        key=log.key.at[idx].set(keys, mode="drop"),
+        val=log.val.at[idx].set(vals, mode="drop"),
+        prev=log.prev.at[idx].set(prevs, mode="drop"),
+        meta=log.meta.at[idx].set(metas, mode="drop"),
+        tail=log.tail + n,
+    )
+    log = log._replace(overflowed=log.overflowed | ((log.tail - log.begin) > jnp.int32(cap)))
+    return log, new_addrs
+
+
+def charge_flush(log: LogState, stats: IoStats, mem: int, record_bytes: int) -> Tuple[LogState, IoStats]:
+    """Charge sequential stable-tier writes for records that left the
+    in-memory window since the last call (implicit flushing)."""
+    h = head_addr(log, mem)
+    newly = jnp.maximum(h - jnp.maximum(log.flushed_upto, log.begin), 0)
+    stats = stats.add_writes(records_to_blocks(newly, record_bytes))
+    return log._replace(flushed_upto=jnp.maximum(log.flushed_upto, h)), stats
+
+
+def update_in_place(
+    log: LogState,
+    mask: jax.Array,   # bool [B]
+    addrs: jax.Array,  # int32 [B] logical addresses inside the mutable region
+    vals: jax.Array,   # int32 [B, V]
+    metas: jax.Array,  # int32 [B]
+) -> LogState:
+    cap = capacity_of(log)
+    slot = (jnp.maximum(addrs, 0)) & jnp.int32(cap - 1)
+    idx = jnp.where(mask, slot, jnp.int32(cap))
+    return log._replace(
+        val=log.val.at[idx].set(vals, mode="drop"),
+        meta=log.meta.at[idx].set(metas, mode="drop"),
+    )
+
+
+def invalidate(log: LogState, mask: jax.Array, addrs: jax.Array) -> LogState:
+    """Set the INVALID bit on masked records (e.g. failed CAS cleanup)."""
+    cap = capacity_of(log)
+    slot = (jnp.maximum(addrs, 0)) & jnp.int32(cap - 1)
+    idx = jnp.where(mask, slot, jnp.int32(cap))
+    new_meta = log.meta[slot] | META_INVALID
+    return log._replace(meta=log.meta.at[idx].set(new_meta, mode="drop"))
+
+
+def set_tombstone_in_place(log: LogState, mask: jax.Array, addrs: jax.Array) -> LogState:
+    cap = capacity_of(log)
+    slot = (jnp.maximum(addrs, 0)) & jnp.int32(cap - 1)
+    idx = jnp.where(mask, slot, jnp.int32(cap))
+    new_meta = log.meta[slot] | META_TOMBSTONE
+    return log._replace(meta=log.meta.at[idx].set(new_meta, mode="drop"))
+
+
+def truncate(log: LogState, new_begin: jax.Array) -> LogState:
+    """Advance BEGIN (the destructive phase of compaction)."""
+    return log._replace(begin=jnp.maximum(log.begin, new_begin))

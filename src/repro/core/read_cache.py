@@ -1,0 +1,120 @@
+"""Second-chance FIFO read cache (paper S7).
+
+An in-memory record ring.  Records are *replicas* of stable-tier records in
+the hot or cold log; the hot hash index may point at an RC record (tagged
+with RC_FLAG), whose `prev` field continues the chain into the hot log.
+Invariants (paper S7.1/7.2):
+
+  * at most one RC record per hash chain, and it is always the chain head;
+  * an RC record always replicates the most recent value of its key;
+  * hot-log records never point into the RC (appends skip + detach RC heads).
+
+Eviction is the ring overwrite itself (exact FIFO): before a slot is reused,
+any index entry still pointing at the dying logical address is swung back to
+the record's `prev` (the underlying log address) — the batched analogue of
+the paper's latch-free chain repair.  Second chance = a hit in the RC
+read-only region is re-inserted at the tail.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import groups
+from .types import META_INVALID, NULL_ADDR, hash32, rc_tag
+
+
+class RCState(NamedTuple):
+    key: jax.Array    # int32 [R]
+    val: jax.Array    # int32 [R, V]
+    prev: jax.Array   # int32 [R] underlying *hot-log* chain continuation
+    meta: jax.Array   # int32 [R]
+    tail: jax.Array   # int32 scalar (logical)
+
+
+def create(capacity: int, value_width: int) -> RCState:
+    c = max(capacity, 1)
+    return RCState(
+        key=jnp.full((c,), -1, jnp.int32),
+        val=jnp.zeros((c, value_width), jnp.int32),
+        prev=jnp.full((c,), NULL_ADDR, jnp.int32),
+        meta=jnp.zeros((c,), jnp.int32),
+        tail=jnp.int32(0),
+    )
+
+
+def capacity_of(rc: RCState) -> int:
+    return rc.key.shape[0]
+
+
+def read_only_addr(rc: RCState, mutable_frac: float) -> jax.Array:
+    cap = capacity_of(rc)
+    mutable = max(1, int(cap * mutable_frac))
+    return jnp.maximum(rc.tail - jnp.int32(mutable), 0)
+
+
+def gather(rc: RCState, addr: jax.Array):
+    """Gather by *untagged* logical rc address."""
+    slot = jnp.maximum(addr, 0) & jnp.int32(capacity_of(rc) - 1)
+    return rc.key[slot], rc.val[slot], rc.prev[slot], rc.meta[slot]
+
+
+def invalidate(rc: RCState, mask: jax.Array, addr: jax.Array) -> RCState:
+    cap = capacity_of(rc)
+    slot = jnp.maximum(addr, 0) & jnp.int32(cap - 1)
+    idx = jnp.where(mask, slot, jnp.int32(cap))
+    new_meta = rc.meta[slot] | META_INVALID
+    return rc._replace(meta=rc.meta.at[idx].set(new_meta, mode="drop"))
+
+
+def insert(
+    rc: RCState,
+    index_addr: jax.Array,   # int32 [E] hot index (entries may be RC-tagged)
+    mask: jax.Array,         # bool [B] lanes inserting
+    keys: jax.Array,         # int32 [B]
+    vals: jax.Array,         # int32 [B, V]
+    prevs: jax.Array,        # int32 [B] hot-log chain continuation (non-RC)
+) -> Tuple[RCState, jax.Array, jax.Array]:
+    """Batched RC insert with ring-overwrite eviction repair.
+
+    Deduplicates to one insert per hash slot (the one-RC-per-chain rule);
+    returns (rc, index_addr, new_rc_addrs_tagged).
+    """
+    E = index_addr.shape[0]
+    cap = capacity_of(rc)
+    slots = (hash32(keys) & jnp.uint32(E - 1)).astype(jnp.int32)
+    info = groups.group_info(mask, slots)
+    mask = mask & info.is_first            # one RC record per chain
+    m32 = mask.astype(jnp.int32)
+    offs = jnp.cumsum(m32) - m32
+    new_addr = jnp.where(mask, rc.tail + offs, NULL_ADDR)
+    phys = jnp.maximum(new_addr, 0) & jnp.int32(cap - 1)
+
+    # --- eviction repair for the logical addresses being overwritten -------
+    dying = new_addr - jnp.int32(cap)                    # logical addr dying at phys
+    repair = mask & (dying >= 0)
+    old_key = rc.key[phys]
+    old_prev = rc.prev[phys]
+    old_islot = (hash32(old_key) & jnp.uint32(E - 1)).astype(jnp.int32)
+    points_here = index_addr[old_islot] == rc_tag(dying)
+    do_repair = repair & points_here
+    ridx = jnp.where(do_repair, old_islot, jnp.int32(E))
+    index_addr = index_addr.at[ridx].set(old_prev, mode="drop")
+
+    # --- write the replicas -------------------------------------------------
+    widx = jnp.where(mask, phys, jnp.int32(cap))
+    rc = rc._replace(
+        key=rc.key.at[widx].set(keys, mode="drop"),
+        val=rc.val.at[widx].set(vals, mode="drop"),
+        prev=rc.prev.at[widx].set(prevs, mode="drop"),
+        meta=rc.meta.at[widx].set(jnp.zeros_like(keys), mode="drop"),
+        tail=rc.tail + jnp.sum(m32),
+    )
+
+    # --- publish as chain heads ---------------------------------------------
+    pidx = jnp.where(mask, slots, jnp.int32(E))
+    index_addr = index_addr.at[pidx].set(rc_tag(new_addr), mode="drop")
+    tagged = jnp.where(mask, rc_tag(new_addr), NULL_ADDR)
+    return rc, index_addr, tagged

@@ -1,0 +1,343 @@
+"""F2Store: the tiered, tensorized key-value store (paper S4-S7).
+
+All operations are *batched*: a call takes B lanes of (op, key, value) and
+returns (new_state, statuses, values).  Linearization of an `apply` batch
+(DESIGN.md S2): all Reads observe the pre-batch snapshot, then writes apply
+in batch-position order; per-key write order is resolved with segment
+reductions — the deterministic replacement for CAS winner order.
+
+State is a pure pytree, so `jax.jit(..., donate_argnums=0)` gives in-place
+buffer reuse, and the store checkpoints/reshards with the rest of the model
+state at pod scale.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import chain, cold_index, groups, hybrid_log, read_cache
+from .types import (META_INVALID, META_TOMBSTONE, NULL_ADDR, OP_DELETE,
+                    OP_NOOP, OP_READ, OP_RMW, OP_UPSERT, ST_CREATED, ST_NONE,
+                    ST_NOT_FOUND, ST_OK, F2Config, IoStats, hash32, is_rc,
+                    rc_untag, records_to_blocks)
+
+
+class F2State(NamedTuple):
+    hot: hybrid_log.LogState
+    hot_index: jax.Array          # int32 [E] chain heads (maybe RC-tagged)
+    rc: read_cache.RCState
+    cold: hybrid_log.LogState
+    cold_idx: cold_index.ColdIndexState
+    stats: IoStats
+    hot_truncs: jax.Array         # int32: hot-log truncation counter
+    cold_truncs: jax.Array        # int32: num_truncs of paper S5.4
+    walk_exhausted: jax.Array     # bool: some chain walk hit chain_max (guard)
+
+
+def create(cfg: F2Config) -> F2State:
+    return F2State(
+        hot=hybrid_log.create(cfg.hot_capacity, cfg.value_width),
+        hot_index=jnp.full((cfg.hot_index_size,), NULL_ADDR, jnp.int32),
+        rc=read_cache.create(cfg.rc_capacity, cfg.value_width),
+        cold=hybrid_log.create(cfg.cold_capacity, cfg.value_width),
+        cold_idx=cold_index.create(cfg),
+        stats=IoStats.zeros(),
+        hot_truncs=jnp.int32(0),
+        cold_truncs=jnp.int32(0),
+        walk_exhausted=jnp.bool_(False),
+    )
+
+
+def hot_slots(cfg: F2Config, keys: jax.Array) -> jax.Array:
+    return (hash32(keys) & jnp.uint32(cfg.hot_index_size - 1)).astype(jnp.int32)
+
+
+def _merge_walk_io(stats: IoStats, res: chain.WalkResult) -> IoStats:
+    stats = stats.add_reads(res.io_blocks, res.io_ops)
+    return stats.add_mem_hits(res.mem_hits)
+
+
+# ---------------------------------------------------------------------------
+# Read path (paper S5.3 Read + S7.2 with read cache)
+# ---------------------------------------------------------------------------
+
+def read_batch(
+    cfg: F2Config, state: F2State, keys: jax.Array, active: jax.Array,
+    admit_rc: bool = True,
+) -> Tuple[F2State, jax.Array, jax.Array]:
+    """Returns (state, status[B], values[B, V])."""
+    B = keys.shape[0]
+    slots = hot_slots(cfg, keys)
+    heads = state.hot_index[slots]
+    hot_head = hybrid_log.head_addr(state.hot, cfg.hot_mem)
+    lower = jnp.broadcast_to(state.hot.begin, (B,))
+
+    res_h = chain.walk(keys, heads, state.hot, lower, hot_head, active,
+                       cfg.chain_max, rc=state.rc, rc_match=True)
+    stats = _merge_walk_io(state.stats, res_h)
+
+    hit_rc = res_h.found & is_rc(res_h.addr)
+    hit_log = res_h.found & ~is_rc(res_h.addr)
+    _, v_log, _, m_log = hybrid_log.gather(state.hot, jnp.where(hit_log, res_h.addr, 0))
+    _, v_rc, p_rc, _ = read_cache.gather(state.rc, rc_untag(res_h.addr))
+    tomb_hot = hit_log & ((m_log & META_TOMBSTONE) != 0)
+    ok_hot = hit_rc | (hit_log & ~tomb_hot)
+
+    # --- cold phase for hot misses (tombstones terminate the search) --------
+    cold_active = active & ~res_h.found
+    entries, stats = cold_index.find_entries(state.cold_idx, cfg, keys,
+                                             cold_active, stats)
+    cold_head = hybrid_log.head_addr(state.cold, cfg.cold_mem)
+    lower_c = jnp.broadcast_to(state.cold.begin, (B,))
+    res_c = chain.walk(keys, entries, state.cold, lower_c, cold_head,
+                       cold_active, cfg.chain_max, rc=None)
+    stats = _merge_walk_io(stats, res_c)
+    _, v_cold, _, m_cold = hybrid_log.gather(state.cold, jnp.where(res_c.found, res_c.addr, 0))
+    tomb_cold = res_c.found & ((m_cold & META_TOMBSTONE) != 0)
+    ok_cold = res_c.found & ~tomb_cold
+
+    vals = jnp.where(hit_rc[:, None], v_rc,
+                     jnp.where(ok_hot[:, None], v_log,
+                               jnp.where(ok_cold[:, None], v_cold, 0)))
+    found = ok_hot | ok_cold
+    status = jnp.where(found, ST_OK, jnp.where(active, ST_NOT_FOUND, ST_NONE))
+
+    hot = state.hot
+    rc = state.rc
+    hot_index = state.hot_index
+    if cfg.rc_capacity and admit_rc:
+        # --- read-cache admission: stable-tier hits get replicated ----------
+        admit = ((hit_log & ~tomb_hot & (res_h.addr < hot_head)) |
+                 (ok_cold & (res_c.addr < cold_head)))
+        admit = admit & ~is_rc(heads)            # one RC record per chain
+        # --- second chance: RC hits in the read-only region re-insert -------
+        rc_ro = read_cache.read_only_addr(rc, cfg.rc_mutable_frac)
+        sc = hit_rc & (rc_untag(res_h.addr) < rc_ro)
+        rc = read_cache.invalidate(rc, sc, rc_untag(res_h.addr))
+        ins = admit | sc
+        ins_prev = jnp.where(sc, p_rc, heads)     # continuation into hot log
+        rc, hot_index, _ = read_cache.insert(rc, hot_index, ins, keys, vals,
+                                             ins_prev)
+
+    state = state._replace(
+        hot=hot, rc=rc, hot_index=hot_index, stats=stats,
+        walk_exhausted=state.walk_exhausted | jnp.any(res_h.exhausted) | jnp.any(res_c.exhausted),
+    )
+    return state, status, vals
+
+
+# ---------------------------------------------------------------------------
+# Write path: Upsert / RMW / Delete (paper S5.3, Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def write_batch(
+    cfg: F2Config, state: F2State, keys: jax.Array, ops: jax.Array,
+    vals: jax.Array,
+) -> Tuple[F2State, jax.Array]:
+    """Returns (state, status[B]).  RMW semantics: integer vector add with
+    initial value 0 (YCSB-F counter update); intra-batch RMWs to one key
+    accumulate associatively after the last Upsert/Delete, which is an exact
+    sequential linearization for add-RMWs (DESIGN.md S2)."""
+    B = keys.shape[0]
+    wmask = (ops == OP_UPSERT) | (ops == OP_RMW) | (ops == OP_DELETE)
+    is_set = (ops == OP_UPSERT) | (ops == OP_DELETE)
+    pos = jnp.arange(B, dtype=jnp.int32)
+
+    # --- per-key linearization (group by key) --------------------------------
+    info, last_set_pos = groups.segment_reduce_last_set(wmask, keys, is_set, B)
+    has_set = last_set_pos >= 0
+    set_val = groups.select_at_pos(vals, pos, last_set_pos)  # value at last set
+    set_op = groups.select_at_pos(ops, pos, last_set_pos)
+    set_is_del = has_set & (set_op == OP_DELETE)
+    rmw_after = wmask & (ops == OP_RMW) & (pos > last_set_pos)
+    rmw_sum = groups.segment_sum_where(vals, rmw_after, info.run_id, B)
+    rmw_cnt = groups.segment_sum_where(rmw_after.astype(jnp.int32),
+                                       rmw_after, info.run_id, B)
+    rep = wmask & info.is_first               # one mutating lane per key
+
+    # --- locate the most recent *log* record (skip RC replicas) --------------
+    slots = hot_slots(cfg, keys)
+    heads = state.hot_index[slots]
+    hot_head = hybrid_log.head_addr(state.hot, cfg.hot_mem)
+    ro_addr = hybrid_log.read_only_addr(state.hot, cfg.hot_mem,
+                                        cfg.hot_mutable_frac)
+    lower = jnp.broadcast_to(state.hot.begin, (B,))
+    res = chain.walk(keys, heads, state.hot, lower, hot_head, rep,
+                     cfg.chain_max, rc=state.rc, rc_match=False)
+    stats = _merge_walk_io(state.stats, res)
+    found = res.found
+    _, fval, _, fmeta = hybrid_log.gather(state.hot, jnp.where(found, res.addr, 0))
+    found_tomb = found & ((fmeta & META_TOMBSTONE) != 0)
+    found_mut = found & (res.addr >= ro_addr)
+
+    # --- base value for pure-RMW groups (Algorithm 1 L6-L10) -----------------
+    pure_rmw = rep & ~has_set & (rmw_cnt > 0)
+    base_hot = pure_rmw & found & ~found_tomb
+    need_cold = pure_rmw & ~found             # hot tombstone => absent, skip cold
+    entries, stats = cold_index.find_entries(state.cold_idx, cfg, keys,
+                                             need_cold, stats)
+    cold_head = hybrid_log.head_addr(state.cold, cfg.cold_mem)
+    lower_c = jnp.broadcast_to(state.cold.begin, (B,))
+    res_c = chain.walk(keys, entries, state.cold, lower_c, cold_head,
+                       need_cold, cfg.chain_max, rc=None)
+    stats = _merge_walk_io(stats, res_c)
+    _, cval, _, cmeta = hybrid_log.gather(state.cold, jnp.where(res_c.found, res_c.addr, 0))
+    cold_ok = res_c.found & ((cmeta & META_TOMBSTONE) == 0)
+    base = jnp.where(base_hot[:, None], fval,
+                     jnp.where((need_cold & cold_ok)[:, None], cval, 0))
+    created = pure_rmw & ~base_hot & ~(need_cold & cold_ok)
+
+    # --- final value / tombstone per representative ---------------------------
+    final_val = jnp.where(has_set[:, None] & ~set_is_del[:, None],
+                          set_val + rmw_sum,
+                          jnp.where((has_set & set_is_del & (rmw_cnt > 0))[:, None],
+                                    rmw_sum, base + rmw_sum))
+    final_tomb = has_set & set_is_del & (rmw_cnt == 0)
+
+    # --- in-place (mutable region) vs RCU append ------------------------------
+    in_place = rep & found_mut
+    new_meta = jnp.where(final_tomb, META_TOMBSTONE, 0).astype(jnp.int32)
+    hot = hybrid_log.update_in_place(state.hot, in_place, res.addr, final_val,
+                                     new_meta)
+
+    append = rep & ~in_place
+    # effective chain head: skip + detach an RC head (hot records never point
+    # into the read cache — FASTER read-cache rule)
+    head_is_rc = is_rc(heads)
+    rc_k, _, rc_p, _ = read_cache.gather(state.rc, rc_untag(heads))
+    eff_prev = jnp.where(append & head_is_rc, rc_p, heads)
+    # appends detach the RC head (chain bypasses it); in-place updates only
+    # need to invalidate a matching-key replica (it just went stale)
+    rc_inval = (append & head_is_rc) | (in_place & head_is_rc & (rc_k == keys))
+    rc = read_cache.invalidate(state.rc, rc_inval, rc_untag(heads))
+
+    # intra-batch chaining by hash slot (different keys may share a chain)
+    ginfo = groups.group_info(append, slots)
+    a32 = append.astype(jnp.int32)
+    offs = jnp.cumsum(a32) - a32
+    new_addrs = jnp.where(append, hot.tail + offs, NULL_ADDR)
+    pred_addr = groups.select_at_pos(new_addrs, pos, ginfo.pred)
+    prevs = jnp.where(ginfo.pred >= 0, pred_addr, eff_prev)
+    hot, new_addrs2 = hybrid_log.append(hot, append, keys, final_val, prevs,
+                                        new_meta)
+    # publish: last lane of each slot-run swings the index entry
+    pidx = jnp.where(append & ginfo.is_last, slots, jnp.int32(cfg.hot_index_size))
+    hot_index = state.hot_index.at[pidx].set(new_addrs, mode="drop")
+
+    hot, stats = hybrid_log.charge_flush(hot, stats, cfg.hot_mem,
+                                         cfg.record_bytes)
+
+    # --- statuses broadcast back to every lane of the group -------------------
+    rep_created = created
+    grp_created = groups.segment_sum_where(rep_created.astype(jnp.int32),
+                                           rep, info.run_id, B) > 0
+    status = jnp.where(wmask,
+                       jnp.where((ops == OP_RMW) & grp_created, ST_CREATED, ST_OK),
+                       ST_NONE)
+
+    state = state._replace(
+        hot=hot, hot_index=hot_index, rc=rc, stats=stats,
+        walk_exhausted=state.walk_exhausted | jnp.any(res.exhausted) | jnp.any(res_c.exhausted),
+    )
+    return state, status
+
+
+# ---------------------------------------------------------------------------
+# Mixed batches
+# ---------------------------------------------------------------------------
+
+def apply(
+    cfg: F2Config, state: F2State, keys: jax.Array, ops: jax.Array,
+    vals: jax.Array, admit_rc: bool = True,
+) -> Tuple[F2State, jax.Array, jax.Array]:
+    """Mixed op batch: Reads observe the pre-batch snapshot, then writes
+    apply in batch order.  Returns (state, status[B], read_vals[B, V])."""
+    state, rstatus, rvals = read_batch(cfg, state, keys,
+                                       active=(ops == OP_READ),
+                                       admit_rc=admit_rc)
+    state, wstatus = write_batch(cfg, state, keys, ops, vals)
+    status = jnp.where(ops == OP_READ, rstatus, wstatus)
+    return state, status, rvals
+
+
+# ---------------------------------------------------------------------------
+# Two-phase reads (false-absence anomaly, paper S5.4)
+# ---------------------------------------------------------------------------
+
+class ReadSnapshot(NamedTuple):
+    keys: jax.Array
+    active: jax.Array
+    hot_heads: jax.Array
+    cold_entries: jax.Array
+    cold_tail: jax.Array
+    num_truncs: jax.Array
+
+
+def read_begin(cfg: F2Config, state: F2State, keys: jax.Array,
+               active: jax.Array) -> Tuple[F2State, ReadSnapshot]:
+    """Phase 1: snapshot chain heads + (TAIL, num_truncs) per paper S5.4.
+    A concurrent compaction may truncate the cold log before phase 2."""
+    slots = hot_slots(cfg, keys)
+    entries, stats = cold_index.find_entries(state.cold_idx, cfg, keys,
+                                             active, stats=state.stats)
+    snap = ReadSnapshot(
+        keys=keys, active=active,
+        hot_heads=state.hot_index[slots],
+        cold_entries=entries,
+        cold_tail=state.cold.tail,
+        num_truncs=state.cold_truncs,
+    )
+    return state._replace(stats=stats), snap
+
+
+def read_finish(cfg: F2Config, state: F2State, snap: ReadSnapshot
+                ) -> Tuple[F2State, jax.Array, jax.Array]:
+    """Phase 2: walk from the snapshot.  If a lane misses and truncation(s)
+    occurred since phase 1, re-traverse only the newly-compacted tail
+    segment (snap.cold_tail, TAIL] from the *current* index — the paper's
+    lightweight num_truncs fix for the false-absence anomaly."""
+    B = snap.keys.shape[0]
+    keys, active = snap.keys, snap.active
+    hot_head = hybrid_log.head_addr(state.hot, cfg.hot_mem)
+    lower = jnp.broadcast_to(state.hot.begin, (B,))
+    res_h = chain.walk(keys, snap.hot_heads, state.hot, lower, hot_head,
+                       active, cfg.chain_max, rc=state.rc, rc_match=True)
+    stats = _merge_walk_io(state.stats, res_h)
+    hit_rc = res_h.found & is_rc(res_h.addr)
+    hit_log = res_h.found & ~is_rc(res_h.addr)
+    _, v_log, _, m_log = hybrid_log.gather(state.hot, jnp.where(hit_log, res_h.addr, 0))
+    _, v_rc, _, _ = read_cache.gather(state.rc, rc_untag(res_h.addr))
+    tomb_hot = hit_log & ((m_log & META_TOMBSTONE) != 0)
+    ok_hot = hit_rc | (hit_log & ~tomb_hot)
+
+    cold_active = active & ~res_h.found
+    cold_head = hybrid_log.head_addr(state.cold, cfg.cold_mem)
+    lower_c = jnp.broadcast_to(state.cold.begin, (B,))
+    res_c = chain.walk(keys, snap.cold_entries, state.cold, lower_c, cold_head,
+                       cold_active, cfg.chain_max, rc=None)
+    stats = _merge_walk_io(stats, res_c)
+
+    # --- the anomaly fix: recheck the new tail segment on miss ---------------
+    truncated_since = state.cold_truncs != snap.num_truncs
+    retry = cold_active & ~res_c.found & truncated_since
+    entries2, stats = cold_index.find_entries(state.cold_idx, cfg, keys,
+                                              retry, stats)
+    lower_retry = jnp.broadcast_to(snap.cold_tail, (B,))  # only the new part
+    res_r = chain.walk(keys, entries2, state.cold, lower_retry, cold_head,
+                       retry, cfg.chain_max, rc=None)
+    stats = _merge_walk_io(stats, res_r)
+
+    cold_found = res_c.found | res_r.found
+    cold_addr = jnp.where(res_c.found, res_c.addr, res_r.addr)
+    _, v_cold, _, m_cold = hybrid_log.gather(state.cold, jnp.where(cold_found, cold_addr, 0))
+    tomb_cold = cold_found & ((m_cold & META_TOMBSTONE) != 0)
+    ok_cold = cold_found & ~tomb_cold
+
+    vals = jnp.where(hit_rc[:, None], v_rc,
+                     jnp.where(ok_hot[:, None], v_log,
+                               jnp.where(ok_cold[:, None], v_cold, 0)))
+    found = ok_hot | ok_cold
+    status = jnp.where(found, ST_OK, jnp.where(active, ST_NOT_FOUND, ST_NONE))
+    return state._replace(stats=stats), status, vals

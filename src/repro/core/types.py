@@ -1,0 +1,166 @@
+"""Core types and constants for the tensorized F2 store.
+
+Addresses are *logical* int32 offsets into an append-only address space per
+log.  Physical storage is a ring buffer: slot = addr & (capacity - 1).  The
+address space layout of each HybridLog follows the paper (Fig 3):
+
+    BEGIN <= HEAD <= READ_ONLY <= TAIL
+
+  [BEGIN, HEAD)      -> "stable" tier   (disk in the paper; host/remote at pod
+                        scale).  Every record touch here is metered as one
+                        4 KiB block read by the I/O model.
+  [HEAD, READ_ONLY)  -> in-memory read-only region (RCU on update).
+  [READ_ONLY, TAIL)  -> in-memory mutable region (in-place updates).
+
+Read-cache addresses are tagged with bit 30 (RC_FLAG) so that a hash-chain
+head can point either into a record log or into the read cache, exactly like
+F2's spliced hash chains (paper S7.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NULL_ADDR = jnp.int32(-1)
+RC_FLAG = jnp.int32(1 << 30)  # address tag: record lives in the read cache
+
+# record meta bitfield
+META_TOMBSTONE = jnp.int32(1)
+META_INVALID = jnp.int32(2)
+
+# op codes for mixed batches
+OP_NOOP = 0
+OP_READ = 1
+OP_UPSERT = 2
+OP_RMW = 3
+OP_DELETE = 4
+
+# status codes returned per lane
+ST_NONE = 0
+ST_OK = 1
+ST_NOT_FOUND = 2
+ST_CREATED = 3  # RMW created the record from the initial value
+
+
+def hash32(x: jax.Array) -> jax.Array:
+    """murmur3-style avalanching finalizer over int32 keys -> uint32."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def is_rc(addr: jax.Array) -> jax.Array:
+    return (addr >= 0) & ((addr & RC_FLAG) != 0)
+
+
+def rc_untag(addr: jax.Array) -> jax.Array:
+    return addr & ~RC_FLAG
+
+
+def rc_tag(addr: jax.Array) -> jax.Array:
+    return addr | RC_FLAG
+
+
+class IoStats(NamedTuple):
+    """Modeled device<->stable-tier I/O, in 4 KiB blocks / ops.
+
+    This mirrors the paper's /proc/io methodology: random record (and cold
+    index chunk) reads from the stable tier are charged one block each; log
+    flushes are charged sequential bytes at block granularity.
+    """
+
+    read_blocks: jax.Array   # int32, 4 KiB random reads from stable tier
+    write_blocks: jax.Array  # int32, 4 KiB sequential writes (flushes)
+    read_ops: jax.Array      # int32, number of random read I/Os
+    mem_hits: jax.Array      # int32, record touches served from memory tiers
+
+    @staticmethod
+    def zeros() -> "IoStats":
+        # distinct buffers: donation forbids aliased leaves
+        return IoStats(jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.int32(0))
+
+    def add_reads(self, n_blocks: jax.Array, n_ops: jax.Array) -> "IoStats":
+        return self._replace(
+            read_blocks=self.read_blocks + n_blocks,
+            read_ops=self.read_ops + n_ops,
+        )
+
+    def add_writes(self, n_blocks: jax.Array) -> "IoStats":
+        return self._replace(write_blocks=self.write_blocks + n_blocks)
+
+    def add_mem_hits(self, n: jax.Array) -> "IoStats":
+        return self._replace(mem_hits=self.mem_hits + n)
+
+
+BLOCK_BYTES = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class F2Config:
+    """Static configuration of an F2 store instance.
+
+    All sizes are powers of two.  `*_capacity` / `*_mem` are record counts,
+    `value_width` is int32 words per value.  Modeled byte sizes (used only by
+    the I/O model) follow the paper's YCSB setup: 8 B keys, 8 B RecordInfo
+    header, 4*value_width B values.
+    """
+
+    # hot log
+    hot_index_size: int = 1 << 16          # chain heads (paper: hash entries)
+    hot_capacity: int = 1 << 18            # ring capacity (disk budget)
+    hot_mem: int = 1 << 16                 # in-memory region, records
+    hot_mutable_frac: float = 0.9          # fraction of mem region mutable
+    # cold log
+    cold_capacity: int = 1 << 20
+    cold_mem: int = 1 << 12                # tiny in-memory region (64 MiB eq)
+    # cold two-level index
+    n_chunks: int = 1 << 12                # in-memory chunk index entries
+    chunk_slots: int = 32                  # hash entries per chunk (256 B)
+    chunklog_capacity: int = 1 << 14       # chunk-log ring capacity (chunks)
+    chunklog_mem: int = 1 << 10            # chunk-log in-memory region
+    # read cache
+    rc_capacity: int = 1 << 14             # 0 disables the read cache
+    rc_mutable_frac: float = 0.5
+    # execution
+    value_width: int = 2                   # int32 words per value
+    chain_max: int = 24                    # bounded hash-chain walk length
+    # modeled record geometry for the I/O model (bytes)
+    key_bytes: int = 8
+    header_bytes: int = 8
+
+    @property
+    def record_bytes(self) -> int:
+        return self.key_bytes + self.header_bytes + 4 * self.value_width
+
+    @property
+    def chunk_bytes(self) -> int:
+        return 8 * self.chunk_slots
+
+    @property
+    def cold_index_slots(self) -> int:
+        return self.n_chunks * self.chunk_slots
+
+    def __post_init__(self):
+        for name in ("hot_index_size", "hot_capacity", "hot_mem",
+                     "cold_capacity", "cold_mem", "n_chunks",
+                     "chunklog_capacity", "chunklog_mem"):
+            v = getattr(self, name)
+            assert v > 0 and (v & (v - 1)) == 0, f"{name}={v} not a power of 2"
+        if self.rc_capacity:
+            assert (self.rc_capacity & (self.rc_capacity - 1)) == 0
+        assert self.hot_mem <= self.hot_capacity
+        assert self.cold_mem <= self.cold_capacity
+        assert self.chunklog_mem <= self.chunklog_capacity
+
+
+def records_to_blocks(n_records: jax.Array, record_bytes: int) -> jax.Array:
+    """Sequential-flush accounting: bytes rounded up to 4 KiB blocks."""
+    total = n_records * jnp.int32(record_bytes)
+    return (total + jnp.int32(BLOCK_BYTES - 1)) // jnp.int32(BLOCK_BYTES)

@@ -1,0 +1,105 @@
+"""Parameter partition specs: FSDP over (pod,data) + TP/EP over model.
+
+Specs are assigned by parameter path ("blocks/attn/wq" etc.); stacked-layer
+leading dims are never sharded.  The same table serves params, gradients and
+optimizer moments (ZeRO: moments inherit the param sharding, so optimizer
+state is fully sharded over the whole mesh).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from .sharding import spec_for
+
+FSDP = "fsdp"
+TP = "heads"      # any model-axis logical name works; resolved via rules
+
+# path suffix -> logical axes (excluding the stacked [L] leading dim, which
+# is added automatically for block params)
+_TABLE: Dict[str, tuple] = {
+    "embed/table": ("vocab", "fsdp"),
+    "final_norm/scale": (None,), "final_norm/bias": (None,),
+    "enc_final_norm/scale": (None,), "enc_final_norm/bias": (None,),
+    # attention (also cross/enc attention)
+    "attn/wq": ("fsdp", "heads", None),
+    "attn/wk": ("fsdp", "kv_heads", None),
+    "attn/wv": ("fsdp", "kv_heads", None),
+    "attn/wo": ("heads", None, "fsdp"),
+    "attn/q_norm": (None,), "attn/k_norm": (None,),
+    "cross/wq": ("fsdp", "heads", None),
+    "cross/wk": ("fsdp", "kv_heads", None),
+    "cross/wv": ("fsdp", "kv_heads", None),
+    "cross/wo": ("heads", None, "fsdp"),
+    # mlp
+    "mlp/wi": ("fsdp", None, "mlp"),
+    "mlp/wo": ("mlp", "fsdp"),
+    # moe
+    "moe/router": ("fsdp", None),
+    "moe/wi": ("expert", "fsdp", None, None),
+    "moe/wo": ("expert", None, "fsdp"),
+    "moe/shared_wi": ("fsdp", None, "mlp"),
+    "moe/shared_wo": ("mlp", "fsdp"),
+    # rwkv6
+    "rwkv/mu": (None, None), "rwkv/mu_c": (None, None),
+    "rwkv/wr": ("fsdp", "heads", None), "rwkv/wk": ("fsdp", "heads", None),
+    "rwkv/wv": ("fsdp", "heads", None), "rwkv/wg": ("fsdp", "heads", None),
+    "rwkv/wo": ("heads", None, "fsdp"),
+    "rwkv/w0": ("heads", None), "rwkv/u": ("heads", None),
+    "rwkv/ln_x": ("heads", None),
+    "rwkv/wA": ("fsdp", None), "rwkv/wB": (None, "heads", None),
+    "rwkv/ck": ("fsdp", "mlp"), "rwkv/cv": ("mlp", "fsdp"),
+    "rwkv/cr": ("fsdp", None),
+    # hymba ssm
+    "ssm/in_proj": ("fsdp", None, "mlp"),
+    "ssm/conv": (None, "mlp"),
+    "ssm/wdt": ("mlp",), "ssm/dt_bias": ("mlp",),
+    "ssm/wb": ("mlp", None), "ssm/wc": ("mlp", None),
+    "ssm/a_log": ("mlp", None), "ssm/dskip": ("mlp",),
+    "ssm/out_proj": ("mlp", "fsdp"),
+}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+    return "/".join(parts)
+
+
+def param_specs(params: Any, mesh: Optional[jax.sharding.Mesh] = None,
+                rules: Optional[Dict] = None):
+    """Pytree of PartitionSpecs matching `params`."""
+    def assign(path, leaf):
+        ps = _path_str(path)
+        stacked = ps.startswith(("blocks/", "enc_blocks/"))
+        suffix = "/".join(ps.split("/")[-2:])
+        logical = _TABLE.get(suffix)
+        if suffix == "mlp/wi" and leaf.ndim - (1 if stacked else 0) == 2:
+            logical = ("fsdp", "mlp")        # non-gated (gelu) MLP
+        if logical is None:
+            if ps in _TABLE:
+                logical = _TABLE[ps]
+            elif ps.endswith(("scale", "bias")):
+                logical = (None,) * (leaf.ndim - (1 if stacked else 0))
+            else:
+                raise KeyError(f"no sharding rule for param '{ps}' "
+                               f"shape={leaf.shape}")
+        if stacked:
+            logical = (None,) + tuple(logical)
+        assert len(logical) == leaf.ndim, (ps, logical, leaf.shape)
+        return spec_for(logical, rules=rules, mesh=mesh, shape=leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def shardings_for(params: Any, mesh: jax.sharding.Mesh):
+    specs = param_specs(params, mesh)
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

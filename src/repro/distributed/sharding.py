@@ -1,0 +1,180 @@
+"""Logical-axis sharding rules (MaxText-style) -> PartitionSpecs.
+
+Models annotate activations/params with *logical* axis names; the rules
+table maps them onto mesh axes.  Single-pod mesh is ("data","model");
+multi-pod prepends "pod".  The same model code lowers under either mesh (or
+none at all, for CPU smoke tests — `constrain` is a no-op without a mesh).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+# logical axis -> mesh axis (or tuple of mesh axes).
+# DEFAULT_RULES = storage layout (params, optimizer moments, caches) and the
+# serving activation layout (tensor parallel over `model`).
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),      # data parallel over pod x data
+    "fsdp": ("pod", "data"),       # ZeRO-3 parameter shards
+    "seq": None,                   # activations sequence dim
+    "cache_seq": "model",          # decode KV cache sequence dim
+    "embed": None,                 # d_model of activations
+    "heads": "model",              # attention heads (tensor parallel)
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",                # ffn hidden
+    "expert": "model",             # expert parallelism
+    "vocab": "model",              # embedding/logits vocab shard
+    "stage": "pod",                # pipeline stages (optional)
+    "ssm_state": None,
+}
+
+# Training activation layout: FSDP + sequence parallelism.  The residual
+# stream stays sharded (batch x seq) across ALL devices between layers —
+# O(L) saved-carry memory shrinks by the model-axis factor; weights are
+# ZeRO-3-gathered per layer instead (the collective roofline shows the
+# trade).  Attention/MoE still shard heads/experts where profitable.
+#
+# REPRO_TRAIN_LAYOUT selects between perf-iteration variants
+# (EXPERIMENTS.md SPerf):
+#   sp_zero3 (default) — residual seq-sharded, weights ZeRO-3 gathered
+#   sp_tp              — Megatron TP+SP: attn heads / mlp hidden over model
+# REPRO_DECODE_KV selects the decode cache layout:
+#   seq (default)      — cache sequence over model (flash-decode combine)
+#   heads              — KV heads over model (no softmax combine; falls back
+#                        to seq for archs whose kv_heads don't divide it)
+import os as _os
+
+_TRAIN_LAYOUT = _os.environ.get("REPRO_TRAIN_LAYOUT", "sp_zero3")
+_DECODE_KV = _os.environ.get("REPRO_DECODE_KV", "seq")
+
+if _TRAIN_LAYOUT == "sp_tp":
+    TRAIN_RULES: Dict[str, Axis] = dict(DEFAULT_RULES, seq="model")
+else:
+    TRAIN_RULES = dict(DEFAULT_RULES, seq="model",
+                       heads=None, kv_heads=None, mlp=None)
+SERVE_RULES: Dict[str, Axis] = dict(DEFAULT_RULES)
+if _DECODE_KV == "heads":
+    SERVE_RULES["cache_seq"] = None
+    # kv_heads already -> model in DEFAULT_RULES; fit_spec() replicates the
+    # cache for archs whose kv_heads don't divide the axis
+
+_ACTIVE_RULES: list = []
+
+
+class use_rules:
+    """Context manager selecting the activation-sharding rule set during
+    tracing (params keep DEFAULT_RULES for storage)."""
+
+    def __init__(self, rules: Dict[str, Axis]):
+        self.rules = rules
+
+    def __enter__(self):
+        _ACTIVE_RULES.append(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        _ACTIVE_RULES.pop()
+        return False
+
+
+def active_rules() -> Dict[str, Axis]:
+    return _ACTIVE_RULES[-1] if _ACTIVE_RULES else DEFAULT_RULES
+
+
+def _mesh_obj(mesh: Optional[jax.sharding.Mesh]):
+    if mesh is not None:
+        return mesh
+    m = jax.sharding.get_abstract_mesh()
+    if m is None or m.empty:
+        return None
+    return m
+
+
+def mesh_axes(mesh: Optional[jax.sharding.Mesh]) -> Tuple[str, ...]:
+    m = _mesh_obj(mesh)
+    return tuple(m.axis_names) if m is not None else ()
+
+
+def spec_for(logical: Sequence[Optional[str]],
+             rules: Optional[Dict[str, Axis]] = None,
+             mesh: Optional[jax.sharding.Mesh] = None,
+             shape: Optional[Sequence[int]] = None) -> P:
+    """Build a PartitionSpec from logical axis names.
+
+    Mesh axes that don't exist in the active mesh are dropped ('pod' on a
+    single-pod mesh), and — when `shape` is given — axes whose size does not
+    divide the dimension are dropped too (GQA kv_heads=8 on a 16-way model
+    axis replicates; batch=1 long-context stays unsharded on data).
+    """
+    rules = rules or DEFAULT_RULES
+    m = _mesh_obj(mesh)
+    avail = set(m.axis_names) if m is not None else set()
+    sizes = dict(m.shape) if m is not None else {}
+    out = []
+    used = set()
+    for i, name in enumerate(logical):
+        ax = rules.get(name) if name else None
+        if ax is None:
+            out.append(None)
+            continue
+        axs = (ax,) if isinstance(ax, str) else tuple(ax)
+        axs = tuple(a for a in axs if a in avail and a not in used)
+        if shape is not None and axs:
+            dim = shape[i]
+            kept = []
+            prod = 1
+            for a in axs:
+                sz = sizes.get(a, 1)
+                if dim % (prod * sz) == 0:
+                    kept.append(a)
+                    prod *= sz
+            axs = tuple(kept)
+        used.update(axs)
+        if not axs:
+            out.append(None)
+        elif len(axs) == 1:
+            out.append(axs[0])
+        else:
+            out.append(axs)
+    return P(*out)
+
+
+def fit_spec(spec: P, shape: Sequence[int],
+             mesh: Optional[jax.sharding.Mesh] = None) -> P:
+    """Drop mesh axes from an existing PartitionSpec where they don't divide
+    the corresponding dimension."""
+    m = _mesh_obj(mesh)
+    if m is None:
+        return P()
+    sizes = dict(m.shape)
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axs = (entry,) if isinstance(entry, str) else tuple(entry)
+        kept, prod = [], 1
+        for a in axs:
+            sz = sizes.get(a, 1)
+            if shape[i] % (prod * sz) == 0:
+                kept.append(a)
+                prod *= sz
+        out.append(None if not kept else
+                   (kept[0] if len(kept) == 1 else tuple(kept)))
+    while len(out) < len(shape):
+        out.append(None)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *logical: Optional[str],
+              rules: Optional[Dict[str, Axis]] = None) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    if not mesh_axes(None):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, spec_for(logical, rules or active_rules(), shape=x.shape))

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical paths.
+
+Each kernel package has: <name>.py (pl.pallas_call + BlockSpec tiling),
+ops.py (jit'd wrapper; interpret=True on CPU), ref.py (pure-jnp oracle).
+"""
+from . import f2_probe, flash_attention, paged_attention, rwkv6_wkv

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel for the F2 hash-index probe.
+
+The hot-log hash index is VMEM-resident by design (the paper keeps it
+entirely in DRAM; the TPU analogue of "always-in-memory, cacheline
+buckets" is VMEM tiles).  The kernel fuses, per batch tile:
+
+    mix(key) -> slot -> entry gather -> RC-flag decode -> validity mask
+
+i.e. the first hop of every chain walk, which dominates read latency for
+in-memory hits.  Grid: batch tiles x index tiles; a probe only reads the
+index tile its slot falls into (pl.when guards), so VMEM pressure stays
+(B_tile + E_tile), not E.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+RC_FLAG = 1 << 30
+
+
+def _mix(x):
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _probe_kernel(keys_ref, index_ref, addr_ref, isrc_ref, *,
+                  e_tile: int, index_size: int):
+    ei = pl.program_id(1)
+
+    @pl.when(ei == 0)
+    def _init():
+        addr_ref[...] = jnp.full_like(addr_ref, -1)
+        isrc_ref[...] = jnp.zeros_like(isrc_ref)
+
+    keys = keys_ref[...]
+    slot = (_mix(keys) & jnp.uint32(index_size - 1)).astype(jnp.int32)
+    local = slot - ei * e_tile
+    hit = (local >= 0) & (local < e_tile)
+    entry = index_ref[jnp.where(hit, local, 0)]
+    is_rc = (entry >= 0) & ((entry & RC_FLAG) != 0)
+    untagged = jnp.where(entry >= 0, entry & ~jnp.int32(RC_FLAG), entry)
+    addr_ref[...] = jnp.where(hit, untagged, addr_ref[...])
+    isrc_ref[...] = jnp.where(hit, is_rc.astype(jnp.int32), isrc_ref[...])
+
+
+def probe(keys, index_addr, *, b_tile: int = 1024, e_tile: int = 1 << 16,
+          interpret: bool = False):
+    """keys: [B] int32; index_addr: [E] int32 chain heads.
+    Returns (addr [B] int32 untagged, is_rc [B] int32)."""
+    B = keys.shape[0]
+    E = index_addr.shape[0]
+    b_tile = min(b_tile, B)
+    e_tile = min(e_tile, E)
+    assert B % b_tile == 0 and E % e_tile == 0
+    kernel = functools.partial(_probe_kernel, e_tile=e_tile, index_size=E)
+    return pl.pallas_call(
+        kernel,
+        grid=(B // b_tile, E // e_tile),
+        in_specs=[
+            pl.BlockSpec((b_tile,), lambda bi, ei: (bi,)),
+            pl.BlockSpec((e_tile,), lambda bi, ei: (ei,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b_tile,), lambda bi, ei: (bi,)),
+            pl.BlockSpec((b_tile,), lambda bi, ei: (bi,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(keys, index_addr)

@@ -1,0 +1,18 @@
+"""jit'd wrapper for the F2 index probe kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .f2_probe import probe as _kernel
+from .ref import probe_reference
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def probe(keys, index_addr, *, interpret: bool | None = None):
+    itp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    return _kernel(keys, index_addr, interpret=itp)
+
+
+probe_ref = probe_reference

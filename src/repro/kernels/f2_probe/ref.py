@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the F2 index probe."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+RC_FLAG = 1 << 30
+
+
+def probe_reference(keys, index_addr):
+    x = keys.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    slot = (x & jnp.uint32(index_addr.shape[0] - 1)).astype(jnp.int32)
+    entry = index_addr[slot]
+    is_rc = ((entry >= 0) & ((entry & RC_FLAG) != 0)).astype(jnp.int32)
+    untagged = jnp.where(entry >= 0, entry & ~jnp.int32(RC_FLAG), entry)
+    return untagged, is_rc

@@ -1,0 +1,105 @@
+"""Pallas TPU flash attention (forward): online-softmax over KV blocks.
+
+Grid: (batch*kv_head, G, num_q_blocks, num_kv_blocks) — the kv-block axis is
+the innermost (sequential on TPU), so the online-softmax stats (m, l) and
+the output accumulator live in VMEM scratch across kv iterations.  Block
+shapes are (block_q, head_dim) / (block_kv, head_dim) — MXU-aligned when
+block_* are multiples of 128 and head_dim is 128/256.
+
+Causal + sliding-window masking is applied inside the kernel from the block
+coordinates.  Validated in interpret mode against ref.mha_reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               block_q: int, block_kv: int, causal: bool, window: int,
+               scale: float, num_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                      # [bq, dh]
+    k = k_ref[0, 0]                      # [bkv, dh]
+    v = v_ref[0, 0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kv_pos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones(s.shape, jnp.bool_)
+    if causal:
+        mask &= q_pos >= kv_pos
+    if window > 0:
+        mask &= (q_pos - kv_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == num_kv - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        block_q: int = 512, block_kv: int = 512,
+                        interpret: bool = False):
+    """q: [BH, G, Tq, Dh]; k/v: [BH, 1, Tk, Dh] (BH = batch*kv_heads,
+    G = query heads per kv head).  Returns [BH, G, Tq, Dh]."""
+    BH, G, Tq, Dh = q.shape
+    _, _, Tk, _ = k.shape
+    block_q = min(block_q, Tq)
+    block_kv = min(block_kv, Tk)
+    nq = pl.cdiv(Tq, block_q)
+    nk = pl.cdiv(Tk, block_kv)
+    scale = Dh ** -0.5
+
+    kernel = functools.partial(
+        _fa_kernel, block_q=block_q, block_kv=block_kv, causal=causal,
+        window=window, scale=scale, num_kv=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, G, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, Dh),
+                         lambda b, g, qi, ki: (b, g, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, Dh),
+                         lambda b, g, qi, ki: (b, 0, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, Dh),
+                         lambda b, g, qi, ki: (b, 0, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dh),
+                               lambda b, g, qi, ki: (b, g, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, G, Tq, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

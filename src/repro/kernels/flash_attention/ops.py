@@ -1,0 +1,41 @@
+"""jit'd wrapper: model-layout adapter + interpret-mode fallback on CPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_fwd
+from .ref import mha_reference
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    interpret: bool | None = None):
+    """Model layout: q [B,Hq,T,Dh], k/v [B,Hkv,T,Dh] -> [B,Hq,T,Dh]."""
+    B, Hq, Tq, Dh = q.shape
+    _, Hkv, Tk, _ = k.shape
+    G = Hq // Hkv
+    qr = q.reshape(B * Hkv, G, Tq, Dh)
+    kr = k.reshape(B * Hkv, 1, Tk, Dh)
+    vr = v.reshape(B * Hkv, 1, Tk, Dh)
+    itp = (not _on_tpu()) if interpret is None else interpret
+    out = flash_attention_fwd(qr, kr, vr, causal=causal, window=window,
+                              interpret=itp)
+    return out.reshape(B, Hq, Tq, Dh)
+
+
+def flash_attention_reference(q, k, v, *, causal: bool = True, window: int = 0):
+    B, Hq, Tq, Dh = q.shape
+    _, Hkv, Tk, _ = k.shape
+    G = Hq // Hkv
+    out = mha_reference(q.reshape(B * Hkv, G, Tq, Dh),
+                        k.reshape(B * Hkv, 1, Tk, Dh),
+                        v.reshape(B * Hkv, 1, Tk, Dh),
+                        causal=causal, window=window)
+    return out.reshape(B, Hq, Tq, Dh)

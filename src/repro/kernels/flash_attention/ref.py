@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_reference(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: [BH, G, Tq, Dh]; k/v: [BH, 1, Tk, Dh] -> [BH, G, Tq, Dh]."""
+    BH, G, Tq, Dh = q.shape
+    Tk = k.shape[2]
+    s = jnp.einsum("bgqd,bokd->bgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (Dh ** -0.5)
+    q_pos = jnp.arange(Tq)[:, None]
+    kv_pos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= q_pos >= kv_pos
+    if window > 0:
+        mask &= (q_pos - kv_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bgqk,bokd->bgqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

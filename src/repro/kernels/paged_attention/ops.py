@@ -1,0 +1,19 @@
+"""jit'd wrapper for paged attention (+ CPU interpret fallback)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .paged_attention import paged_attention as _kernel
+from .ref import paged_attention_reference
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pool, v_pool, page_table, lengths,
+                    *, interpret: bool | None = None):
+    itp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    return _kernel(q, k_pool, v_pool, page_table, lengths, interpret=itp)
+
+
+paged_attention_ref = paged_attention_reference

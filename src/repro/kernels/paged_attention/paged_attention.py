@@ -1,0 +1,102 @@
+"""Pallas TPU paged-attention decode kernel over F2-tiered page pools.
+
+One new token attends to a KV cache stored as fixed-size pages scattered in
+a pool (the F2 log: pages are appended at the hot tail, demoted pages live
+in a cold pool — see repro.kvcache).  The page table is passed as a
+*scalar-prefetch* operand: the BlockSpec index_map reads page ids from it,
+so the kernel's DMA engine fetches exactly the pages each sequence needs —
+the TPU-native analogue of F2's hash-chain hop per record (random 4 KiB
+block reads become random page fetches from the pool).
+
+Grid: (B, Hkv, num_pages); online softmax across the page axis in VMEM
+scratch, masked by the per-sequence valid length.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _pa_kernel(page_table_ref, lens_ref,      # scalar prefetch
+               q_ref, kp_ref, vp_ref, o_ref,
+               m_scr, l_scr, acc_scr, *,
+               page_size: int, num_pages: int, scale: float):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                                # [G, Dh]
+    k = kp_ref[0, 0]                               # [page_size, Dh]
+    v = vp_ref[0, 0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # mask positions beyond the sequence's valid length
+    pos = pi * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = pos < lens_ref[b]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(pi == num_pages - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pool, v_pool, page_table, lengths, *,
+                    interpret: bool = False):
+    """q: [B, Hkv, G, Dh]; k/v_pool: [Hkv, n_pool_pages, page_size, Dh];
+    page_table: [B, max_pages] int32 (physical page per logical page);
+    lengths: [B] int32 valid KV length.  Returns [B, Hkv, G, Dh]."""
+    B, Hkv, G, Dh = q.shape
+    _, n_pool, page_size, _ = k_pool.shape
+    max_pages = page_table.shape[1]
+    scale = Dh ** -0.5
+
+    kernel = functools.partial(_pa_kernel, page_size=page_size,
+                               num_pages=max_pages, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, pi, pt, ln: (b, h, 0, 0)),
+            # the page-table indirection: block row = physical page id
+            pl.BlockSpec((1, 1, page_size, Dh),
+                         lambda b, h, pi, pt, ln: (h, pt[b, pi], 0, 0)),
+            pl.BlockSpec((1, 1, page_size, Dh),
+                         lambda b, h, pi, pt, ln: (h, pt[b, pi], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dh),
+                               lambda b, h, pi, pt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, Dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dh), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, q, k_pool, v_pool)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for paged attention decode."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_reference(q, k_pool, v_pool, page_table, lengths):
+    """Same signature as the kernel: gathers pages densely then attends."""
+    B, Hkv, G, Dh = q.shape
+    _, n_pool, page_size, _ = k_pool.shape
+    max_pages = page_table.shape[1]
+    # gather logical KV [B, Hkv, max_pages*page_size, Dh]
+    k = k_pool[:, page_table]                 # [Hkv, B, P, page, Dh]
+    v = v_pool[:, page_table]
+    k = jnp.moveaxis(k, 0, 1).reshape(B, Hkv, max_pages * page_size, Dh)
+    v = jnp.moveaxis(v, 0, 1).reshape(B, Hkv, max_pages * page_size, Dh)
+    s = jnp.einsum("bhgd,bhkd->bhgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (Dh ** -0.5)
+    pos = jnp.arange(max_pages * page_size)
+    s = jnp.where((pos[None, None, None] < lengths[:, None, None, None]),
+                  s, NEG_INF)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhgk,bhkd->bhgd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,29 @@
+"""jit'd wrapper for the WKV6 kernel (model layout adapter + CPU fallback)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .ref import wkv_reference
+from .rwkv6_wkv import wkv_forward
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv(r, k, v, w, u, *, chunk: int = 128, interpret: bool | None = None):
+    """Model layout: r,k,v,w [B,H,T,D]; u [H,D] -> [B,H,T,D]."""
+    B, H, T, D = r.shape
+    flat = lambda x: x.reshape(B * H, T, D)
+    uu = jax.numpy.broadcast_to(u[None], (B, H, D)).reshape(B * H, 1, D)
+    itp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    y = wkv_forward(flat(r), flat(k), flat(v), flat(w), uu,
+                    chunk=chunk, interpret=itp)
+    return y.reshape(B, H, T, D)
+
+
+def wkv_ref(r, k, v, w, u):
+    B, H, T, D = r.shape
+    flat = lambda x: x.reshape(B * H, T, D)
+    uu = jax.numpy.broadcast_to(u[None], (B, H, D)).reshape(B * H, 1, D)
+    return wkv_reference(flat(r), flat(k), flat(v), flat(w), uu
+                         ).reshape(B, H, T, D)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the WKV6 recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_reference(r, k, v, w, u):
+    """r,k,v,w: [BH, T, D]; u: [BH, 1, D] -> y [BH, T, D]."""
+    BH, T, D = r.shape
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                       # [BH, D]
+        kv = kt[..., :, None] * vt[..., None, :]  # [BH, D, D]
+        y = jnp.einsum("bk,bkv->bv", rt, S + u[:, 0, :, None] * kv)
+        return wt[..., :, None] * S + kv, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    S0 = jnp.zeros((BH, D, D), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype)

@@ -1,0 +1,267 @@
+"""F2-tiered paged KV cache.
+
+The serving KV cache is organized like F2's tiered record logs
+(DESIGN.md S3):
+
+  * a unified page pool per layer, split into a HOT range [0, n_hot) (HBM)
+    and a COLD range [n_hot, n_total) (host tier at pod scale);
+  * the page table maps (sequence, logical page) -> physical page — the
+    hash-index role; entries are repointed with the same publish-then-
+    invalidate discipline as the store;
+  * the decode tail page is the *mutable region*: new tokens write in
+    place; full pages become read-only;
+  * demotion (hot->cold) copies cold pages out of the hot ring — the
+    hot-cold compaction; promotion copies a re-referenced cold page back
+    into the hot ring — the read cache (second chance = a per-page
+    reference counter);
+  * touches of cold-range pages are metered (blocks read) exactly like the
+    store's I/O model — at pod scale these are HBM<->host DMAs.
+
+Page allocation/demotion decisions are control-plane (python, like vLLM's
+scheduler); the data plane (append, attend) is jit'd.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedConfig:
+    n_layers: int
+    n_kv_heads: int
+    head_dim: int
+    page_size: int = 64
+    n_hot_pages: int = 64          # HBM-resident pages (per layer-shared pool)
+    n_cold_pages: int = 192        # host-tier pages
+    max_seqs: int = 8
+    max_pages_per_seq: int = 32
+    dtype: str = "float32"
+
+    @property
+    def n_pages(self) -> int:
+        return self.n_hot_pages + self.n_cold_pages
+
+
+class PagedKVState(NamedTuple):
+    k_pool: jax.Array       # [L, Hkv, n_pages, page, Dh]
+    v_pool: jax.Array
+    page_table: jax.Array   # [max_seqs, max_pages] int32 physical, -1 empty
+    seq_lens: jax.Array     # [max_seqs] int32
+    ref_count: jax.Array    # [n_pages] int32 hotness (second chance)
+    cold_reads: jax.Array   # int32 metered cold-tier page touches
+
+
+def create(cfg: PagedConfig) -> PagedKVState:
+    dt = jnp.dtype(cfg.dtype)
+    shape = (cfg.n_layers, cfg.n_kv_heads, cfg.n_pages, cfg.page_size,
+             cfg.head_dim)
+    return PagedKVState(
+        k_pool=jnp.zeros(shape, dt),
+        v_pool=jnp.zeros(shape, dt),
+        page_table=jnp.full((cfg.max_seqs, cfg.max_pages_per_seq), -1,
+                            jnp.int32),
+        seq_lens=jnp.zeros((cfg.max_seqs,), jnp.int32),
+        ref_count=jnp.zeros((cfg.n_pages,), jnp.int32),
+        cold_reads=jnp.int32(0),
+    )
+
+
+class PageAllocator:
+    """Control-plane page management (python, outside jit)."""
+
+    def __init__(self, cfg: PagedConfig):
+        self.cfg = cfg
+        self.free_hot = list(range(cfg.n_hot_pages))
+        self.free_cold = list(range(cfg.n_hot_pages, cfg.n_pages))
+
+    def alloc_hot(self) -> Optional[int]:
+        return self.free_hot.pop(0) if self.free_hot else None
+
+    def alloc_cold(self) -> Optional[int]:
+        return self.free_cold.pop(0) if self.free_cold else None
+
+    def free(self, page: int):
+        (self.free_hot if page < self.cfg.n_hot_pages
+         else self.free_cold).append(page)
+
+    def is_hot(self, page: int) -> bool:
+        return page < self.cfg.n_hot_pages
+
+
+# ---------------------------------------------------------------------------
+# Data plane (jit'd)
+# ---------------------------------------------------------------------------
+
+def append_layer(cfg: PagedConfig, st: PagedKVState, layer: int, seq_ids,
+                 k_row, v_row) -> PagedKVState:
+    """Write one new KV row for `layer` at each sequence's current length
+    (the mutable tail page, updated in place).  k/v_row: [A, Hkv, Dh].
+    seq_lens is NOT bumped here — bump_lens() commits the token once all
+    layers have appended."""
+    lens = st.seq_lens[seq_ids]                       # [A]
+    logical = lens // cfg.page_size
+    offset = lens % cfg.page_size
+    entry = st.page_table[seq_ids, logical]
+    # sequences without an allocated tail page (inactive lanes) are dropped
+    phys = jnp.where(entry >= 0, entry, cfg.n_pages)
+    A, H, D = k_row.shape
+    hi = jnp.arange(H)[None, :]
+    k_pool = st.k_pool.at[layer, hi, phys[:, None], offset[:, None]].set(
+        k_row, mode="drop")
+    v_pool = st.v_pool.at[layer, hi, phys[:, None], offset[:, None]].set(
+        v_row, mode="drop")
+    return st._replace(k_pool=k_pool, v_pool=v_pool)
+
+
+def bump_lens(st: PagedKVState, seq_ids, mask=None) -> PagedKVState:
+    """Commit one decoded token per active sequence (+ref the tail page)."""
+    inc = jnp.ones_like(seq_ids) if mask is None else mask.astype(jnp.int32)
+    return st._replace(seq_lens=st.seq_lens.at[seq_ids].add(inc))
+
+
+def attend(cfg: PagedConfig, st: PagedKVState, layer_k, layer_v, q, seq_ids,
+           extra_len: int = 1, interpret: bool = True):
+    """Single-layer paged attention for active sequences.
+    layer_k/v: [Hkv, n_pages, page, Dh] (one layer's pool slice);
+    q: [A, Hkv, G, Dh].  extra_len=1 includes the just-appended row.
+    Returns ([A, Hkv, G, Dh], cold_touches)."""
+    from ..kernels.paged_attention.ops import paged_attention
+    table = st.page_table[seq_ids]
+    lens = st.seq_lens[seq_ids] + extra_len
+    out = paged_attention(q, layer_k, layer_v,
+                          jnp.maximum(table, 0), lens, interpret=interpret)
+    # metered cold-tier touches + read-reference counts (promotion signal)
+    n_log = (lens + cfg.page_size - 1) // cfg.page_size
+    touched = (jnp.arange(table.shape[1])[None] < n_log[:, None]) & (table >= 0)
+    cold = jnp.sum((touched & (table >= cfg.n_hot_pages)).astype(jnp.int32))
+    ref = st.ref_count.at[jnp.where(touched, table, cfg.n_pages)].add(
+        1, mode="drop")
+    st = st._replace(ref_count=ref, cold_reads=st.cold_reads + cold)
+    return out, st
+
+
+def move_page(st: PagedKVState, src: int, dst: int, seq: int, logical: int
+              ) -> PagedKVState:
+    """Copy a page between tiers and repoint the table entry (the
+    ConditionalInsert publish: copy first, swing pointer after)."""
+    k_pool = st.k_pool.at[:, :, dst].set(st.k_pool[:, :, src])
+    v_pool = st.v_pool.at[:, :, dst].set(st.v_pool[:, :, src])
+    table = st.page_table.at[seq, logical].set(dst)
+    ref = st.ref_count.at[dst].set(0)
+    return st._replace(k_pool=k_pool, v_pool=v_pool, page_table=table,
+                       ref_count=ref)
+
+
+# ---------------------------------------------------------------------------
+# Control plane: F2-style tiering policy
+# ---------------------------------------------------------------------------
+
+class PagedKV:
+    """Facade: allocator + tiering policy around the functional state."""
+
+    def __init__(self, cfg: PagedConfig):
+        self.cfg = cfg
+        self.state = create(cfg)
+        self.alloc = PageAllocator(cfg)
+        self.seq_pages = {}          # seq -> [(logical, phys)]
+        self.free_seqs = list(range(cfg.max_seqs))
+        self.demotions = 0
+        self.promotions = 0
+
+    def new_seq(self) -> int:
+        seq = self.free_seqs.pop(0)
+        self.seq_pages[seq] = []
+        return seq
+
+    def release_seq(self, seq: int):
+        for _, phys in self.seq_pages.pop(seq, []):
+            self.alloc.free(phys)
+        self.state = self.state._replace(
+            seq_lens=self.state.seq_lens.at[seq].set(0),
+            page_table=self.state.page_table.at[seq].set(-1))
+        self.free_seqs.append(seq)
+
+    def ensure_capacity(self, seq: int):
+        """Allocate the tail page if the next token crosses a boundary;
+        demote the coldest full hot page when the hot ring is exhausted
+        (hot-cold compaction)."""
+        ln = int(self.state.seq_lens[seq])
+        if ln % self.cfg.page_size != 0 or \
+                any(l == ln // self.cfg.page_size
+                    for l, _ in self.seq_pages[seq]):
+            return
+        page = self.alloc.alloc_hot()
+        if page is None:
+            self._demote_coldest()
+            page = self.alloc.alloc_hot()
+        assert page is not None, "hot pool exhausted even after demotion"
+        logical = ln // self.cfg.page_size
+        self.seq_pages[seq].append((logical, page))
+        self.state = self.state._replace(
+            page_table=self.state.page_table.at[seq, logical].set(page))
+
+    def _demote_coldest(self):
+        """Pick the lowest-ref full hot page that is not a tail page."""
+        ref = np.asarray(self.state.ref_count[:self.cfg.n_hot_pages])
+        candidates = []
+        for seq, pages in self.seq_pages.items():
+            ln = int(self.state.seq_lens[seq])
+            tail_logical = ln // self.cfg.page_size
+            for logical, phys in pages:
+                if self.alloc.is_hot(phys) and logical < tail_logical:
+                    candidates.append((ref[phys], seq, logical, phys))
+        assert candidates, "nothing demotable: hot pool too small"
+        _, seq, logical, src = min(candidates)
+        dst = self.alloc.alloc_cold()
+        assert dst is not None, "cold pool exhausted"
+        self.state = move_page(self.state, src, dst, seq, logical)
+        self.seq_pages[seq] = [(l, dst if p == src else p)
+                               for l, p in self.seq_pages[seq]]
+        self.alloc.free(src)
+        self.demotions += 1
+
+    def promote_if_hot(self, threshold: int = 4):
+        """Read-cache behavior: cold pages that keep being referenced come
+        back into the hot ring (second chance)."""
+        ref = np.asarray(self.state.ref_count)
+        for seq, pages in self.seq_pages.items():
+            for i, (logical, phys) in enumerate(pages):
+                if not self.alloc.is_hot(phys) and ref[phys] >= threshold \
+                        and self.alloc.free_hot:
+                    dst = self.alloc.alloc_hot()
+                    self.state = move_page(self.state, phys, dst, seq,
+                                           logical)
+                    self.seq_pages[seq][i] = (logical, dst)
+                    self.alloc.free(phys)
+                    self.promotions += 1
+
+    # -- data-plane wrappers ---------------------------------------------------
+    def begin_token(self, seq_ids):
+        """Ensure every active sequence has a tail page for its next row."""
+        for s in np.asarray(seq_ids):
+            self.ensure_capacity(int(s))
+
+    def append_layer(self, layer: int, seq_ids, k_row, v_row):
+        self.state = append_layer(self.cfg, self.state, layer,
+                                  jnp.asarray(seq_ids, jnp.int32),
+                                  k_row, v_row)
+
+    def end_token(self, seq_ids, mask=None):
+        sid = jnp.asarray(seq_ids, jnp.int32)
+        lens = self.state.seq_lens[sid]
+        logical = lens // self.cfg.page_size
+        phys = jnp.maximum(self.state.page_table[sid, logical], 0)
+        ref = self.state.ref_count.at[phys].add(1)
+        self.state = bump_lens(self.state._replace(ref_count=ref), sid, mask)
+
+    def attend(self, layer: int, q, seq_ids, interpret: bool = True):
+        out, self.state = attend(
+            self.cfg, self.state,
+            self.state.k_pool[layer], self.state.v_pool[layer],
+            q, jnp.asarray(seq_ids, jnp.int32), interpret=interpret)
+        return out

@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract memory / cost / collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out r.json]
+
+The XLA_FLAGS line above MUST stay the first statement: jax locks the
+device count on first init (hence also: no repro imports before it).
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ALL_SHAPES, shape_applicable
+from repro.launch import hlo_analysis, hlo_tree
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (SHAPES, cache_state_specs, input_specs,
+                                params_specs, train_state_specs)
+from repro.models.registry import ALIASES, ARCH_IDS, get_config
+from repro.optim.adamw import AdamWConfig
+from repro.serve import serve_step as ss
+from repro.train import train_step as ts
+
+
+def build_cell(arch: str, shape_name: str, mesh, ocfg=None):
+    """Returns (fn, arg_specs, in_shardings) for one dry-run cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ocfg = ocfg or AdamWConfig(state_dtype="bfloat16")
+    batch_specs, batch_pspecs = input_specs(cfg, shape, mesh)
+
+    if shape.kind == "train":
+        state_specs, state_pspecs = train_state_specs(cfg, ocfg, mesh)
+        step = ts.make_train_step(cfg, ocfg, remat=True)
+        return step, (state_specs, batch_specs), (state_pspecs, batch_pspecs)
+    if shape.kind == "prefill":
+        p_shapes, p_pspecs = params_specs(cfg, mesh, mode="serve")
+        fn = functools.partial(ss.prefill_step, cfg)
+        return fn, (p_shapes, batch_specs), (p_pspecs, batch_pspecs)
+    # decode
+    p_shapes, p_pspecs = params_specs(cfg, mesh, mode="serve")
+    c_shapes, c_pspecs = cache_state_specs(cfg, shape, mesh)
+    fn = functools.partial(ss.decode_step, cfg)
+    return (fn, (p_shapes, c_shapes, batch_specs["tokens"]),
+            (p_pspecs, c_pspecs, batch_pspecs["tokens"]))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    try:
+        with jax.set_mesh(mesh):
+            fn, arg_specs, in_shardings = build_cell(arch, shape_name, mesh)
+            lowered = jax.jit(fn, in_shardings=in_shardings).lower(*arg_specs)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            tree = hlo_tree.analyze(compiled.as_text(), n_dev)
+        summary = tree["collectives"]
+        flops = float(tree["flops_per_device"])
+        hbm = float(tree["dot_bytes_per_device"])
+        roof = hlo_analysis.roofline_terms(flops, hbm, summary, n_dev)
+        rec = {
+            "arch": arch, "shape": shape_name, "status": "ok",
+            "mesh": list(mesh.devices.shape), "n_devices": n_dev,
+            "compile_s": round(time.time() - t0, 1),
+            "memory": {
+                "argument_bytes_per_device": mem.argument_size_in_bytes,
+                "output_bytes_per_device": mem.output_size_in_bytes,
+                "temp_bytes_per_device": mem.temp_size_in_bytes,
+                "total_bytes_per_device": (mem.argument_size_in_bytes
+                                           + mem.temp_size_in_bytes),
+            },
+            "cost": {"flops_per_device": flops,
+                     "hbm_bytes_per_device": hbm,
+                     "xla_flops_raw": float(cost.get("flops", 0.0)),
+                     "xla_bytes_raw": float(cost.get("bytes accessed", 0.0))},
+            "collectives": summary,
+            "roofline": roof,
+            "model_flops": model_flops(arch, shape_name),
+        }
+        if verbose:
+            gib = rec["memory"]["total_bytes_per_device"] / 2**30
+            print(f"[{arch} x {shape_name} x {'512' if multi_pod else '256'}d]"
+                  f" OK {rec['compile_s']}s | {gib:.2f} GiB/dev |"
+                  f" {flops/1e9:.1f} GF/dev | coll"
+                  f" {summary['ici_bytes']/2**20:.1f} MiB ici"
+                  f" +{summary['dcn_bytes']/2**20:.1f} MiB dcn |"
+                  f" dominant={roof['dominant']}")
+        return rec
+    except Exception as e:  # noqa: BLE001 — dry-run reports failures
+        if verbose:
+            traceback.print_exc()
+        return {"arch": arch, "shape": shape_name, "status": "failed",
+                "error": f"{type(e).__name__}: {e}",
+                "compile_s": round(time.time() - t0, 1)}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """MODEL_FLOPS: 6*N*D train (N=active params, D=tokens); 2*N*D decode."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per lane
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None,
+                    help="shape name (default: all four)")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2x16x16 (512 chips) instead of 16x16")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="write JSON records here")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else [s.name for s in ALL_SHAPES]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    records = []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                records.append(run_cell(arch, shape, mp))
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_fail = sum(r["status"] == "failed" for r in records)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {n_fail} failed"
+          f" / {len(records)} cells")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print("wrote", args.out)
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Post-SPMD HLO analysis: collective inventory + roofline terms.
+
+cost_analysis() gives FLOPs and memory bytes but NOT collective traffic, so
+we parse the partitioned HLO text: for every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute we extract the result
+shapes and replica groups and convert to per-device link bytes with the
+standard ring formulas:
+
+    all-reduce       2 (G-1)/G * bytes
+    all-gather         (G-1)/G * bytes_out
+    reduce-scatter     (G-1)   * bytes_out        (= (G-1)/G * bytes_in)
+    all-to-all         (G-1)/G * bytes
+    collective-permute  bytes
+
+Groups whose device ids span across the 256-chip pod boundary are charged
+at DCN bandwidth instead of ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+# v5e-ish hardware model (per chip)
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9          # per link, one direction
+DCN_BW = 25e9          # cross-pod (per host aggregate, conservative)
+POD_SIZE = 256
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes_result: int
+    group_size: int
+    cross_pod: bool
+    link_bytes: float      # per-device bytes over the wire
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_info(line: str, n_devices: int) -> Tuple[int, bool]:
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",")]
+        g = len(ids)
+        cross = (max(ids) // POD_SIZE) != (min(ids) // POD_SIZE) \
+            if n_devices > POD_SIZE else False
+        return g, cross
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        import numpy as np
+        n_groups, g = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        first_group = ids.reshape(-1)[:g]
+        cross = (int(first_group.max()) // POD_SIZE
+                 != int(first_group.min()) // POD_SIZE) \
+            if n_devices > POD_SIZE else False
+        return g, cross
+    return 1, False
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        m = re.search(r"=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\][^\s]*))\s+"
+                      r"(all-reduce-start|all-reduce|all-gather-start|all-gather|"
+                      r"reduce-scatter|all-to-all|collective-permute-start|"
+                      r"collective-permute)\(", s)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        kind = kind.replace("-start", "")
+        b = _shape_bytes(type_str)
+        g, cross = _group_info(s, n_devices)
+        if kind == "all-reduce":
+            link = 2.0 * (g - 1) / max(g, 1) * b
+        elif kind == "all-gather":
+            link = (g - 1) / max(g, 1) * b
+        elif kind == "reduce-scatter":
+            link = (g - 1) * b
+        elif kind == "all-to-all":
+            link = (g - 1) / max(g, 1) * b
+        else:  # collective-permute
+            link = float(b)
+        ops.append(CollectiveOp(kind=kind, bytes_result=b, group_size=g,
+                                cross_pod=cross, link_bytes=link))
+    return ops
+
+
+def collective_summary(ops: List[CollectiveOp]) -> Dict[str, float]:
+    by_kind: Dict[str, float] = defaultdict(float)
+    ici_bytes = dcn_bytes = 0.0
+    for op in ops:
+        by_kind[op.kind] += op.link_bytes
+        if op.cross_pod:
+            dcn_bytes += op.link_bytes
+        else:
+            ici_bytes += op.link_bytes
+    return {"by_kind": dict(by_kind), "ici_bytes": ici_bytes,
+            "dcn_bytes": dcn_bytes, "count": len(ops)}
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll: Dict[str, float],
+                   n_devices: int) -> Dict[str, float]:
+    """Three roofline terms in seconds (per step, per device).
+
+    cost_analysis() on the SPMD-partitioned module reports *per-device*
+    FLOPs / bytes (verified empirically); collective link bytes from
+    parse_collectives are likewise per-device.
+    """
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = hbm_bytes / HBM_BW
+    t_coll = coll["ici_bytes"] / ICI_BW + coll["dcn_bytes"] / DCN_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {"compute_s": t_compute, "memory_s": t_memory,
+            "collective_s": t_coll, "dominant": dominant}

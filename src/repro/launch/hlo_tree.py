@@ -1,0 +1,193 @@
+"""Hierarchical HLO analysis with loop trip-count multipliers.
+
+XLA's `compiled.cost_analysis()` counts a while-loop body ONCE — useless for
+scanned-layer models (62-layer stacks report 1-layer FLOPs).  This module
+parses the partitioned HLO text into its computation tree and walks it from
+ENTRY, multiplying by while trip counts (extracted from the loop-condition
+compare constant), accumulating:
+
+  * dot FLOPs (2 * prod(result_dims) * contracted_size)  — HLO-grounded
+  * dot operand+result bytes                              — HBM-traffic proxy
+  * collective link-bytes (ring formulas, see hlo_analysis)
+
+This is the measurement backbone of EXPERIMENTS.md SRoofline; the analytic
+cross-check lives in benchmarks/analytic.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from . import hlo_analysis
+
+_DTYPE_BYTES = hlo_analysis._DTYPE_BYTES
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-_]+)\s*\(.*\)\s*->.*\{")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF = re.compile(r"^%?([\w.\-_]+)\s*=\s*(\w+)\[([\d,]*)\]")
+_DOT = re.compile(r"=\s*(\w+)\[([\d,]*)\][^\s]*\s+dot\(")
+_DOT_OPERANDS = re.compile(r"dot\(\s*%?([\w.\-_]+),\s*%?([\w.\-_]+)\s*\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CALL_ATTRS = re.compile(
+    r"(?:body|condition|to_apply|calls)=%?([\w.\-_]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_S32 = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+_WHILE = re.compile(r"\bwhile\(")
+
+
+def _dims(s: str) -> List[int]:
+    return [int(x) for x in s.split(",")] if s else []
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    dot_bytes: float = 0.0
+    collectives: List[hlo_analysis.CollectiveOp] = dataclasses.field(
+        default_factory=list)
+    # (child_name, kind) kind in {"while_body", "call"}
+    children: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    while_conditions: Dict[str, str] = dataclasses.field(default_factory=dict)
+    max_s32_const: int = 1
+
+
+def parse_computations(text: str) -> Tuple[Dict[str, CompStats], Optional[str]]:
+    comps: Dict[str, CompStats] = {}
+    symbols: Dict[str, Tuple[str, List[int]]] = {}
+    entry: Optional[str] = None
+    cur: Optional[CompStats] = None
+    cur_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith((" ", "\t", "}")) and line.endswith("{"):
+            m = _COMP_HEADER.match(line.strip())
+            if m:
+                cur_name = m.group(1)
+                cur = CompStats()
+                comps[cur_name] = cur
+                symbols = {}
+                if line.startswith("ENTRY"):
+                    entry = cur_name
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        s = line.strip()
+        # symbol table: %name = dtype[dims]...
+        mdef = _DEF.match(s)
+        if mdef:
+            symbols[mdef.group(1)] = (mdef.group(2), _dims(mdef.group(3)))
+        # constants (trip-count extraction for conditions)
+        mc = _CONST_S32.search(s)
+        if mc:
+            cur.max_s32_const = max(cur.max_s32_const, int(mc.group(1)))
+        # dots
+        md = _DOT.search(s)
+        if md:
+            out_dt, out_dims = md.group(1), _dims(md.group(2))
+            mo = _DOT_OPERANDS.search(s)
+            mct = _CONTRACT.search(s)
+            if mo is not None:
+                lhs_dt, lhs_dims = symbols.get(mo.group(1), ("bf16", []))
+                rhs_dt, rhs_dims = symbols.get(mo.group(2), ("bf16", []))
+                cdims = _dims(mct.group(1)) if mct else \
+                    ([len(lhs_dims) - 1] if lhs_dims else [])
+                csize = 1
+                for cd in cdims:
+                    if cd < len(lhs_dims):
+                        csize *= lhs_dims[cd]
+                out_n = 1
+                for d in out_dims:
+                    out_n *= d
+                cur.flops += 2.0 * out_n * csize
+                b = out_n * _DTYPE_BYTES.get(out_dt, 2)
+                for dt_, dims_ in ((lhs_dt, lhs_dims), (rhs_dt, rhs_dims)):
+                    n = 1
+                    for d in dims_:
+                        n *= d
+                    b += n * _DTYPE_BYTES.get(dt_, 2)
+                cur.dot_bytes += b
+        # collectives (reuse single-line parser)
+        for op in hlo_analysis.parse_collectives(s, n_devices=10 ** 9):
+            cur.collectives.append(op)
+        # call graph
+        if _WHILE.search(s):
+            attrs = dict()
+            for m in re.finditer(r"(body|condition)=%?([\w.\-_]+)", s):
+                attrs[m.group(1)] = m.group(2)
+            if "body" in attrs:
+                cur.children.append((attrs["body"], "while_body"))
+                cur.while_conditions[attrs["body"]] = attrs.get("condition", "")
+        else:
+            for m in _CALL_ATTRS.finditer(s):
+                cur.children.append((m.group(1), "call"))
+            mb = _BRANCHES.search(s)
+            if mb:
+                for name in mb.group(1).split(","):
+                    cur.children.append((name.strip().lstrip("%"), "call"))
+    return comps, entry
+
+
+@dataclasses.dataclass
+class TreeTotals:
+    flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll_ops: List[Tuple[hlo_analysis.CollectiveOp, float]] = dataclasses.field(
+        default_factory=list)
+
+
+def accumulate(comps: Dict[str, CompStats], entry: str,
+               n_devices: int) -> TreeTotals:
+    totals = TreeTotals()
+    seen_stack = set()
+
+    def visit(name: str, mult: float):
+        if name not in comps or name in seen_stack:
+            return
+        seen_stack.add(name)
+        c = comps[name]
+        totals.flops += c.flops * mult
+        totals.dot_bytes += c.dot_bytes * mult
+        for op in c.collectives:
+            totals.coll_ops.append((op, mult))
+        for child, kind in c.children:
+            m = mult
+            if kind == "while_body":
+                cond = c.while_conditions.get(child, "")
+                trip = comps[cond].max_s32_const if cond in comps else 1
+                m = mult * max(trip, 1)
+            visit(child, m)
+        seen_stack.discard(name)
+
+    visit(entry, 1.0)
+    return totals
+
+
+def analyze(hlo_text: str, n_devices: int) -> Dict[str, object]:
+    comps, entry = parse_computations(hlo_text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+    totals = accumulate(comps, entry, n_devices)
+    # re-derive collective groups with correct device count + multipliers
+    by_kind: Dict[str, float] = defaultdict(float)
+    ici = dcn = 0.0
+    count = 0.0
+    for op, mult in totals.coll_ops:
+        by_kind[op.kind] += op.link_bytes * mult
+        count += mult
+        if op.cross_pod:
+            dcn += op.link_bytes * mult
+        else:
+            ici += op.link_bytes * mult
+    return {
+        "flops_per_device": totals.flops,
+        "dot_bytes_per_device": totals.dot_bytes,
+        "collectives": {"by_kind": dict(by_kind), "ici_bytes": ici,
+                        "dcn_bytes": dcn, "count": count},
+    }

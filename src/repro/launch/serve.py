@@ -1,0 +1,48 @@
+"""Serving launcher (continuous batching over the F2-paged KV cache).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
+        --reduced --backend paged --requests 8
+"""
+import argparse
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--backend", default="paged",
+                    choices=["paged", "contiguous"])
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    import jax
+    from repro.models import transformer as tf
+    from repro.models.registry import get_config
+    from repro.serve.engine import Engine, Request
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=4, max_len=256,
+                 backend=args.backend)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 24)) if args.backend == "paged" else 8
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(1, cfg.vocab_size,
+                                               plen).astype(np.int32),
+                           max_new_tokens=args.max_new_tokens))
+    fin = eng.run()
+    for r in sorted(fin, key=lambda r: r.rid):
+        print(f"req {r.rid}: {r.out_tokens}")
+    if args.backend == "paged":
+        print(f"demotions={eng.pkv.demotions} promotions={eng.pkv.promotions}"
+              f" cold_reads={int(eng.pkv.state.cold_reads)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""ShapeDtypeStruct stand-ins for every model input/state — the dry-run
+lowers against these (weak-type-correct, shardable, zero allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import (ALL_SHAPES, ModelConfig, ShapeSpec)
+from ..distributed.param_sharding import param_specs
+from ..distributed.sharding import fit_spec, spec_for
+from ..models import transformer
+from ..optim import adamw
+from ..serve import serve_step
+from ..train import train_step as ts
+
+SHAPES = {s.name: s for s in ALL_SHAPES}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                mesh: Optional[jax.sharding.Mesh] = None
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Returns (batch_specs, batch_pspecs) for the given shape."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    batch: Dict[str, Any] = {}
+    pspecs: Dict[str, Any] = {}
+    if shape.kind == "train":
+        batch["tokens"] = _sds((B, S + 1), jnp.int32)
+    elif shape.kind == "prefill":
+        batch["tokens"] = _sds((B, S), jnp.int32)
+    else:  # decode: one new token, cache of length S
+        batch["tokens"] = _sds((B,), jnp.int32)
+    if cfg.frontend == "patches" and shape.kind != "decode":
+        batch["frontend"] = _sds((B, cfg.num_frontend_tokens, cfg.d_model), dt)
+    if cfg.is_encoder_decoder and shape.kind != "decode":
+        batch["frames"] = _sds((B, cfg.encoder_len, cfg.d_model), dt)
+    for k, v in batch.items():
+        logical = ("batch",) + (None,) * (v.ndim - 1)
+        pspecs[k] = spec_for(logical, mesh=mesh, shape=v.shape)
+    return batch, pspecs
+
+
+def params_specs(cfg: ModelConfig, mesh: Optional[jax.sharding.Mesh] = None,
+                 mode: str = "train"):
+    shapes = jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+    dt = jnp.dtype(cfg.dtype)
+    shapes = jax.tree.map(
+        lambda s: _sds(s.shape, dt if s.ndim >= 2 else s.dtype), shapes)
+    rules = None
+    if mode == "serve" and mesh is not None:
+        # weight-stationary serving: replicate over (pod, data) — no
+        # per-token ZeRO regather — when the model-sharded copy fits HBM
+        from ..distributed.sharding import DEFAULT_RULES
+        n_model = dict(mesh.shape).get("model", 1)
+        per_dev = 2 * cfg.param_count() / max(n_model, 1)
+        if per_dev < 9e9:                 # ~9 GB of a 16 GB v5e
+            rules = dict(DEFAULT_RULES, fsdp=None)
+    return shapes, param_specs(shapes, mesh, rules=rules)
+
+
+def train_state_specs(cfg: ModelConfig, ocfg: adamw.AdamWConfig,
+                      mesh: Optional[jax.sharding.Mesh] = None):
+    p_shapes, p_specs = params_specs(cfg, mesh)
+    sdt = jnp.dtype(ocfg.state_dtype)
+    mom = jax.tree.map(lambda s: _sds(s.shape, sdt), p_shapes)
+    err = jax.tree.map(
+        (lambda s: _sds(s.shape, jnp.bfloat16)) if ocfg.compress_grads
+        else (lambda s: _sds((0,), jnp.int8)), p_shapes)
+    err_spec = jax.tree.map(
+        (lambda sp: sp) if ocfg.compress_grads else (lambda sp: P()),
+        p_specs, is_leaf=lambda x: isinstance(x, P))
+    state = ts.TrainState(
+        params=p_shapes,
+        opt=adamw.OptState(mu=mom, nu=mom, err=err, count=_sds((), jnp.int32)),
+        step=_sds((), jnp.int32))
+    specs = ts.TrainState(
+        params=p_specs,
+        opt=adamw.OptState(mu=p_specs, nu=p_specs, err=err_spec, count=P()),
+        step=P())
+    return state, specs
+
+
+def cache_state_specs(cfg: ModelConfig, shape: ShapeSpec,
+                      mesh: Optional[jax.sharding.Mesh] = None):
+    B, S = shape.global_batch, shape.seq_len
+    shapes = jax.eval_shape(lambda: transformer.init_cache(cfg, B, S))
+    shapes = jax.tree.map(lambda s: _sds(s.shape, s.dtype), shapes)
+    specs = serve_step.cache_specs(cfg, mesh)
+    specs = {k: fit_spec(v, shapes[k].shape, mesh) for k, v in specs.items()}
+    return shapes, specs

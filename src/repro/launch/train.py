@@ -1,0 +1,42 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-8b \
+        --steps 100 [--reduced]
+
+On real hardware this runs under the production mesh; on CPU use --reduced.
+"""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true",
+                    help="width/depth-reduced config (CPU)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    from repro.data.pipeline import TokenPipeline
+    from repro.models.registry import get_config
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    ocfg = AdamWConfig(total_steps=args.steps)
+    pipe = TokenPipeline(cfg.vocab_size, batch=args.batch, seq_len=args.seq,
+                         frontend_tokens=cfg.num_frontend_tokens,
+                         d_model=cfg.d_model,
+                         frames=cfg.encoder_len if cfg.is_encoder_decoder else 0)
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                         microbatches=args.microbatches)
+    Trainer(cfg, ocfg, tcfg, pipe).run()
+
+
+if __name__ == "__main__":
+    main()

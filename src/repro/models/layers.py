@@ -1,0 +1,277 @@
+"""Shared transformer layers: norms, RoPE, GQA attention (flash-style
+chunked for train/prefill, dense for decode), gated MLPs, embeddings.
+
+All functions are pure jnp + sharding constraints (GSPMD decides the
+collectives); the Pallas kernels in repro.kernels are drop-in replacements
+for the hot paths and are validated against these references.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale + bias).astype(dt)
+
+
+def norm(cfg: ModelConfig, x, p):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+def norm_params(cfg: ModelConfig, d: int):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float, fraction: float = 1.0):
+    """x: [..., T, Dh]; positions: [..., T] (broadcastable)."""
+    dh = x.shape[-1]
+    rot = int(dh * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., :half], xr[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attn_params(cfg: ModelConfig, key, d: int):
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d, cfg.n_heads, hd), jnp.float32) * s,
+        "wk": jax.random.normal(k2, (d, cfg.n_kv_heads, hd), jnp.float32) * s,
+        "wv": jax.random.normal(k3, (d, cfg.n_kv_heads, hd), jnp.float32) * s,
+        "wo": jax.random.normal(k4, (cfg.n_heads, hd, d), jnp.float32) * s,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def project_qkv(cfg: ModelConfig, p, x, positions, use_rope=True):
+    """x: [B,T,D] -> q [B,Hq,T,Dh], k/v [B,Hkv,T,Dh] with RoPE applied."""
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bhtk", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bhtk", x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bhtk", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if use_rope:
+        q = rope(q, positions[:, None, :], cfg.rope_theta, cfg.rope_fraction)
+        k = rope(k, positions[:, None, :], cfg.rope_theta, cfg.rope_fraction)
+    q = constrain(q, "batch", "heads", "seq", None)
+    k = constrain(k, "batch", "kv_heads", "seq", None)
+    v = constrain(v, "batch", "kv_heads", "seq", None)
+    return q, k, v
+
+
+def flash_attention(
+    q, k, v,
+    *,
+    causal: bool = True,
+    window: Optional[jax.Array] = None,   # scalar; 0/None = unlimited
+    block_kv: int = 1024,
+    cross: bool = False,
+):
+    """Chunked online-softmax attention (the pure-jnp flash reference).
+
+    q: [B,Hq,Tq,Dh], k/v: [B,Hkv,Tk,Dh].  GQA via head grouping.
+
+    Distribution: q keeps its (possibly sequence-sharded) layout — under the
+    training rules each device owns a contiguous q chunk (context-parallel
+    attention); K/V are gathered over the sequence ONCE before the blocked
+    loop (dynamic-slicing a seq-sharded operand inside the loop would
+    re-all-gather the full tensor per iteration — measured 100x collective
+    blow-up).  The kv loop carries online-softmax stats, so live memory is
+    O(Tq_local * block_kv), never O(Tq*Tk).
+    """
+    B, Hq, Tq, Dh = q.shape
+    _, Hkv, Tk, _ = k.shape
+    G = Hq // Hkv
+    k = constrain(k, "batch", "kv_heads", None, None)
+    v = constrain(v, "batch", "kv_heads", None, None)
+    qg = q.reshape(B, Hkv, G, Tq, Dh)
+    scale = Dh ** -0.5
+    block_kv = min(block_kv, Tk)
+    pad = (-Tk) % block_kv
+    if pad:                                  # ragged Tk (e.g. vlm prefix)
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    valid_k = Tk
+    Tk = Tk + pad
+    nk = Tk // block_kv
+    q_pos = jnp.arange(Tq)
+
+    def kv_step(carry, ik):
+        m, l, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(k, ik * block_kv, block_kv, axis=2)
+        vb = jax.lax.dynamic_slice_in_dim(v, ik * block_kv, block_kv, axis=2)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kb).astype(jnp.float32) * scale
+        kv_pos = ik * block_kv + jnp.arange(block_kv)
+        mask = jnp.broadcast_to(kv_pos[None, :] < valid_k, (Tq, block_kv))
+        if causal and not cross:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if window is not None:
+            w = jnp.asarray(window)
+            mask &= jnp.where(w > 0,
+                              (q_pos[:, None] - kv_pos[None, :]) < w, True)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(vb.dtype), vb).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    init = (
+        jnp.full((B, Hkv, G, Tq), NEG_INF, jnp.float32),
+        jnp.zeros((B, Hkv, G, Tq), jnp.float32),
+        jnp.zeros((B, Hkv, G, Tq, Dh), jnp.float32),
+    )
+    # rematerialize per-block scores in the backward pass (flash-bwd
+    # semantics) instead of saving [Tq, block_kv] slabs per iteration
+    kv_step = jax.checkpoint(kv_step,
+                             policy=jax.checkpoint_policies.nothing_saveable)
+    (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    return out.reshape(B, Hq, Tq, Dh)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None):
+    """Single-token attention over a cache.
+
+    q: [B,Hq,Dh]; k/v_cache: [B,Hkv,S,Dh]; cache_len: [B] valid length.
+    Softmax over the (possibly model-axis sharded) S dim — GSPMD inserts the
+    partial-max/partial-sum all-reduces (flash-decode combine).
+    """
+    B, Hq, Dh = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, Dh)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k_cache).astype(jnp.float32)
+    s = s * (Dh ** -0.5)
+    pos = jnp.arange(S)
+    mask = pos[None] < cache_len[:, None]                       # [B,S]
+    if window is not None:
+        w = jnp.asarray(window)
+        mask &= jnp.where(w > 0, pos[None] >= cache_len[:, None] - w, True)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, Hq, Dh)
+
+
+def attn_out(p, attn, dtype):
+    return jnp.einsum("bhtk,hkd->btd", attn, p["wo"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_params(cfg: ModelConfig, key, d: int, f: int):
+    k1, k2 = jax.random.split(key)
+    s = d ** -0.5
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        return {"wi": jax.random.normal(k1, (d, 2, f), jnp.float32) * s,
+                "wo": jax.random.normal(k2, (f, d), jnp.float32) * (f ** -0.5)}
+    return {"wi": jax.random.normal(k1, (d, f), jnp.float32) * s,
+            "wo": jax.random.normal(k2, (f, d), jnp.float32) * (f ** -0.5)}
+
+
+def mlp(cfg: ModelConfig, p, x):
+    dt = x.dtype
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        h = jnp.einsum("btd,dcf->btcf", x, p["wi"].astype(dt))
+        h = constrain(h, "batch", "seq", None, "mlp")
+        gate, up = h[..., 0, :], h[..., 1, :]
+        act = jax.nn.silu(gate) if cfg.mlp_act == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jnp.einsum("btd,df->btf", x, p["wi"].astype(dt))
+        h = constrain(h, "batch", "seq", "mlp")
+        h = jax.nn.gelu(h)
+    out = jnp.einsum("btf,fd->btd", h, p["wo"].astype(dt))
+    return constrain(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+def sinusoid_pos(positions, d: int, dtype):
+    """Whisper-style sinusoidal positions.  positions: [B,T] -> [B,T,d]."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def embed_params(cfg: ModelConfig, key):
+    emb = jax.random.normal(key, (cfg.padded_vocab, cfg.d_model),
+                            jnp.float32) * 0.02
+    return {"table": emb}
+
+
+def embed(cfg: ModelConfig, p, tokens):
+    t = p["table"].astype(jnp.dtype(cfg.dtype))
+    t = constrain(t, "vocab", "embed")
+    x = jnp.take(t, tokens, axis=0)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return constrain(x, "batch", "seq", "embed")
+
+
+def logits(cfg: ModelConfig, p, x):
+    t = p["table"].astype(x.dtype)
+    out = jnp.einsum("btd,vd->btv", x, t)
+    # vocab-sharded logits (cross-shard logsumexp is a tiny all-reduce);
+    # seq deliberately unsharded here — see loss chunking in transformer.py
+    out = constrain(out, "batch", None, "vocab")
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        out = jnp.where(pad_mask, jnp.asarray(NEG_INF, out.dtype), out)
+    return out

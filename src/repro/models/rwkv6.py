@@ -1,0 +1,127 @@
+"""RWKV-6 "Finch" block: token-shift time-mix with data-dependent decay
+(the arch's headline feature) + squared-ReLU channel-mix.
+
+Recurrence per head (state S in R^{Dk x Dv}):
+    y_t = r_t @ (S_{t-1} + (u * k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with w_t = exp(-exp(w0 + tanh(x_w A) B)) computed *from the input* — the
+data-dependent decay of RWKV6.  Train/prefill runs a sequence scan (the
+Pallas `rwkv6_wkv` kernel implements the chunked form); decode is a single
+state update — O(1) per token, which is why rwkv6 runs the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+
+LORA_R = 32
+
+
+def rwkv_params(cfg: ModelConfig, key):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    H = cfg.n_heads
+    ks = jax.random.split(key, 12)
+    s = d ** -0.5
+    return {
+        # time-mix interpolation factors (token shift lerp) for r,k,v,w,g
+        "mu": jnp.zeros((5, d), jnp.float32),
+        "wr": jax.random.normal(ks[0], (d, H, hd), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (d, H, hd), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (d, H, hd), jnp.float32) * s,
+        "wg": jax.random.normal(ks[3], (d, H, hd), jnp.float32) * s,
+        "wo": jax.random.normal(ks[4], (H, hd, d), jnp.float32) * s,
+        # data-dependent decay: w0 + tanh(x A) B  (low rank)
+        "w0": jnp.full((H, hd), -6.0, jnp.float32),
+        "wA": jax.random.normal(ks[5], (d, LORA_R), jnp.float32) * s,
+        "wB": jax.random.normal(ks[6], (LORA_R, H, hd), jnp.float32) * 0.01,
+        "u": jnp.zeros((H, hd), jnp.float32),          # bonus
+        "ln_x": jnp.ones((H, hd), jnp.float32),        # per-head group norm
+        # channel mix
+        "mu_c": jnp.zeros((2, d), jnp.float32),
+        "ck": jax.random.normal(ks[7], (d, cfg.d_ff), jnp.float32) * s,
+        "cv": jax.random.normal(ks[8], (cfg.d_ff, d), jnp.float32) * (cfg.d_ff ** -0.5),
+        "cr": jax.random.normal(ks[9], (d, d), jnp.float32) * s,
+    }
+
+
+def _shift(x, x_prev):
+    """Token shift: x_{t-1} with x_prev seeding position 0. x: [B,T,D]."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _time_mix_inputs(cfg, p, x, x_prev):
+    dt = x.dtype
+    xs = _shift(x, x_prev)
+    mu = p["mu"].astype(dt)
+    xi = x[None] + (xs - x)[None] * mu[:, None, None, :]   # [5,B,T,D]
+    xr, xk, xv, xw, xg = xi[0], xi[1], xi[2], xi[3], xi[4]
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    r = jnp.einsum("btd,dhk->bhtk", xr, p["wr"].astype(dt))
+    k = jnp.einsum("btd,dhk->bhtk", xk, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bhtk", xv, p["wv"].astype(dt))
+    g = jax.nn.silu(jnp.einsum("btd,dhk->bhtk", xg, p["wg"].astype(dt)))
+    dd = jnp.tanh(jnp.einsum("btd,dr->btr", xw, p["wA"].astype(dt)))
+    lw = p["w0"].astype(jnp.float32)[None, :, None, :] + jnp.einsum(
+        "btr,rhk->bhtk", dd.astype(jnp.float32), p["wB"])
+    w = jnp.exp(-jnp.exp(lw))                               # (0,1) decay
+    r = constrain(r, "batch", "heads", "seq", None)
+    k = constrain(k, "batch", "heads", "seq", None)
+    v = constrain(v, "batch", "heads", "seq", None)
+    return r, k, v, g, w.astype(jnp.float32)
+
+
+def wkv_scan(r, k, v, w, u, state):
+    """Sequential WKV recurrence.  r,k,v: [B,H,T,Dh]; w: [B,H,T,Dh] decay;
+    u: [H,Dh]; state: [B,H,Dh,Dh].  Returns (y [B,H,T,Dh], state')."""
+    B, H, T, D = r.shape
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                                # [B,H,Dh]
+        kv = kt[..., :, None] * vt[..., None, :]            # [B,H,Dk,Dv]
+        y = jnp.einsum("bhk,bhkv->bhv", rt,
+                       S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    xs = (jnp.moveaxis(r, 2, 0).astype(jnp.float32),
+          jnp.moveaxis(k, 2, 0).astype(jnp.float32),
+          jnp.moveaxis(v, 2, 0).astype(jnp.float32),
+          jnp.moveaxis(w, 2, 0))
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 2), state                    # [B,H,T,Dv]
+
+
+def time_mix(cfg: ModelConfig, p, x, x_prev, wkv_state):
+    """Returns (out [B,T,D], new_x_prev [B,D], new_wkv_state)."""
+    dt = x.dtype
+    r, k, v, g, w = _time_mix_inputs(cfg, p, x, x_prev)
+    y, new_state = wkv_scan(r, k, v, w, p["u"].astype(jnp.float32), wkv_state)
+    # per-head group norm then gate
+    y = rmsnorm_heads(y.astype(dt), p["ln_x"])
+    y = y * g
+    out = jnp.einsum("bhtk,hkd->btd", y, p["wo"].astype(dt))
+    return constrain(out, "batch", "seq", "embed"), x[:, -1, :], new_state
+
+
+def rmsnorm_heads(y, scale, eps=1e-6):
+    dt = y.dtype
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + eps)
+    return (yf * scale[None, :, None, :]).astype(dt)
+
+
+def channel_mix(cfg: ModelConfig, p, x, x_prev):
+    dt = x.dtype
+    xs = _shift(x, x_prev)
+    mu = p["mu_c"].astype(dt)
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    kk = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, p["ck"].astype(dt))))
+    kk = constrain(kk, "batch", "seq", "mlp")
+    vv = jnp.einsum("btf,fd->btd", kk, p["cv"].astype(dt))
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["cr"].astype(dt)))
+    return constrain(rr * vv, "batch", "seq", "embed"), x[:, -1, :]

@@ -1,0 +1,89 @@
+"""Minimal selective SSM (S6 / Mamba-style) head for the Hymba hybrid.
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t        (diag A, state N)
+    y_t = h_t . C_t + D * x_t
+
+with input-dependent (dt, B, C) — the selective part.  A depthwise causal
+conv (k=4) precedes the SSM as in Mamba; decode carries conv tail state.
+O(1) state per token => hymba runs the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+
+CONV_K = 4
+
+
+def ssm_params(cfg: ModelConfig, key, d: int):
+    din = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2, din), jnp.float32) * s,
+        "conv": jax.random.normal(ks[1], (CONV_K, din), jnp.float32) * 0.3,
+        "wdt": jax.random.normal(ks[2], (din,), jnp.float32) * 0.1,
+        "dt_bias": jnp.full((din,), -3.0, jnp.float32),
+        "wb": jax.random.normal(ks[3], (din, N), jnp.float32) * s,
+        "wc": jax.random.normal(ks[4], (din, N), jnp.float32) * s,
+        "a_log": jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32))[None, :]
+                 * jnp.ones((din, 1), jnp.float32),
+        "dskip": jnp.ones((din,), jnp.float32),
+        "out_proj": jax.random.normal(ks[5], (din, d), jnp.float32) * (din ** -0.5),
+    }
+
+
+def _causal_conv(x, w, conv_state):
+    """x: [B,T,C]; w: [K,C]; conv_state: [B,K-1,C] (previous inputs)."""
+    xp = jnp.concatenate([conv_state, x], axis=1)          # [B,T+K-1,C]
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(CONV_K))
+    new_state = xp[:, -(CONV_K - 1):, :] if CONV_K > 1 else conv_state
+    return out, new_state
+
+
+def ssm_mix(cfg: ModelConfig, p, x, state):
+    """x: [B,T,D]; state: dict(conv [B,K-1,din], h [B,din,N]).
+    Returns (y [B,T,D], new_state)."""
+    dt_ = x.dtype
+    hproj = jnp.einsum("btd,dgc->btgc", x, p["in_proj"].astype(dt_))
+    xs, z = hproj[..., 0, :], hproj[..., 1, :]             # [B,T,din]
+    xs = constrain(xs, "batch", "seq", "mlp")
+    xs, conv_state = _causal_conv(xs, p["conv"].astype(dt_), state["conv"])
+    xs = jax.nn.silu(xs)
+
+    # input-dependent per-channel step size (the selective part)
+    dt = jax.nn.softplus(xs.astype(jnp.float32) * p["wdt"][None, None, :]
+                         + p["dt_bias"][None, None, :])     # [B,T,din]
+    B_ = jnp.einsum("btc,cn->btn", xs, p["wb"].astype(dt_)).astype(jnp.float32)
+    C_ = jnp.einsum("btc,cn->btn", xs, p["wc"].astype(dt_)).astype(jnp.float32)
+    A = -jnp.exp(p["a_log"])                                # [din,N] negative
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                               # [B,din],[B,din],[B,N],[B,N]
+        da = jnp.exp(dtt[..., None] * A[None])              # [B,din,N]
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bcn,bn->bc", h, ct)
+        return h, y
+
+    xs32 = xs.astype(jnp.float32)
+    h, ys = jax.lax.scan(step, state["h"],
+                         (jnp.moveaxis(xs32, 1, 0), jnp.moveaxis(dt, 1, 0),
+                          jnp.moveaxis(B_, 1, 0), jnp.moveaxis(C_, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).astype(dt_)
+    y = y + xs * p["dskip"].astype(dt_)[None, None, :]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("btc,cd->btd", y, p["out_proj"].astype(dt_))
+    return constrain(out, "batch", "seq", "embed"), {"conv": conv_state, "h": h}
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype):
+    din = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, din), dtype),
+        "h": jnp.zeros((batch, din, cfg.ssm_state), jnp.float32),
+    }

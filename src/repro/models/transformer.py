@@ -1,0 +1,380 @@
+"""Unified model definition covering all assigned families.
+
+One scanned-block decoder (O(1) HLO size in depth — required for 512-device
+compiles) with per-family block bodies:
+
+  dense / vlm      : GQA attention (+ sliding-window / local:global) + MLP
+  moe              : GQA attention + capacity-bounded MoE FFN
+  ssm (rwkv6)      : time-mix (WKV6, data-dependent decay) + channel-mix
+  hybrid (hymba)   : parallel attention ‖ selective-SSM heads + MLP
+  audio (whisper)  : encoder stack (bidirectional) + decoder w/ cross-attn
+
+Exposes: init_params, forward (train/prefill), loss_fn, init_cache,
+decode_step.  Modality frontends are stubs per the assignment: `frontend`
+embeddings arrive precomputed in the batch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+from . import layers, moe, rwkv6, ssm
+
+
+# ---------------------------------------------------------------------------
+# Per-layer static pattern (local/global etc.)
+# ---------------------------------------------------------------------------
+
+def layer_flags(cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    L = cfg.n_layers
+    if cfg.local_global_ratio:
+        r = cfg.local_global_ratio
+        is_local = (jnp.arange(L) % (r + 1)) != r        # r local, then 1 global
+    elif cfg.sliding_window and cfg.family == "hybrid":
+        # hymba: a few full-attention layers (first/mid/last), rest windowed
+        g = {0, L // 2, L - 1} if cfg.n_global_attn_layers else set()
+        is_local = jnp.array([i not in g for i in range(L)])
+    elif cfg.sliding_window:
+        is_local = jnp.ones((L,), jnp.bool_)
+    else:
+        is_local = jnp.zeros((L,), jnp.bool_)
+    window = jnp.where(is_local, cfg.sliding_window or 0, 0).astype(jnp.int32)
+    return {"window": window}
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _block_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    if cfg.family == "ssm":
+        return {"norm1": layers.norm_params(cfg, d),
+                "norm2": layers.norm_params(cfg, d),
+                "rwkv": rwkv6.rwkv_params(cfg, ks[0])}
+    p = {"norm1": layers.norm_params(cfg, d),
+         "norm2": layers.norm_params(cfg, d),
+         "attn": layers.attn_params(cfg, ks[0], d)}
+    if cfg.family == "moe":
+        p["moe"] = moe.moe_params(cfg, ks[1], d)
+    else:
+        p["mlp"] = layers.mlp_params(cfg, ks[1], d, cfg.d_ff)
+    if cfg.family == "hybrid":
+        p["ssm"] = ssm.ssm_params(cfg, ks[2], d)
+        p["norm_attn_out"] = layers.norm_params(cfg, d)
+        p["norm_ssm_out"] = layers.norm_params(cfg, d)
+    if cfg.is_encoder_decoder:
+        p["norm_cross"] = layers.norm_params(cfg, d)
+        p["cross"] = layers.attn_params(cfg, ks[3], d)
+    return p
+
+
+def _enc_block_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    d = cfg.d_model
+    ks = jax.random.split(key, 2)
+    return {"norm1": layers.norm_params(cfg, d),
+            "norm2": layers.norm_params(cfg, d),
+            "attn": layers.attn_params(cfg, ks[0], d),
+            "mlp": layers.mlp_params(cfg, ks[1], d, cfg.d_ff)}
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    kb, ke, kenc = jax.random.split(key, 3)
+    blocks = jax.vmap(lambda k: _block_params(cfg, k))(
+        jax.random.split(kb, cfg.n_layers))
+    params = {
+        "embed": layers.embed_params(cfg, ke),
+        "blocks": blocks,
+        "final_norm": layers.norm_params(cfg, cfg.d_model),
+    }
+    if cfg.is_encoder_decoder:
+        params["enc_blocks"] = jax.vmap(lambda k: _enc_block_params(cfg, k))(
+            jax.random.split(kenc, cfg.n_encoder_layers))
+        params["enc_final_norm"] = layers.norm_params(cfg, cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_block_seq(cfg, p, x, positions, window, enc_out=None):
+    h = layers.norm(cfg, x, p["norm1"])
+    q, k, v = layers.project_qkv(cfg, p["attn"], h, positions,
+                                 use_rope=(cfg.norm != "layernorm"))
+    w = jnp.where(window > 0, window, 0)
+    att = layers.flash_attention(q, k, v, causal=True,
+                                 window=jnp.asarray(w, jnp.int32))
+    attn_out = layers.attn_out(p["attn"], att, x.dtype)
+
+    if cfg.family == "hybrid":
+        s_out, _ = ssm.ssm_mix(cfg, p["ssm"], h,
+                               ssm.init_ssm_state(cfg, x.shape[0], x.dtype))
+        mixed = (layers.norm(cfg, attn_out, p["norm_attn_out"])
+                 + layers.norm(cfg, s_out, p["norm_ssm_out"])) * 0.5
+        x = x + mixed
+    else:
+        x = x + attn_out
+
+    if cfg.is_encoder_decoder and enc_out is not None:
+        hc = layers.norm(cfg, x, p["norm_cross"])
+        enc_pos = jnp.broadcast_to(jnp.arange(enc_out.shape[1]),
+                                   enc_out.shape[:2])
+        qc, _, _ = layers.project_qkv(cfg, p["cross"], hc, positions,
+                                      use_rope=False)
+        # cross K/V from encoder output
+        dt = x.dtype
+        kc = jnp.einsum("btd,dhk->bhtk", enc_out, p["cross"]["wk"].astype(dt))
+        vc = jnp.einsum("btd,dhk->bhtk", enc_out, p["cross"]["wv"].astype(dt))
+        att_c = layers.flash_attention(qc, kc, vc, causal=False, cross=True)
+        x = x + layers.attn_out(p["cross"], att_c, dt)
+
+    h2 = layers.norm(cfg, x, p["norm2"])
+    if cfg.family == "moe":
+        x = x + moe.moe_ffn(cfg, p["moe"], h2)
+    else:
+        x = x + layers.mlp(cfg, p["mlp"], h2)
+    return x
+
+
+def _rwkv_block_seq(cfg, p, x):
+    B, T, D = x.shape
+    zero_prev = jnp.zeros((B, D), x.dtype)
+    zero_state = jnp.zeros((B, cfg.n_heads, cfg.resolved_head_dim,
+                            cfg.resolved_head_dim), jnp.float32)
+    h = layers.norm(cfg, x, p["norm1"])
+    tm, _, _ = rwkv6.time_mix(cfg, p["rwkv"], h, zero_prev, zero_state)
+    x = x + tm
+    h2 = layers.norm(cfg, x, p["norm2"])
+    cm, _ = rwkv6.channel_mix(cfg, p["rwkv"], h2, zero_prev)
+    return x + cm
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """Whisper encoder over precomputed (stub) conv frames [B,Tf,D]."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    x = x + layers.sinusoid_pos(pos, cfg.d_model, x.dtype)
+
+    def body(x, p):
+        h = layers.norm(cfg, x, p["norm1"])
+        q, k, v = layers.project_qkv(cfg, p["attn"], h, pos, use_rope=False)
+        att = layers.flash_attention(q, k, v, causal=False)
+        x = x + layers.attn_out(p["attn"], att, x.dtype)
+        h2 = layers.norm(cfg, x, p["norm2"])
+        return x + layers.mlp(cfg, p["mlp"], h2), None
+
+    body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return layers.norm(cfg, x, params["enc_final_norm"])
+
+
+def forward_hidden(cfg: ModelConfig, params, batch: Dict[str, jax.Array],
+                   remat: bool = True) -> jax.Array:
+    """Returns final hidden states [B, T, D] over the token positions."""
+    tokens = batch["tokens"]
+    x = layers.embed(cfg, params["embed"], tokens)
+    n_front = 0
+    if cfg.frontend == "patches" and "frontend" in batch:
+        fe = batch["frontend"].astype(x.dtype)
+        x = jnp.concatenate([fe, x], axis=1)
+        n_front = fe.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    if cfg.norm == "layernorm":           # whisper: absolute positions
+        x = x + layers.sinusoid_pos(positions, cfg.d_model, x.dtype)
+
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(cfg, params, batch["frames"])
+
+    flags = layer_flags(cfg)
+
+    if cfg.family == "ssm":
+        def body(x, pl):
+            return _rwkv_block_seq(cfg, pl, x), None
+    else:
+        def body(x, scanned):
+            pl, window = scanned
+            return _attn_block_seq(cfg, pl, x, positions, window, enc_out), None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.family == "ssm":
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    else:
+        x, _ = jax.lax.scan(body, x, (params["blocks"], flags["window"]))
+
+    x = layers.norm(cfg, x, params["final_norm"])
+    if n_front:
+        x = x[:, n_front:, :]
+    return x
+
+
+def forward(cfg: ModelConfig, params, batch, remat: bool = True,
+            last_only: bool = False) -> jax.Array:
+    """Logits [B, T, Vpad] (or [B, 1, Vpad] with last_only — prefill never
+    materializes the full-sequence logits tensor)."""
+    x = forward_hidden(cfg, params, batch, remat=remat)
+    if last_only:
+        x = x[:, -1:, :]
+    return layers.logits(cfg, params["embed"], x)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, remat: bool = True,
+            loss_chunk: int = 1024):
+    """Next-token CE, computed in sequence chunks so the full [B,T,V]
+    logits tensor never materializes (vocab-chunked CE — the memory fix
+    recorded in EXPERIMENTS.md SPerf).  batch["tokens"]: [B, T+1]."""
+    toks = batch["tokens"]
+    inp = dict(batch)
+    inp["tokens"] = toks[:, :-1]
+    x = forward_hidden(cfg, params, inp, remat=remat)      # [B,T,D]
+    tgt = toks[:, 1:]
+    mask = batch.get("loss_mask")
+    mask = jnp.ones_like(tgt, jnp.float32) if mask is None \
+        else mask[:, 1:].astype(jnp.float32)
+    B, T, D = x.shape
+    c = min(loss_chunk, T)
+    assert T % c == 0, (T, c)
+    nc = T // c
+
+    def chunk_nll(args):
+        xc, tc, mc = args                                   # [B,c,D],[B,c]
+        lg = layers.logits(cfg, params["embed"], xc).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, tc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mc), jnp.sum(mc)
+
+    chunk_nll = jax.checkpoint(chunk_nll,
+                               policy=jax.checkpoint_policies.nothing_saveable)
+    xs = (x.reshape(B, nc, c, D).swapaxes(0, 1),
+          tgt.reshape(B, nc, c).swapaxes(0, 1),
+          mask.reshape(B, nc, c).swapaxes(0, 1))
+    nlls, cnts = jax.lax.map(chunk_nll, xs)
+    return jnp.sum(nlls) / jnp.maximum(jnp.sum(cnts), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Decode path (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> Dict[str, Any]:
+    dt = jnp.dtype(dtype or cfg.dtype)
+    L, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+    cache: Dict[str, Any] = {"len": jnp.zeros((batch,), jnp.int32)}
+    if cfg.family == "ssm":
+        H = cfg.n_heads
+        cache["wkv"] = jnp.zeros((L, batch, H, Dh, Dh), jnp.float32)
+        cache["shift"] = jnp.zeros((L, 2, batch, cfg.d_model), dt)
+        return cache
+    cache["k"] = jnp.zeros((L, batch, Hkv, max_len, Dh), dt)
+    cache["v"] = jnp.zeros((L, batch, Hkv, max_len, Dh), dt)
+    if cfg.family == "hybrid":
+        din = cfg.ssm_expand * cfg.d_model
+        cache["conv"] = jnp.zeros((L, batch, ssm.CONV_K - 1, din), dt)
+        cache["h"] = jnp.zeros((L, batch, din, cfg.ssm_state), jnp.float32)
+    if cfg.is_encoder_decoder:
+        cache["xk"] = jnp.zeros((L, batch, Hkv, cfg.encoder_len, Dh), dt)
+        cache["xv"] = jnp.zeros((L, batch, Hkv, cfg.encoder_len, Dh), dt)
+    return cache
+
+
+def _decode_attn(cfg, p, x, cache_k, cache_v, cache_len, window):
+    """x: [B,1,D]; returns (attn_out [B,1,D], new k/v rows)."""
+    dt = x.dtype
+    pos = cache_len[:, None]                                # [B,1]
+    q, k, v = layers.project_qkv(cfg, p, x, pos,
+                                 use_rope=(cfg.norm != "layernorm"))
+    # write the new K/V row at position cache_len (same for all lanes here)
+    k_new = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), cache_len[0], axis=2)
+    v_new = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), cache_len[0], axis=2)
+    att = layers.decode_attention(q[:, :, 0, :], k_new, v_new, cache_len + 1,
+                                  window=window)
+    out = jnp.einsum("bhk,hkd->bd", att, p["wo"].astype(dt))[:, None, :]
+    return out, k_new, v_new
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens: jax.Array
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """tokens: [B] int32 (the last generated token).  Returns
+    (logits [B, V], new_cache).  Uses cache["len"] as position."""
+    B = tokens.shape[0]
+    x = layers.embed(cfg, params["embed"], tokens[:, None])
+    cache_len = cache["len"]
+    if cfg.norm == "layernorm":           # whisper: absolute positions
+        x = x + layers.sinusoid_pos(cache_len[:, None], cfg.d_model, x.dtype)
+    flags = layer_flags(cfg)
+    dt = x.dtype
+
+    if cfg.family == "ssm":
+        def body(x, scanned):
+            pl, wkv_st, shift_st = scanned
+            h = layers.norm(cfg, x, pl["norm1"])
+            tm, sh1, wkv2 = rwkv6.time_mix(cfg, pl["rwkv"], h,
+                                           shift_st[0], wkv_st)
+            x = x + tm
+            h2 = layers.norm(cfg, x, pl["norm2"])
+            cm, sh2 = rwkv6.channel_mix(cfg, pl["rwkv"], h2, shift_st[1])
+            x = x + cm
+            return x, (wkv2, jnp.stack([sh1, sh2]))
+
+        x, (wkv, shift) = jax.lax.scan(body, x,
+                                       (params["blocks"], cache["wkv"],
+                                        cache["shift"]))
+        cache = dict(cache, wkv=wkv, shift=shift, len=cache_len + 1)
+        x = layers.norm(cfg, x, params["final_norm"])
+        return layers.logits(cfg, params["embed"], x)[:, 0], cache
+
+    def body(x, scanned):
+        pl = scanned["p"]
+        window = scanned["window"]
+        h = layers.norm(cfg, x, pl["norm1"])
+        att, k2, v2 = _decode_attn(cfg, pl["attn"], h, scanned["k"],
+                                   scanned["v"], cache_len, window)
+        ys = {"k": k2, "v": v2}
+        if cfg.family == "hybrid":
+            sst = {"conv": scanned["conv"], "h": scanned["h"]}
+            s_out, sst2 = ssm.ssm_mix(cfg, pl["ssm"], h, sst)
+            mixed = (layers.norm(cfg, att, pl["norm_attn_out"])
+                     + layers.norm(cfg, s_out, pl["norm_ssm_out"])) * 0.5
+            x = x + mixed
+            ys["conv"], ys["h"] = sst2["conv"], sst2["h"]
+        else:
+            x = x + att
+        if cfg.is_encoder_decoder:
+            hc = layers.norm(cfg, x, pl["norm_cross"])
+            qc = jnp.einsum("btd,dhk->bhtk", hc, pl["cross"]["wq"].astype(dt))
+            enc_len = jnp.full((B,), cfg.encoder_len, jnp.int32)
+            att_c = layers.decode_attention(qc[:, :, 0, :], scanned["xk"],
+                                            scanned["xv"], enc_len)
+            x = x + jnp.einsum("bhk,hkd->bd", att_c,
+                               pl["cross"]["wo"].astype(dt))[:, None, :]
+            ys["xk"], ys["xv"] = scanned["xk"], scanned["xv"]
+        h2 = layers.norm(cfg, x, pl["norm2"])
+        if cfg.family == "moe":
+            x = x + moe.moe_ffn(cfg, pl["moe"], h2)
+        else:
+            x = x + layers.mlp(cfg, pl["mlp"], h2)
+        return x, ys
+
+    scanned = {"p": params["blocks"], "window": flags["window"],
+               "k": cache["k"], "v": cache["v"]}
+    for extra in ("conv", "h", "xk", "xv"):
+        if extra in cache:
+            scanned[extra] = cache[extra]
+    x, ys = jax.lax.scan(body, x, scanned)
+    new_cache = dict(cache, len=cache_len + 1, k=ys["k"], v=ys["v"])
+    for extra in ("conv", "h", "xk", "xv"):
+        if extra in ys:
+            new_cache[extra] = ys[extra]
+    x = layers.norm(cfg, x, params["final_norm"])
+    return layers.logits(cfg, params["embed"], x)[:, 0], new_cache

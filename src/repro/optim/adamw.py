@@ -1,0 +1,119 @@
+"""AdamW from scratch (no optax in this environment), with the
+distributed-optimization extras used at pod scale:
+
+  * fp32 or bf16 moment states (bf16 halves optimizer HBM — needed to fit
+    kimi-k2 train on 512 v5e chips, see EXPERIMENTS.md SDry-run);
+  * global-norm gradient clipping;
+  * linear-warmup + cosine decay schedule;
+  * optional int8 gradient quantization with error feedback — models the
+    cross-pod (DCN) gradient-compression trick; the quantize/dequantize ops
+    appear in the lowered HLO so the roofline sees the 4x byte reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    state_dtype: str = "float32"     # "bfloat16" halves optimizer memory
+    compress_grads: bool = False     # int8 + error feedback (cross-pod DCN)
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    err: Any          # error-feedback residual (zeros when compression off)
+    count: jax.Array
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init(cfg: AdamWConfig, params) -> OptState:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    mu = jax.tree.map(zeros, params)
+    nu = jax.tree.map(zeros, params)
+    err = jax.tree.map(
+        (lambda p: jnp.zeros(p.shape, jnp.bfloat16)) if cfg.compress_grads
+        else (lambda p: jnp.zeros((0,), jnp.int8)), params)
+    return OptState(mu=mu, nu=nu, err=err, count=jnp.int32(0))
+
+
+def _quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply(cfg: AdamWConfig, grads, state: OptState, params):
+    """Returns (new_params, new_state, metrics)."""
+    count = state.count + 1
+    lr = schedule(cfg, count)
+
+    if cfg.compress_grads:
+        def comp(g, e):
+            g = g.astype(jnp.float32) + e.astype(jnp.float32)
+            q, s = _quantize_int8(g)
+            deq = q.astype(jnp.float32) * s
+            return deq, (g - deq).astype(jnp.bfloat16)
+        pairs = jax.tree.map(comp, grads, state.err)
+        grads = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        err = jax.tree.map(lambda p: p[1], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    else:
+        err = state.err
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+    b1, b2 = cfg.beta1, cfg.beta2
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (step + cfg.weight_decay * p32)
+        return p32.astype(p.dtype), m32.astype(sdt), v32.astype(sdt)
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    mu = jax.tree.map(lambda t: t[1], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda t: t[2], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    new_state = OptState(mu=mu, nu=nu, err=err, count=count)
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

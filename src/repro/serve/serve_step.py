@@ -1,0 +1,54 @@
+"""Serving steps: prefill (full-sequence forward, no loss) and decode (one
+token against the KV cache).
+
+Cache sharding: batch over (pod, data); the cache sequence dim over `model`
+(flash-decode: GSPMD inserts the partial-softmax combine collectives) —
+this avoids replicating low-kv-head GQA caches (glm4 kv=2) across the
+16-way model axis.  SSM archs carry O(1) state sharded over heads.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import spec_for
+from ..models import transformer
+
+
+def prefill_step(cfg: ModelConfig, params, batch) -> jax.Array:
+    """Returns last-position logits [B, V] (next-token distribution)."""
+    lg = transformer.forward(cfg, params, batch, remat=False, last_only=True)
+    return lg[:, -1, :]
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    return transformer.decode_step(cfg, params, cache, tokens)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Optional[jax.sharding.Mesh] = None
+                ) -> Dict[str, P]:
+    """PartitionSpecs for each cache entry (layout per REPRO_DECODE_KV)."""
+    from ..distributed.sharding import _DECODE_KV
+    sp = lambda *names: spec_for(names, mesh=mesh)
+    specs: Dict[str, P] = {"len": sp("batch")}
+    if cfg.family == "ssm":
+        specs["wkv"] = sp(None, "batch", "heads", None, None)
+        specs["shift"] = sp(None, None, "batch", None)
+        return specs
+    if _DECODE_KV == "heads":
+        kv = sp(None, "batch", "kv_heads", None, None)
+    else:
+        kv = sp(None, "batch", None, "cache_seq", None)
+    specs["k"] = kv
+    specs["v"] = kv
+    if cfg.family == "hybrid":
+        specs["conv"] = sp(None, "batch", None, "mlp")
+        specs["h"] = sp(None, "batch", "mlp", None)
+    if cfg.is_encoder_decoder:
+        specs["xk"] = kv
+        specs["xv"] = kv
+    return specs

@@ -1,0 +1,74 @@
+"""Training step: loss -> grads -> AdamW, under GSPMD.
+
+Parameters/moments are sharded per distributed.param_sharding (FSDP x TP),
+the batch over (pod, data).  Gradient reductions, ZeRO gathers and TP
+collectives are inserted by the partitioner; microbatching (gradient
+accumulation) runs as a lax.scan over microbatch slices so HLO stays O(1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import TRAIN_RULES, use_rules
+from ..models import transformer
+from ..optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.OptState
+    step: jax.Array
+
+
+def init_state(cfg: ModelConfig, ocfg: adamw.AdamWConfig, key) -> TrainState:
+    params = transformer.init_params(cfg, key)
+    dt = jnp.dtype(cfg.dtype)
+    params = jax.tree.map(
+        lambda p: p.astype(dt) if p.dtype == jnp.float32 and p.ndim >= 2 else p,
+        params)
+    return TrainState(params=params, opt=adamw.init(ocfg, params),
+                      step=jnp.int32(0))
+
+
+def make_train_step(cfg: ModelConfig, ocfg: adamw.AdamWConfig,
+                    microbatches: int = 1, remat: bool = True):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss(params, batch):
+        with use_rules(TRAIN_RULES):   # FSDP + sequence parallelism
+            return transformer.loss_fn(cfg, params, batch, remat=remat)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        if microbatches <= 1:
+            l, grads = jax.value_and_grad(loss)(state.params, batch)
+        else:
+            def slice_mb(i, x):
+                mb = x.shape[0] // microbatches
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+            def acc_step(carry, i):
+                tot_l, acc = carry
+                mb = jax.tree.map(functools.partial(slice_mb, i), batch)
+                l, g = jax.value_and_grad(loss)(state.params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (tot_l + l, acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (tot_l, acc), _ = jax.lax.scan(
+                acc_step, (jnp.float32(0), zeros),
+                jnp.arange(microbatches))
+            l = tot_l / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, acc)
+
+        params, opt, om = adamw.apply(ocfg, grads, state.opt, state.params)
+        metrics = {"loss": l, **om}
+        return TrainState(params=params, opt=opt, step=state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,53 @@
+import os
+import sys
+
+# repo root (for `import benchmarks`) regardless of how pytest is invoked
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np
+import pytest
+
+from repro.core import (KV, F2Config, OP_DELETE, OP_READ, OP_RMW, OP_UPSERT,
+                        ST_NOT_FOUND, ST_OK)
+
+
+def small_cfg(**kw) -> F2Config:
+    base = dict(hot_index_size=1 << 9, hot_capacity=1 << 11, hot_mem=1 << 8,
+                cold_capacity=1 << 13, cold_mem=1 << 7, n_chunks=1 << 7,
+                chunklog_capacity=1 << 11, chunklog_mem=1 << 6,
+                rc_capacity=1 << 7, value_width=2, chain_max=48)
+    base.update(kw)
+    return F2Config(**base)
+
+
+def run_oracle_check(kv: KV, rng, n_steps, n_keys, B=128,
+                     p=(.3, .4, .2, .1)):
+    """Mixed op batches vs a dict oracle; returns the oracle."""
+    V = kv.cfg.value_width
+    ref = {}
+    for step in range(n_steps):
+        keys = rng.integers(0, n_keys, B).astype(np.int32)
+        ops = rng.choice([OP_READ, OP_UPSERT, OP_RMW, OP_DELETE], B,
+                         p=p).astype(np.int32)
+        vals = rng.integers(0, 100, (B, V)).astype(np.int32)
+        st, rv = kv.apply(keys, ops, vals)
+        st, rv = np.asarray(st), np.asarray(rv)
+        for i in range(B):
+            if ops[i] == OP_READ:
+                k = int(keys[i])
+                if k in ref:
+                    assert st[i] == ST_OK, (step, k, st[i])
+                    assert np.array_equal(rv[i], ref[k]), (step, k)
+                else:
+                    assert st[i] == ST_NOT_FOUND, (step, k, st[i])
+        for i in range(B):
+            k, o = int(keys[i]), int(ops[i])
+            if o == OP_UPSERT:
+                ref[k] = vals[i].copy()
+            elif o == OP_DELETE:
+                ref.pop(k, None)
+            elif o == OP_RMW:
+                ref[k] = (ref.get(k, np.zeros(V, np.int32))
+                          + vals[i]).astype(np.int32)
+    kv.check_invariants()
+    return ref

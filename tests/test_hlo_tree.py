@@ -1,0 +1,57 @@
+"""The hierarchical HLO analyzer: dot FLOPs and collective bytes must be
+multiplied by while-loop trip counts (XLA's cost_analysis counts scan
+bodies once — the 26x undercount documented in EXPERIMENTS.md §Roofline)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_tree
+
+
+def test_scan_trip_count_multiplies_flops():
+    L, B, D, F = 7, 64, 32, 48
+
+    def f(x, ws):
+        def body(x, w):
+            return jnp.tanh(x @ w @ w.T), None
+        x, _ = jax.lax.scan(body, x, ws)
+        return x.sum()
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((B, D), jnp.float32),
+        jax.ShapeDtypeStruct((L, D, F), jnp.float32)).compile()
+    res = hlo_tree.analyze(comp.as_text(), 1)
+    expected = L * 2 * (2 * B * D * F)      # two matmuls per layer
+    assert res["flops_per_device"] == pytest.approx(expected, rel=0.01)
+    # XLA's own counter misses the trip count
+    xla = comp.cost_analysis().get("flops", 0.0)
+    assert xla < expected / 2
+
+
+def test_nested_loops_multiply():
+    def f(x):
+        def outer(x, _):
+            def inner(i, y):
+                return jnp.tanh(y @ y.T) @ y * 0.1
+            return jax.lax.fori_loop(0, 3, inner, x), None
+        x, _ = jax.lax.scan(outer, x, None, length=5)
+        return x.sum()
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((16, 16), jnp.float32)).compile()
+    res = hlo_tree.analyze(comp.as_text(), 1)
+    expected = 5 * 3 * 2 * (2 * 16 * 16 * 16)   # 2 matmuls x 15 iterations
+    assert res["flops_per_device"] == pytest.approx(expected, rel=0.05)
+
+
+def test_collective_formulas():
+    text = """
+ENTRY %main (p: f32[64,64]) -> f32[64,64] {
+  %p = f32[64,64]{1,0} parameter(0)
+  %ar = f32[64,64]{1,0} all-reduce(%p), replica_groups=[2,4]<=[8], to_apply=%add
+  ROOT %r = f32[64,64]{1,0} add(%ar, %ar)
+}
+"""
+    res = hlo_tree.analyze(text, 8)
+    b = 64 * 64 * 4
+    assert res["collectives"]["ici_bytes"] == pytest.approx(2 * 3 / 4 * b)

@@ -1,0 +1,69 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+rng = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,T,Dh,causal,window", [
+    (2, 4, 2, 256, 64, True, 0),
+    (1, 2, 1, 128, 128, True, 64),
+    (2, 2, 2, 256, 64, False, 0),
+    (1, 8, 1, 512, 64, True, 0),       # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, Hq, Hkv, T, Dh, causal, window, dtype):
+    from repro.kernels.flash_attention import ops as fa
+    q = jnp.asarray(rng.standard_normal((B, Hq, T, Dh)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, T, Dh)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, T, Dh)), dtype)
+    out = fa.flash_attention(q, k, v, causal=causal, window=window,
+                             interpret=True)
+    ref = fa.flash_attention_reference(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,H,T,D,chunk", [
+    (2, 3, 256, 64, 64), (1, 2, 128, 64, 128), (2, 1, 64, 128, 32),
+])
+def test_rwkv6_wkv(B, H, T, D, chunk):
+    from repro.kernels.rwkv6_wkv import ops as wkvo
+    r, k, v = (jnp.asarray(rng.standard_normal((B, H, T, D)), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(rng.uniform(0.8, 0.999, (B, H, T, D)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((H, D)), jnp.float32)
+    y = wkvo.wkv(r, k, v, w, u, chunk=chunk, interpret=True)
+    yr = wkvo.wkv_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("B,Hkv,G,Dh,ps,npool,mp", [
+    (3, 2, 4, 64, 64, 16, 4), (1, 1, 8, 128, 32, 8, 2),
+])
+def test_paged_attention(B, Hkv, G, Dh, ps, npool, mp):
+    from repro.kernels.paged_attention import ops as pa
+    q = jnp.asarray(rng.standard_normal((B, Hkv, G, Dh)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((Hkv, npool, ps, Dh)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((Hkv, npool, ps, Dh)), jnp.float32)
+    pt = jnp.asarray(rng.integers(0, npool, (B, mp)), jnp.int32)
+    ln = jnp.asarray(rng.integers(1, ps * mp, (B,)), jnp.int32)
+    o = pa.paged_attention(q, kp, vp, pt, ln, interpret=True)
+    orf = pa.paged_attention_ref(q, kp, vp, pt, ln)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("E,B", [(1 << 12, 2048), (1 << 10, 1024)])
+def test_f2_probe(E, B):
+    from repro.kernels.f2_probe import ops as fp
+    idx = jnp.asarray(rng.integers(-1, 1000, (E,)), jnp.int32)
+    idx = idx.at[::7].set(idx[::7] | (1 << 30))
+    keys = jnp.asarray(rng.integers(0, 1 << 30, (B,)), jnp.int32)
+    a, irc = fp.probe(keys, idx, interpret=True)
+    ar, ircr = fp.probe_ref(keys, idx)
+    assert bool(jnp.all(a == ar) and jnp.all(irc == ircr))

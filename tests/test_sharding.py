@@ -1,0 +1,49 @@
+"""Sharding rule resolution + a subprocess mini dry-run (512 virtual
+devices need a fresh process: jax locks the device count on first init)."""
+import subprocess
+import sys
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import DEFAULT_RULES, fit_spec, spec_for
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+def test_spec_for_drops_missing_axes():
+    s = spec_for(("batch", None, "heads"), mesh=FakeMesh())
+    assert s == P("data", None, "model")     # 'pod' dropped on single pod
+
+
+def test_spec_for_divisibility():
+    # kv_heads=8 can't shard 16 ways -> replicated
+    s = spec_for(("batch", "kv_heads", None), mesh=FakeMesh(),
+                 shape=(256, 8, 128))
+    assert s == P("data", None, None)
+    # batch=1 (long_500k) stays unsharded
+    s = spec_for(("batch", None), mesh=FakeMesh(), shape=(1, 64))
+    assert s == P(None, None)
+
+
+def test_fit_spec():
+    s = fit_spec(P(None, "model"), (4, 1500), mesh=FakeMesh())
+    assert s == P(None, None)                # 1500 % 16 != 0
+    s = fit_spec(P(None, "model"), (4, 1600), mesh=FakeMesh())
+    assert s == P(None, "model")
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess():
+    """One real dry-run cell: 256 virtual devices, lower+compile."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "hymba-1.5b", "--shape", "decode_32k"],
+        capture_output=True, text=True, timeout=500,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root"},
+        cwd=__file__.rsplit("/tests", 1)[0])
+    assert "1 ok, 0 skipped, 0 failed" in out.stdout, out.stdout + out.stderr

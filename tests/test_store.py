@@ -1,0 +1,152 @@
+"""F2 store behaviour: basic ops, tiering, compaction, anomalies."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (KV, OP_READ, OP_RMW, OP_UPSERT, ST_CREATED,
+                        ST_NOT_FOUND, ST_OK, compaction, store)
+from conftest import run_oracle_check, small_cfg
+
+
+def test_basic_ops():
+    kv = KV(small_cfg(), mode="f2")
+    B = 64
+    keys = np.arange(B, dtype=np.int32)
+    vals = np.stack([keys, keys * 2], 1).astype(np.int32)
+    st, _ = kv.upsert(keys, vals)
+    assert np.all(np.asarray(st) == ST_OK)
+    st, rv = kv.read(keys)
+    assert np.all(np.asarray(st) == ST_OK)
+    assert np.array_equal(np.asarray(rv), vals)
+    kv.rmw(keys, np.ones((B, 2), np.int32))
+    _, rv = kv.read(keys)
+    assert np.array_equal(np.asarray(rv), vals + 1)
+    kv.delete(keys[:32])
+    st, _ = kv.read(keys)
+    assert np.all(np.asarray(st)[:32] == ST_NOT_FOUND)
+    assert np.all(np.asarray(st)[32:] == ST_OK)
+
+
+def test_rmw_creates_and_accumulates_intra_batch():
+    kv = KV(small_cfg(), mode="f2")
+    keys = np.zeros(64, np.int32)          # same key, 64 RMWs in one batch
+    deltas = np.ones((64, 2), np.int32)
+    st, _ = kv.rmw(keys, deltas)
+    assert np.all(np.asarray(st) == ST_CREATED)
+    st, rv = kv.read(keys[:1].repeat(64))
+    assert np.asarray(rv)[0, 0] == 64      # all deltas applied in order
+
+
+def test_f2_oracle_with_compactions():
+    rng = np.random.default_rng(1)
+    kv = KV(small_cfg(hot_capacity=1 << 10, hot_mem=1 << 7,
+                      cold_capacity=1 << 11, cold_mem=1 << 6,
+                      chunklog_capacity=1 << 9, chunklog_mem=1 << 5),
+            mode="f2", trigger=0.6, compact_frac=0.4, compact_batch=256)
+    run_oracle_check(kv, rng, 150, 500)
+    assert kv.compactions > 5
+    assert int(kv.state.cold_truncs) > 0   # cold-cold compaction exercised
+
+
+@pytest.mark.parametrize("fc", ["scan", "lookup"])
+def test_faster_oracle(fc):
+    rng = np.random.default_rng(2)
+    kv = KV(small_cfg(cold_capacity=2, cold_mem=1, n_chunks=2,
+                      chunklog_capacity=2, chunklog_mem=1, rc_capacity=1,
+                      chain_max=64),
+            mode="faster", faster_compaction=fc, trigger=0.6,
+            compact_frac=0.4, compact_batch=256)
+    run_oracle_check(kv, rng, 80, 300)
+    assert kv.compactions > 0
+
+
+def test_conditional_insert_semantics():
+    """ConditionalInsert aborts iff a newer matching record exists in
+    (START, TAIL] — paper S5.1."""
+    import functools, jax
+    cfg = small_cfg()
+    kv = KV(cfg, mode="f2")
+    keys = np.arange(8, dtype=np.int32)
+    kv.upsert(keys, np.ones((8, 2), np.int32))
+    st0 = kv.state
+    addr_of = {int(st0.hot.key[a]): a for a in range(8)}
+    ci = jax.jit(functools.partial(compaction.conditional_insert_hot, cfg))
+    mask = jnp.ones(8, bool)
+    vals = jnp.full((8, 2), 7, jnp.int32)
+    # start = own address => no newer record => all succeed
+    starts = jnp.asarray([addr_of[int(k)] for k in keys], jnp.int32)
+    state, ok = ci(st0, mask, jnp.asarray(keys), vals, starts)
+    assert bool(jnp.all(ok))
+    # retry from the OLD start: newer records now exist => all abort
+    state2, ok2 = ci(state, mask, jnp.asarray(keys), vals, starts)
+    assert not bool(jnp.any(ok2))
+    assert int(state2.hot.tail) == int(state.hot.tail)
+
+
+def test_false_absence_anomaly_fix():
+    """Fig 8: a read snapshot taken before a cold-cold truncation must
+    still find the relocated record via the num_truncs re-traversal."""
+    import jax
+    cfg = small_cfg(rc_capacity=1)
+    # donate=False: the snapshot must outlive the concurrent compaction
+    kv = KV(cfg, mode="f2", trigger=2.0, donate=False)
+    keys = np.arange(64, dtype=np.int32)
+    kv.upsert(keys, np.ones((64, 2), np.int32))
+    # push everything to the cold log
+    kv.compact_hot_cold(int(kv.state.hot.tail))
+    assert int(kv.state.cold.tail) > 0
+    # phase 1: snapshot reads
+    state, snap = store.read_begin(cfg, kv.state, jnp.asarray(keys),
+                                   jnp.ones(64, bool))
+    kv.state = state
+    # concurrent cold-cold compaction + truncation (relocates records)
+    kv.compact_cold_cold(int(kv.state.cold.tail) - int(kv.state.cold.begin))
+    assert int(kv.state.cold_truncs) == 1
+    # phase 2: without the fix these reads would return NOT_FOUND
+    state, st, rv = store.read_finish(cfg, kv.state, snap)
+    assert np.all(np.asarray(st) == ST_OK)
+    assert np.all(np.asarray(rv)[:, 0] == 1)
+
+
+def test_read_cache_serves_cold_records():
+    cfg = small_cfg()
+    kv = KV(cfg, mode="f2", trigger=2.0)
+    # enough keys that the OLDEST cold records sit below the cold log's
+    # in-memory window (RC only admits stable-tier reads, paper S7.1)
+    keys = np.arange(512, dtype=np.int32)
+    for off in range(0, 512, 128):
+        kv.upsert(keys[off:off + 128], np.ones((128, 2), np.int32))
+    kv.compact_hot_cold(int(kv.state.hot.tail))   # all records now cold
+    target = keys[:64]                            # oldest = stable-resident
+    io0 = kv.io_stats()
+    kv.read(target)                               # misses -> RC admission
+    io1 = kv.io_stats()
+    assert io1["read_ops"] > io0["read_ops"]      # cold reads cost I/O
+    kv.read(target)                               # now served by the RC
+    io2 = kv.io_stats()
+    assert io2["read_ops"] - io1["read_ops"] < (io1["read_ops"] - io0["read_ops"]) / 2
+    st, rv = kv.read(target)
+    assert np.all(np.asarray(st) == ST_OK)
+
+
+def test_rc_invalidation_on_write():
+    """An RC replica must never serve a stale value after an upsert."""
+    cfg = small_cfg()
+    kv = KV(cfg, mode="f2", trigger=2.0)
+    keys = np.arange(32, dtype=np.int32)
+    kv.upsert(keys, np.ones((32, 2), np.int32))
+    kv.compact_hot_cold(int(kv.state.hot.tail))
+    kv.read(keys)                                  # populate RC
+    kv.upsert(keys, np.full((32, 2), 9, np.int32))  # must invalidate RC
+    st, rv = kv.read(keys)
+    assert np.all(np.asarray(rv) == 9)
+
+
+def test_two_level_cold_index_chunklog_gc():
+    rng = np.random.default_rng(3)
+    kv = KV(small_cfg(hot_capacity=1 << 10, hot_mem=1 << 7,
+                      chunklog_capacity=1 << 9, chunklog_mem=1 << 5),
+            mode="f2", trigger=0.6, compact_frac=0.4, compact_batch=256)
+    run_oracle_check(kv, rng, 100, 600, p=(.2, .5, .2, .1))
+    # the chunk log wrapped at least once without corrupting live chunks
+    assert not bool(kv.state.cold_idx.overflowed)

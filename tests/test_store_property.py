@@ -1,0 +1,89 @@
+"""Property-based testing of the store's linearization invariants."""
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (KV, OP_DELETE, OP_READ, OP_RMW, OP_UPSERT,
+                        ST_NOT_FOUND, ST_OK)
+from conftest import small_cfg
+
+_OPS = st.sampled_from([OP_READ, OP_UPSERT, OP_RMW, OP_DELETE])
+
+
+@st.composite
+def batches(draw):
+    n_batches = draw(st.integers(2, 5))
+    out = []
+    for _ in range(n_batches):
+        keys = draw(st.lists(st.integers(0, 40), min_size=16, max_size=16))
+        ops = draw(st.lists(_OPS, min_size=16, max_size=16))
+        vals = draw(st.lists(st.integers(0, 50), min_size=16, max_size=16))
+        out.append((keys, ops, vals))
+    return out
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(batches())
+def test_store_matches_sequential_oracle(bs):
+    """For any op sequence: reads = snapshot state; writes apply in batch
+    order; RMWs accumulate; deletes tombstone — against a dict oracle."""
+    kv = KV(small_cfg(hot_capacity=1 << 9, hot_mem=1 << 6,
+                      rc_capacity=1 << 5),
+            mode="f2", trigger=0.5, compact_frac=0.5, compact_batch=64,
+            donate=False)
+    V = kv.cfg.value_width
+    ref = {}
+    for keys, ops, vals in bs:
+        keys = np.asarray(keys, np.int32)
+        ops = np.asarray(ops, np.int32)
+        v = np.stack([np.asarray(vals, np.int32)] * V, axis=1)
+        stt, rv = kv.apply(keys, ops, v)
+        stt, rv = np.asarray(stt), np.asarray(rv)
+        for i in range(len(keys)):
+            if ops[i] == OP_READ:
+                k = int(keys[i])
+                if k in ref:
+                    assert stt[i] == ST_OK
+                    assert np.array_equal(rv[i], ref[k]), (k, rv[i], ref[k])
+                else:
+                    assert stt[i] == ST_NOT_FOUND
+        for i in range(len(keys)):
+            k, o = int(keys[i]), int(ops[i])
+            if o == OP_UPSERT:
+                ref[k] = v[i].copy()
+            elif o == OP_DELETE:
+                ref.pop(k, None)
+            elif o == OP_RMW:
+                ref[k] = (ref.get(k, np.zeros(V, np.int32)) + v[i]).astype(np.int32)
+    kv.check_invariants()
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(st.integers(0, 30), min_size=8, max_size=8),
+       st.integers(0, 3))
+def test_compaction_preserves_state(keys, n_compactions):
+    """Any interleaving of hot-cold / cold-cold compactions never changes
+    the visible key-value state."""
+    kv = KV(small_cfg(rc_capacity=1 << 5), mode="f2", trigger=2.0,
+            donate=False)
+    keys = np.asarray(keys, np.int32)
+    vals = np.stack([keys, keys + 1], 1).astype(np.int32)
+    kv.upsert(np.pad(keys, (0, 8), mode="edge"),
+              np.pad(vals, ((0, 8), (0, 0)), mode="edge"))
+    before = {int(k): np.asarray(v) for k, v in
+              zip(keys, np.asarray(kv.read(np.pad(keys, (0, 8), "edge"))[1]))}
+    for i in range(n_compactions):
+        if i % 2 == 0:
+            kv.compact_hot_cold(max(int(kv.state.hot.tail)
+                                    - int(kv.state.hot.begin), 0) or None)
+        else:
+            n = int(kv.state.cold.tail) - int(kv.state.cold.begin)
+            if n > 0:
+                kv.compact_cold_cold(n)
+    st2, rv2 = kv.read(np.pad(keys, (0, 8), "edge"))
+    assert np.all(np.asarray(st2)[:len(keys)] == ST_OK)
+    for i, k in enumerate(keys):
+        assert np.array_equal(np.asarray(rv2)[i], before[int(k)])
+    kv.check_invariants()

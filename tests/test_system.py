@@ -1,0 +1,52 @@
+"""End-to-end behaviour of the paper's system (F2) at benchmark scale:
+loads a dataset, runs a skewed mixed workload through the tiered store,
+and checks the headline properties the paper claims."""
+import numpy as np
+
+from benchmarks.harness import (Zipf, load_store, make_f2_config,
+                                make_faster_kv, run_workload)
+from repro.core import KV
+
+
+def test_f2_beats_faster_under_memory_pressure():
+    """The paper's core claim (Fig 10): under a 10% memory budget with a
+    skewed update-heavy workload, F2 sustains higher modeled throughput
+    and lower I/O amplification than budget-constrained FASTER."""
+    n = 1 << 14
+    zipf = Zipf(n, 0.99)
+    kv_f2 = KV(make_f2_config(n, 0.10), mode="f2", compact_batch=1024)
+    load_store(kv_f2, n, 1024)
+    r_f2 = run_workload(kv_f2, "A", zipf, n, 1024, warmup_ops=n)
+    kv_fa = make_faster_kv(n, 0.10, batch=1024)
+    load_store(kv_fa, n, 1024)
+    r_fa = run_workload(kv_fa, "A", zipf, n, 1024, warmup_ops=n)
+    kv_f2.check_invariants()
+    kv_fa.check_invariants()
+    assert r_f2.modeled_kops > r_fa.modeled_kops, (
+        r_f2.modeled_kops, r_fa.modeled_kops)
+
+
+def test_tiering_separates_hot_and_cold():
+    """After sustained skewed updates, the hot log holds a small fraction
+    of keys while the cold log holds the long tail (paper S4.2)."""
+    n = 1 << 14
+    kv = KV(make_f2_config(n, 0.10), mode="f2", compact_batch=1024)
+    load_store(kv, n, 1024)
+    run_workload(kv, "A", Zipf(n, 0.99), n, 1024)
+    hot_records = int(kv.state.hot.tail) - int(kv.state.hot.begin)
+    cold_records = int(kv.state.cold.tail) - int(kv.state.cold.begin)
+    assert cold_records > 2 * hot_records
+    # and the store still returns correct values for a key sample
+    keys = np.arange(0, n, 37, dtype=np.int32)[:1024]
+    st, _ = kv.read(np.pad(keys, (0, 1024 - len(keys)), "edge"))
+    assert np.all(np.asarray(st)[:len(keys)] == 1)  # ST_OK
+
+
+def test_memory_model_respects_budget():
+    n = 1 << 14
+    for frac in (0.05, 0.10, 0.25):
+        cfg = make_f2_config(n, frac)
+        kv = KV(cfg, mode="f2")
+        total = kv.memory_model_bytes()["total"]
+        budget = n * cfg.record_bytes * frac
+        assert total < 2.2 * budget, (frac, total, budget)
