@@ -1,0 +1,141 @@
+"""Microbenchmark: fused vs. unfused probe engine on the read hot path.
+
+Times `store.read_batch` under each probe backend across skew levels
+(zipfian thetas), on a store preloaded so reads hit every tier: hot
+in-memory records, stable-tier records, cold records, and RC replicas.
+Reports wall-clock batch reads/s per (skew, engine) as JSON.
+
+    PYTHONPATH=src python benchmarks/bench_probe.py [--tiny] [--out f.json]
+
+`--tiny` is the CI smoke mode: a minimal store, one skew level, few
+iterations, plus a `fused_pallas` interpret-mode sanity lap — it proves the
+kernel path end-to-end on any backend and seeds the perf-trajectory
+artifact that later PRs extend.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import KV, F2Config, store
+
+
+def build_store(n_keys: int, cfg: F2Config) -> KV:
+    kv = KV(cfg, mode="f2", trigger=2.0, donate=False)
+    keys = np.arange(n_keys, dtype=np.int32)
+    vals = np.stack([keys] * cfg.value_width, 1).astype(np.int32)
+    B = 1024
+    for off in range(0, n_keys, B):
+        kv.upsert(keys[off:off + B], vals[off:off + B])
+    kv.compact_hot_cold(int(kv.state.hot.tail) // 2)   # half the keys go cold
+    kv.read(keys[:: max(1, n_keys // 512)])            # seed the read cache
+    return kv
+
+
+def zipf_batches(n_keys: int, theta: float, B: int, n_batches: int,
+                 seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    if theta <= 0.01:
+        draws = rng.integers(0, n_keys, (n_batches, B))
+    else:
+        ranks = np.arange(1, n_keys + 1, dtype=np.float64)
+        p = ranks ** -theta
+        p /= p.sum()
+        draws = rng.choice(n_keys, (n_batches, B), p=p)
+    # scramble rank->key so hot keys spread over the hash space (YCSB)
+    perm = rng.permutation(n_keys)
+    return perm[draws].astype(np.int32)
+
+
+def time_engine(kv: KV, cfg: F2Config, engine: str, batches: np.ndarray,
+                repeats: int) -> dict:
+    ecfg = dataclasses.replace(cfg, engine=engine)
+    read = jax.jit(functools.partial(store.read_batch, ecfg, admit_rc=False))
+    state = kv.state
+    act = jnp.ones((batches.shape[1],), bool)
+    dev = [jnp.asarray(b) for b in batches]
+    _, status, vals = read(state, dev[0], act)          # compile
+    jax.block_until_ready((status, vals))
+    n_found = int(jnp.sum(status == 1))
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        for kb in dev:
+            _, status, vals = read(state, kb, act)
+    jax.block_until_ready((status, vals))
+    dt = time.perf_counter() - t0
+    n_ops = repeats * batches.shape[0] * batches.shape[1]
+    return dict(engine=engine, ops_per_s=n_ops / dt, seconds=dt,
+                n_ops=n_ops, found_first_batch=n_found)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke mode: minimal sizes + interpret kernel lap")
+    ap.add_argument("--out", default=None, help="write results JSON here")
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--repeats", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    if args.tiny:
+        n_keys, B, n_batches, repeats = 512, 128, 2, 1
+        thetas = [0.99]
+        cfg = F2Config(hot_index_size=1 << 9, hot_capacity=1 << 11,
+                       hot_mem=1 << 8, cold_capacity=1 << 13, cold_mem=1 << 7,
+                       n_chunks=1 << 7, chunklog_capacity=1 << 11,
+                       chunklog_mem=1 << 6, rc_capacity=1 << 7,
+                       value_width=2, chain_max=48)
+        engines = ["jnp", "fused_ref", "fused_pallas"]
+    else:
+        n_keys, B, n_batches, repeats = 1 << 15, 4096, 8, 4
+        thetas = [0.0, 0.55, 0.75, 0.99, 1.20]
+        cfg = F2Config(hot_index_size=1 << 14, hot_capacity=1 << 17,
+                       hot_mem=1 << 14, cold_capacity=1 << 18,
+                       cold_mem=1 << 10, n_chunks=1 << 10,
+                       chunklog_capacity=1 << 13, chunklog_mem=1 << 8,
+                       rc_capacity=1 << 12, value_width=2, chain_max=48)
+        engines = ["jnp", "fused"]
+    if args.batch:
+        B = args.batch
+    if args.repeats:
+        repeats = args.repeats
+
+    kv = build_store(n_keys, cfg)
+    results = dict(backend=jax.default_backend(), n_keys=n_keys, batch=B,
+                   tiny=bool(args.tiny), skews=[])
+    for theta in thetas:
+        batches = zipf_batches(n_keys, theta, B, n_batches)
+        row = dict(theta=theta, engines=[])
+        for eng in engines:
+            r = time_engine(kv, cfg, eng, batches, repeats)
+            row["engines"].append(r)
+            print(f"theta={theta:<5} engine={eng:<13} "
+                  f"{r['ops_per_s'] / 1e3:9.1f} kops/s "
+                  f"(found {r['found_first_batch']}/{B} first batch)")
+        results["skews"].append(row)
+
+    # smoke-mode sanity: every engine must agree on first-batch hit counts
+    for row in results["skews"]:
+        counts = {e["found_first_batch"] for e in row["engines"]}
+        assert len(counts) == 1, f"engines disagree at theta={row['theta']}: {counts}"
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.out}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,7 @@ class WalkResult(NamedTuple):
     mem_hits: jax.Array    # int32 scalar: in-memory record touches
     truncated: jax.Array   # bool [B] walk ended by hitting addr < lower bound
     exhausted: jax.Array   # bool [B] chain_max hops without resolution
+    hops: jax.Array        # int32 [B] per-lane record touches
 
 
 def walk(
@@ -47,7 +48,7 @@ def walk(
     B = keys.shape[0]
 
     def body(_, carry):
-        cur, done, faddr, io_b, io_o, mem_h, trunc = carry
+        cur, done, faddr, io_b, io_o, mem_h, trunc, hops = carry
         cur_is_rc = is_rc(cur)
         log_addr = jnp.where(cur_is_rc, NULL_ADDR, cur)
         in_range = jnp.where(cur_is_rc, cur != NULL_ADDR,
@@ -76,12 +77,13 @@ def walk(
         io_b = io_b + jnp.sum(is_io.astype(jnp.int32))
         io_o = io_o + jnp.sum(is_io.astype(jnp.int32))
         mem_h = mem_h + jnp.sum((live & ~is_io).astype(jnp.int32))
+        hops = hops + live.astype(jnp.int32)
 
         faddr = jnp.where(key_match, cur, faddr)
         done = done | key_match
         nxt = jnp.where(live & ~key_match, p, cur)
         nxt = jnp.where(done | ~live, cur, nxt)
-        return nxt, done, faddr, io_b, io_o, mem_h, trunc
+        return nxt, done, faddr, io_b, io_o, mem_h, trunc, hops
 
     init = (
         heads,
@@ -89,8 +91,9 @@ def walk(
         jnp.full((B,), NULL_ADDR, jnp.int32),
         jnp.int32(0), jnp.int32(0), jnp.int32(0),
         jnp.zeros((B,), jnp.bool_),
+        jnp.zeros((B,), jnp.int32),
     )
-    cur, done, faddr, io_b, io_o, mem_h, trunc = jax.lax.fori_loop(
+    cur, done, faddr, io_b, io_o, mem_h, trunc, hops = jax.lax.fori_loop(
         0, chain_max, body, init)
     cur_is_rc = is_rc(cur)
     still_in_range = jnp.where(cur_is_rc, cur != NULL_ADDR,
@@ -98,4 +101,4 @@ def walk(
     exhausted = active & ~done & still_in_range
     return WalkResult(found=done & active, addr=faddr, io_blocks=io_b,
                       io_ops=io_o, mem_hits=mem_h, truncated=trunc & ~done,
-                      exhausted=exhausted)
+                      exhausted=exhausted, hops=hops)

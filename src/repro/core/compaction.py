@@ -24,7 +24,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import chain, cold_index, groups, hybrid_log, read_cache
+from . import chain, cold_index, groups, hybrid_log, probe_engine, read_cache
 from .store import F2State, hot_slots, _merge_walk_io
 from .types import (META_INVALID, META_TOMBSTONE, NULL_ADDR, F2Config,
                     IoStats, records_to_blocks)
@@ -58,13 +58,16 @@ def conditional_insert_hot(
 ) -> Tuple[F2State, jax.Array]:
     """Append (key, val) to the hot-log tail iff no record with a matching
     key exists in (start_addr, TAIL] of the hot log; returns (state, ok[B])
-    where ok=False means the insert aborted (a newer record exists)."""
+    where ok=False means the insert aborted (a newer record exists).
+
+    The liveness probe is the read path's walk with rc_match=False (replicas
+    are not log residents), so it runs on the same fused engine."""
     slots = hot_slots(cfg, keys)
-    heads = state.hot_index[slots]
     hot_head = hybrid_log.head_addr(state.hot, cfg.hot_mem)
-    res = chain.walk(keys, heads, state.hot, lower=start_addrs + 1,
-                     head_boundary=hot_head, active=mask,
-                     chain_max=cfg.chain_max, rc=state.rc, rc_match=False)
+    res = probe_engine.probe(cfg, keys, state.hot, start_addrs + 1, hot_head,
+                             mask, index=state.hot_index, rc=state.rc,
+                             rc_match=False)
+    heads = res.heads
     stats = _merge_walk_io(state.stats, res)
     ok = mask & ~res.found
 

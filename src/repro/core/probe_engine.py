@@ -1,0 +1,184 @@
+"""Probe engine dispatch: the kernel-backend pattern for the read hot path.
+
+Every bounded chain walk in the store (hot-index probe on reads, the
+liveness probe of ConditionalInsert, the cold-chain walk) is the same
+primitive: slot hash / chain head -> bounded prev-pointer walk with a
+per-lane address lower bound -> read-cache hit check -> value resolution.
+This module gives that primitive one interface with three interchangeable,
+bit-exact backends, selected by `F2Config.engine`:
+
+    "jnp"           — the unfused path: `chain.walk` + separate gathers
+                      (the seed implementation, kept as the oracle).
+    "fused_ref"     — pure-jnp single-pass reference of the fused engine.
+    "fused_pallas"  — the Pallas kernel (`kernels.f2_probe.fused_probe`);
+                      interpret mode off-TPU.
+    "fused"         — auto (default): the Pallas kernel on TPU when the
+                      log/RC columns fit VMEM, the fused reference
+                      otherwise.
+
+All backends return the same `ProbeResult` bit-exactly, so store-level
+behaviour (statuses, values, modeled I/O) is engine-independent; the parity
+suite (tests/test_probe_engine.py) enforces this.  Later subsystems that
+want a kernel backend (cold-index chunk probe, compaction frontier scan)
+should follow this module's shape: one result type, one dispatch knob, a
+jnp oracle that stays in the tree.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.f2_probe import f2_probe as _kernel_mod
+from ..kernels.f2_probe import ops as probe_ops
+from ..kernels.f2_probe import ref as _ref_mod
+from ..kernels.f2_probe.ref import fused_probe_reference
+from . import chain, hybrid_log, read_cache
+from .types import (META_INVALID, NULL_ADDR, RC_FLAG, F2Config, hash32,
+                    is_rc, rc_untag)
+
+ENGINES = ("jnp", "fused", "fused_ref", "fused_pallas")
+
+# kernel packages are import-standalone by design (no repro.core dependency),
+# so the address/meta bit layout and the slot hash are re-declared there;
+# this module imports both sides and is where drift would break things —
+# fail loudly instead
+for _m in (_kernel_mod, _ref_mod):
+    assert _m.RC_FLAG == int(RC_FLAG), _m
+    assert _m.NULL_ADDR == int(NULL_ADDR), _m
+    assert _m.META_INVALID == int(META_INVALID), _m
+_probe_keys = jnp.asarray([0, 1, -1, 0x7FEB352D, 12345], jnp.int32)
+assert jnp.array_equal(hash32(_probe_keys), _ref_mod._mix(_probe_keys)), \
+    "kernels/f2_probe._mix diverged from types.hash32"
+
+# "fused" auto-resolution only picks the Pallas kernel when the log/RC
+# columns it keeps VMEM-resident actually fit a core's VMEM (~16 MB);
+# larger stores fall back to the fused reference until the kernel grows a
+# scalar-prefetch DMA variant (see kernels/f2_probe docstring)
+_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+class ProbeResult(NamedTuple):
+    found: jax.Array      # bool  [B] matching, valid record found
+    addr: jax.Array       # int32 [B] its address (RC-tagged for replicas)
+    heads: jax.Array      # int32 [B] resolved chain heads (index entries)
+    value: jax.Array      # int32 [B, V] record value (0 when not found)
+    meta: jax.Array       # int32 [B] record meta bitfield (0 when not found)
+    hops: jax.Array       # int32 [B] per-lane record touches
+    io_blocks: jax.Array  # int32 scalar: stable-tier blocks read
+    io_ops: jax.Array     # int32 scalar: random read ops issued
+    mem_hits: jax.Array   # int32 scalar: in-memory record touches
+    exhausted: jax.Array  # bool  [B] chain_max hops without resolution
+
+
+def _columns_fit_vmem(log: hybrid_log.LogState,
+                      rc: Optional[read_cache.RCState],
+                      n_heads: int) -> bool:
+    """n_heads: index entries (probe_index mode) or per-lane heads — the
+    kernel keeps them VMEM-resident alongside the log/RC columns."""
+    V = log.val.shape[1]
+    words = n_heads + log.key.shape[0] * (3 + V)
+    if rc is not None:
+        words += rc.key.shape[0] * (3 + V)
+    return words * 4 <= _VMEM_BUDGET_BYTES
+
+
+def _resolve(engine: str, log, rc, n_heads: int) -> str:
+    if engine == "fused":
+        if (jax.default_backend() == "tpu"
+                and _columns_fit_vmem(log, rc, n_heads)):
+            return "fused_pallas"
+        return "fused_ref"
+    if engine == "fused_pallas" and jax.default_backend() == "tpu":
+        # forcing the kernel is honored, but turn the otherwise-cryptic
+        # VMEM compile failure into an actionable error (interpret mode
+        # off-TPU has no such limit, so only compiled runs are checked)
+        assert _columns_fit_vmem(log, rc, n_heads), (
+            "engine='fused_pallas' forced but the log/RC/index columns "
+            "exceed the VMEM budget; use engine='fused' for automatic "
+            "fallback or shrink the store")
+    return engine
+
+
+def probe(
+    cfg: F2Config,
+    keys: jax.Array,            # int32 [B]
+    log: hybrid_log.LogState,
+    lower: jax.Array,           # int32 [B] per-lane lower bound
+    head_boundary: jax.Array,   # int32 scalar (I/O model boundary)
+    active: jax.Array,          # bool [B]
+    *,
+    index: Optional[jax.Array] = None,   # int32 [E]: fuse the slot probe
+    heads: Optional[jax.Array] = None,   # int32 [B]: precomputed chain heads
+    rc: Optional[read_cache.RCState] = None,
+    rc_match: bool = True,
+    engine: Optional[str] = None,
+) -> ProbeResult:
+    """One fused probe pass.  Exactly one of `index` / `heads` is given:
+    `index` fuses the hot-index slot hash + gather into the pass (read path,
+    ConditionalInsert); `heads` starts from externally resolved entries
+    (cold-index chains)."""
+    assert (index is None) != (heads is None)
+    n_heads = index.shape[0] if index is not None else heads.shape[0]
+    engine = _resolve(cfg.engine if engine is None else engine, log, rc,
+                      n_heads)
+    assert engine in ("jnp", "fused_ref", "fused_pallas"), engine
+
+    if engine == "jnp":
+        return _probe_unfused(cfg, keys, log, lower, head_boundary, active,
+                              index=index, heads=heads, rc=rc,
+                              rc_match=rc_match)
+
+    has_rc = rc is not None
+    # the kernel signature is total — absent RC becomes 1-record dummies
+    # (never dereferenced: without RC no address carries the RC tag)
+    if has_rc:
+        rck, rcv, rcp, rcm = rc.key, rc.val, rc.prev, rc.meta
+    else:
+        rck = jnp.full((1,), -1, jnp.int32)
+        rcv = jnp.zeros((1, log.val.shape[1]), jnp.int32)
+        rcp = jnp.full((1,), NULL_ADDR, jnp.int32)
+        rcm = jnp.zeros((1,), jnp.int32)
+    probe_index = index is not None
+    heads_src = index if probe_index else heads
+    args = (keys, heads_src, lower, active, head_boundary,
+            log.key, log.val, log.prev, log.meta, rck, rcv, rcp, rcm)
+    kw = dict(chain_max=cfg.chain_max, rc_match=rc_match, has_rc=has_rc,
+              probe_index=probe_index)
+    if engine == "fused_pallas":
+        out = probe_ops.fused_probe(*args, **kw)
+    else:
+        out = fused_probe_reference(*args, **kw)
+    found, addr, heads_out, value, meta, hops, ios, exhausted = out
+    n_io = jnp.sum(ios)
+    return ProbeResult(found=found, addr=addr, heads=heads_out, value=value,
+                       meta=meta, hops=hops, io_blocks=n_io, io_ops=n_io,
+                       mem_hits=jnp.sum(hops) - n_io, exhausted=exhausted)
+
+
+def _probe_unfused(cfg, keys, log, lower, head_boundary, active, *,
+                   index, heads, rc, rc_match) -> ProbeResult:
+    """The seed read path, repackaged: walk then gather.  Kept bit-exact as
+    the oracle the fused backends are tested against.  (With RC admission
+    on, read_batch re-gathers the RC for p_rc — one redundant gather on
+    this debugging path; accepted rather than widening every backend's
+    interface with a `prev` output.)"""
+    if heads is None:
+        slots = (hash32(keys) & jnp.uint32(index.shape[0] - 1)).astype(jnp.int32)
+        heads = index[slots]
+    res = chain.walk(keys, heads, log, lower, head_boundary, active,
+                     cfg.chain_max, rc=rc, rc_match=rc_match)
+    hit_rc = res.found & is_rc(res.addr)
+    hit_log = res.found & ~hit_rc
+    _, v_log, _, m_log = hybrid_log.gather(log, jnp.where(hit_log, res.addr, 0))
+    value = jnp.where(hit_log[:, None], v_log, 0)
+    meta = jnp.where(hit_log, m_log, 0)
+    if rc is not None:
+        _, v_rc, _, m_rc = read_cache.gather(rc, rc_untag(res.addr))
+        value = jnp.where(hit_rc[:, None], v_rc, value)
+        meta = jnp.where(hit_rc, m_rc, meta)
+    return ProbeResult(found=res.found, addr=res.addr, heads=heads,
+                       value=value, meta=meta, hops=res.hops,
+                       io_blocks=res.io_blocks, io_ops=res.io_ops,
+                       mem_hits=res.mem_hits, exhausted=res.exhausted)

@@ -17,7 +17,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import chain, cold_index, groups, hybrid_log, read_cache
+from . import chain, cold_index, groups, hybrid_log, probe_engine, read_cache
 from .types import (META_INVALID, META_TOMBSTONE, NULL_ADDR, OP_DELETE,
                     OP_NOOP, OP_READ, OP_RMW, OP_UPSERT, ST_CREATED, ST_NONE,
                     ST_NOT_FOUND, ST_OK, F2Config, IoStats, hash32, is_rc,
@@ -54,7 +54,8 @@ def hot_slots(cfg: F2Config, keys: jax.Array) -> jax.Array:
     return (hash32(keys) & jnp.uint32(cfg.hot_index_size - 1)).astype(jnp.int32)
 
 
-def _merge_walk_io(stats: IoStats, res: chain.WalkResult) -> IoStats:
+def _merge_walk_io(stats: IoStats, res) -> IoStats:
+    """res: chain.WalkResult or probe_engine.ProbeResult (same io fields)."""
     stats = stats.add_reads(res.io_blocks, res.io_ops)
     return stats.add_mem_hits(res.mem_hits)
 
@@ -69,20 +70,20 @@ def read_batch(
 ) -> Tuple[F2State, jax.Array, jax.Array]:
     """Returns (state, status[B], values[B, V])."""
     B = keys.shape[0]
-    slots = hot_slots(cfg, keys)
-    heads = state.hot_index[slots]
     hot_head = hybrid_log.head_addr(state.hot, cfg.hot_mem)
     lower = jnp.broadcast_to(state.hot.begin, (B,))
 
-    res_h = chain.walk(keys, heads, state.hot, lower, hot_head, active,
-                       cfg.chain_max, rc=state.rc, rc_match=True)
+    # fused probe: slot hash -> index gather -> chain walk -> RC check ->
+    # value resolution, one engine pass (backend per cfg.engine)
+    res_h = probe_engine.probe(cfg, keys, state.hot, lower, hot_head, active,
+                               index=state.hot_index, rc=state.rc,
+                               rc_match=True)
+    heads = res_h.heads
     stats = _merge_walk_io(state.stats, res_h)
 
     hit_rc = res_h.found & is_rc(res_h.addr)
-    hit_log = res_h.found & ~is_rc(res_h.addr)
-    _, v_log, _, m_log = hybrid_log.gather(state.hot, jnp.where(hit_log, res_h.addr, 0))
-    _, v_rc, p_rc, _ = read_cache.gather(state.rc, rc_untag(res_h.addr))
-    tomb_hot = hit_log & ((m_log & META_TOMBSTONE) != 0)
+    hit_log = res_h.found & ~hit_rc
+    tomb_hot = hit_log & ((res_h.meta & META_TOMBSTONE) != 0)
     ok_hot = hit_rc | (hit_log & ~tomb_hot)
 
     # --- cold phase for hot misses (tombstones terminate the search) --------
@@ -91,16 +92,14 @@ def read_batch(
                                              cold_active, stats)
     cold_head = hybrid_log.head_addr(state.cold, cfg.cold_mem)
     lower_c = jnp.broadcast_to(state.cold.begin, (B,))
-    res_c = chain.walk(keys, entries, state.cold, lower_c, cold_head,
-                       cold_active, cfg.chain_max, rc=None)
+    res_c = probe_engine.probe(cfg, keys, state.cold, lower_c, cold_head,
+                               cold_active, heads=entries, rc=None)
     stats = _merge_walk_io(stats, res_c)
-    _, v_cold, _, m_cold = hybrid_log.gather(state.cold, jnp.where(res_c.found, res_c.addr, 0))
-    tomb_cold = res_c.found & ((m_cold & META_TOMBSTONE) != 0)
+    tomb_cold = res_c.found & ((res_c.meta & META_TOMBSTONE) != 0)
     ok_cold = res_c.found & ~tomb_cold
 
-    vals = jnp.where(hit_rc[:, None], v_rc,
-                     jnp.where(ok_hot[:, None], v_log,
-                               jnp.where(ok_cold[:, None], v_cold, 0)))
+    vals = jnp.where(ok_hot[:, None], res_h.value,
+                     jnp.where(ok_cold[:, None], res_c.value, 0))
     found = ok_hot | ok_cold
     status = jnp.where(found, ST_OK, jnp.where(active, ST_NOT_FOUND, ST_NONE))
 
@@ -113,6 +112,8 @@ def read_batch(
                  (ok_cold & (res_c.addr < cold_head)))
         admit = admit & ~is_rc(heads)            # one RC record per chain
         # --- second chance: RC hits in the read-only region re-insert -------
+        # (the RC continuation pointer is only needed here, not per-read)
+        _, _, p_rc, _ = read_cache.gather(rc, rc_untag(res_h.addr))
         rc_ro = read_cache.read_only_addr(rc, cfg.rc_mutable_frac)
         sc = hit_rc & (rc_untag(res_h.addr) < rc_ro)
         rc = read_cache.invalidate(rc, sc, rc_untag(res_h.addr))

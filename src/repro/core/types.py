@@ -131,6 +131,13 @@ class F2Config:
     # execution
     value_width: int = 2                   # int32 words per value
     chain_max: int = 24                    # bounded hash-chain walk length
+    engine: str = "fused"                  # read-probe backend (probe_engine):
+                                           # "fused" (Pallas on TPU when the
+                                           # store fits VMEM, jnp reference
+                                           # elsewhere), "jnp" (unfused seed
+                                           # path), "fused_ref",
+                                           # "fused_pallas" (forced; asserts
+                                           # VMEM fit on TPU)
     # modeled record geometry for the I/O model (bytes)
     key_bytes: int = 8
     header_bytes: int = 8
@@ -158,6 +165,8 @@ class F2Config:
         assert self.hot_mem <= self.hot_capacity
         assert self.cold_mem <= self.cold_capacity
         assert self.chunklog_mem <= self.chunklog_capacity
+        assert self.engine in ("jnp", "fused", "fused_ref", "fused_pallas"), \
+            f"unknown engine {self.engine!r}"
 
 
 def records_to_blocks(n_records: jax.Array, record_bytes: int) -> jax.Array:

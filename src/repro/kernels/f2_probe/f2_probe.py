@@ -1,15 +1,22 @@
-"""Pallas TPU kernel for the F2 hash-index probe.
+"""Pallas TPU kernels for the F2 read hot path.
 
-The hot-log hash index is VMEM-resident by design (the paper keeps it
-entirely in DRAM; the TPU analogue of "always-in-memory, cacheline
-buckets" is VMEM tiles).  The kernel fuses, per batch tile:
+Two kernels:
 
-    mix(key) -> slot -> entry gather -> RC-flag decode -> validity mask
+  * `probe` — the original first-hop kernel (slot hash -> index gather ->
+    RC decode), index-tiled so VMEM pressure stays (B_tile + E_tile).
+  * `fused_probe` — the full probe engine: for a batch tile of keys it
+    fuses slot hash -> hot-index gather -> bounded chain walk with per-hop
+    address lower bounds (resolving records from the log ring *or* the
+    read cache via RC-tagged addresses) -> value/meta resolution, emitting
+    (found, addr, heads, value, meta, hops, ios, exhausted) in one pass.
 
-i.e. the first hop of every chain walk, which dominates read latency for
-in-memory hits.  Grid: batch tiles x index tiles; a probe only reads the
-index tile its slot falls into (pl.when guards), so VMEM pressure stays
-(B_tile + E_tile), not E.
+The fused kernel keeps the log/read-cache columns (key, prev, meta, val)
+fully VMEM-resident per grid step and tiles only the key batch: the walk's
+gathers are data-dependent, so log blocking would need scalar-prefetched
+DMA per hop — the right trade once logs outgrow VMEM (~16 MB/core), noted
+as future work in README.md.  Grid: (B // b_tile,).  I/O accounting mirrors
+`core.chain.walk`: every live hop below `head_boundary` is one modeled
+4 KiB random block read; the rest are memory-tier touches.
 """
 from __future__ import annotations
 
@@ -19,18 +26,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-RC_FLAG = 1 << 30
+from .ref import META_INVALID, NULL_ADDR, RC_FLAG, _mix, fused_probe_body
 
 
-def _mix(x):
-    x = x.astype(jnp.uint32)
-    x = x ^ (x >> 16)
-    x = x * jnp.uint32(0x7FEB352D)
-    x = x ^ (x >> 15)
-    x = x * jnp.uint32(0x846CA68B)
-    x = x ^ (x >> 16)
-    return x
-
+# ---------------------------------------------------------------------------
+# First-hop probe (legacy kernel, index-tiled)
+# ---------------------------------------------------------------------------
 
 def _probe_kernel(keys_ref, index_ref, addr_ref, isrc_ref, *,
                   e_tile: int, index_size: int):
@@ -79,3 +80,95 @@ def probe(keys, index_addr, *, b_tile: int = 1024, e_tile: int = 1 << 16,
         ],
         interpret=interpret,
     )(keys, index_addr)
+
+
+# ---------------------------------------------------------------------------
+# Fused probe engine (slot hash -> chain walk -> RC check -> value)
+# ---------------------------------------------------------------------------
+
+def _fused_kernel(keys_ref, heads_ref, lower_ref, active_ref, hb_ref,
+                  log_key_ref, log_val_ref, log_prev_ref, log_meta_ref,
+                  rc_key_ref, rc_val_ref, rc_prev_ref, rc_meta_ref,
+                  found_ref, addr_ref, heads_out_ref, val_ref, meta_ref,
+                  hops_ref, ios_ref, exh_ref, *,
+                  chain_max: int, rc_match: bool, has_rc: bool,
+                  probe_index: bool):
+    # load the VMEM blocks into arrays, then run the shared walk body —
+    # kernel and jnp reference execute literally the same code
+    found, faddr, heads, value, meta, hops, ios, exhausted = fused_probe_body(
+        keys_ref[...], heads_ref[...], lower_ref[...], active_ref[...] != 0,
+        hb_ref[0],
+        log_key_ref[...], log_val_ref[...], log_prev_ref[...],
+        log_meta_ref[...],
+        rc_key_ref[...], rc_val_ref[...], rc_prev_ref[...], rc_meta_ref[...],
+        chain_max=chain_max, rc_match=rc_match, has_rc=has_rc,
+        probe_index=probe_index)
+    found_ref[...] = found.astype(jnp.int32)
+    addr_ref[...] = faddr
+    heads_out_ref[...] = heads
+    val_ref[...] = value
+    meta_ref[...] = meta
+    hops_ref[...] = hops
+    ios_ref[...] = ios
+    exh_ref[...] = exhausted.astype(jnp.int32)
+
+
+def fused_probe(keys, heads_src, lower, active, head_boundary,
+                log_key, log_val, log_prev, log_meta,
+                rc_key, rc_val, rc_prev, rc_meta, *,
+                chain_max: int, rc_match: bool = True, has_rc: bool = True,
+                probe_index: bool = True, b_tile: int = 1024,
+                interpret: bool = False):
+    """Fused probe over a key batch.  Shapes as in `ref.fused_probe_reference`;
+    `active` and the returned found/exhausted are int32 masks (0/1) at this
+    layer.  Returns (found, addr, heads, value, meta, hops, ios, exhausted).
+    """
+    B = keys.shape[0]
+    C = log_key.shape[0]
+    R = rc_key.shape[0]
+    V = log_val.shape[1]
+    E = heads_src.shape[0] if probe_index else B
+    assert (C & (C - 1)) == 0 and (R & (R - 1)) == 0
+    b_tile = min(b_tile, B)
+    assert B % b_tile == 0
+    grid = (B // b_tile,)
+
+    lane = pl.BlockSpec((b_tile,), lambda bi: (bi,))
+
+    def full(shape):
+        return pl.BlockSpec(shape, lambda bi: (0,) * len(shape))
+
+    heads_spec = full((E,)) if probe_index else lane
+    kernel = functools.partial(
+        _fused_kernel, chain_max=chain_max, rc_match=rc_match, has_rc=has_rc,
+        probe_index=probe_index)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            lane,                 # keys
+            heads_spec,           # index or per-lane heads
+            lane,                 # lower
+            lane,                 # active
+            full((1,)),           # head_boundary
+            full((C,)), full((C, V)), full((C,)), full((C,)),   # log columns
+            full((R,)), full((R, V)), full((R,)), full((R,)),   # rc columns
+        ],
+        out_specs=[
+            lane, lane, lane, pl.BlockSpec((b_tile, V), lambda bi: (bi, 0)),
+            lane, lane, lane, lane,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.int32),      # found
+            jax.ShapeDtypeStruct((B,), jnp.int32),      # addr
+            jax.ShapeDtypeStruct((B,), jnp.int32),      # heads
+            jax.ShapeDtypeStruct((B, V), jnp.int32),    # value
+            jax.ShapeDtypeStruct((B,), jnp.int32),      # meta
+            jax.ShapeDtypeStruct((B,), jnp.int32),      # hops
+            jax.ShapeDtypeStruct((B,), jnp.int32),      # ios
+            jax.ShapeDtypeStruct((B,), jnp.int32),      # exhausted
+        ],
+        interpret=interpret,
+    )(keys, heads_src, lower, active, head_boundary,
+      log_key, log_val, log_prev, log_meta,
+      rc_key, rc_val, rc_prev, rc_meta)

@@ -1,12 +1,19 @@
-"""jit'd wrapper for the F2 index probe kernel."""
+"""jit'd wrappers for the F2 probe kernels.
+
+`fused_probe` pads the key batch up to a tile multiple with inactive lanes
+(inactive lanes emit found=0, hops=0 and contribute nothing to the modeled
+I/O sums), so callers may pass any batch size.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
+from .f2_probe import fused_probe as _fused_kernel
 from .f2_probe import probe as _kernel
-from .ref import probe_reference
+from .ref import fused_probe_reference, probe_reference
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -15,4 +22,42 @@ def probe(keys, index_addr, *, interpret: bool | None = None):
     return _kernel(keys, index_addr, interpret=itp)
 
 
+def fused_probe(keys, heads_src, lower, active, head_boundary,
+                log_key, log_val, log_prev, log_meta,
+                rc_key, rc_val, rc_prev, rc_meta, *,
+                chain_max: int, rc_match: bool = True, has_rc: bool = True,
+                probe_index: bool = True, b_tile: int = 1024,
+                interpret: bool | None = None):
+    """Callable under an outer jit.  Boolean masks in/out; pads B to a tile
+    multiple.  Returns (found, addr, heads, value, meta, hops, ios,
+    exhausted) exactly like `ref.fused_probe_reference`."""
+    itp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    B = keys.shape[0]
+    bt = min(b_tile, B)
+    pad = (-B) % bt
+
+    def pad1(x, fill=0):
+        return jnp.pad(x, (0, pad), constant_values=fill) if pad else x
+
+    keys_p = pad1(keys)
+    lower_p = pad1(lower)
+    active_p = pad1(active.astype(jnp.int32))
+    heads_p = heads_src if probe_index else pad1(heads_src, fill=-1)
+    hb = jnp.reshape(head_boundary.astype(jnp.int32), (1,))
+
+    out = _fused_kernel(
+        keys_p, heads_p, lower_p, active_p, hb,
+        log_key, log_val, log_prev, log_meta,
+        rc_key, rc_val, rc_prev, rc_meta,
+        chain_max=chain_max, rc_match=rc_match, has_rc=has_rc,
+        probe_index=probe_index, b_tile=bt, interpret=itp)
+    found, addr, heads, value, meta, hops, ios, exhausted = out
+    if pad:
+        found, addr, heads, meta, hops, ios, exhausted = (
+            x[:B] for x in (found, addr, heads, meta, hops, ios, exhausted))
+        value = value[:B]
+    return (found != 0, addr, heads, value, meta, hops, ios, exhausted != 0)
+
+
 probe_ref = probe_reference
+fused_probe_ref = fused_probe_reference

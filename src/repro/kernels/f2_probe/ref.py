@@ -1,20 +1,142 @@
-"""Pure-jnp oracle for the F2 index probe."""
+"""Pure-jnp oracles for the F2 probe kernels.
+
+Two levels:
+
+  * `probe_reference` — the original first-hop oracle (slot hash -> index
+    gather -> RC decode), kept for the legacy `probe` kernel.
+  * `fused_probe_reference` — the full fused engine oracle: slot hash ->
+    index gather -> bounded chain walk with per-hop lower bounds (resolving
+    both log and read-cache records) -> value/meta resolution.  This is the
+    `interpret`/reference fallback of the Pallas engine and is bit-exact
+    with `core.chain.walk` + the store's unfused gather sequence.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
+from jax import lax
 
 RC_FLAG = 1 << 30
+NULL_ADDR = -1
+META_INVALID = 2
 
 
-def probe_reference(keys, index_addr):
-    x = keys.astype(jnp.uint32)
+def _mix(x):
+    x = x.astype(jnp.uint32)
     x = x ^ (x >> 16)
     x = x * jnp.uint32(0x7FEB352D)
     x = x ^ (x >> 15)
     x = x * jnp.uint32(0x846CA68B)
     x = x ^ (x >> 16)
-    slot = (x & jnp.uint32(index_addr.shape[0] - 1)).astype(jnp.int32)
+    return x
+
+
+def probe_reference(keys, index_addr):
+    slot = (_mix(keys) & jnp.uint32(index_addr.shape[0] - 1)).astype(jnp.int32)
     entry = index_addr[slot]
     is_rc = ((entry >= 0) & ((entry & RC_FLAG) != 0)).astype(jnp.int32)
     untagged = jnp.where(entry >= 0, entry & ~jnp.int32(RC_FLAG), entry)
     return untagged, is_rc
+
+
+def fused_probe_body(
+    keys,                 # int32 [B]
+    heads_src,            # int32 [E] hot index if probe_index else [B] heads
+    lower,                # int32 [B] per-lane address lower bound
+    active,               # bool  [B]
+    head_boundary,        # int32 scalar: first in-memory address (I/O model)
+    log_key, log_val, log_prev, log_meta,   # [C], [C,V], [C], [C]
+    rc_key, rc_val, rc_prev, rc_meta,       # [R], [R,V], [R], [R]
+    *,
+    chain_max: int,
+    rc_match: bool = True,
+    has_rc: bool = True,
+    probe_index: bool = True,
+):
+    """Returns (found, addr, heads, value, meta, hops, ios, exhausted).
+
+    found [B] bool; addr [B] int32 (RC-tagged when the hit is a replica);
+    heads [B] int32 the resolved chain heads; value [B, V] / meta [B] of the
+    hit record (0 when not found); hops/ios [B] int32 per-lane record
+    touches / stable-tier touches; exhausted [B] bool.
+
+    Plain-array single source of truth for the fused walk: the Pallas
+    kernel loads its VMEM blocks and calls this same body, so kernel and
+    reference cannot drift apart.
+    """
+    B = keys.shape[0]
+    C = log_key.shape[0]
+    R = rc_key.shape[0]
+
+    if probe_index:
+        E = heads_src.shape[0]
+        slot = (_mix(keys) & jnp.uint32(E - 1)).astype(jnp.int32)
+        heads = heads_src[slot]
+    else:
+        heads = heads_src
+
+    null = jnp.int32(NULL_ADDR)
+    rc_flag = jnp.int32(RC_FLAG)
+
+    def body(_, carry):
+        cur, done, faddr, hops, ios = carry
+        cur_is_rc = (cur >= 0) & ((cur & rc_flag) != 0)
+        log_addr = jnp.where(cur_is_rc, null, cur)
+        in_range = jnp.where(cur_is_rc, cur != null,
+                             (cur != null) & (cur >= lower))
+        live = active & ~done & in_range
+
+        log_idx = jnp.maximum(log_addr, 0) & jnp.int32(C - 1)
+        k = log_key[log_idx]
+        p = log_prev[log_idx]
+        m = log_meta[log_idx]
+        if has_rc:
+            rc_idx = jnp.maximum(cur & ~rc_flag, 0) & jnp.int32(R - 1)
+            k = jnp.where(cur_is_rc, rc_key[rc_idx], k)
+            p = jnp.where(cur_is_rc, rc_prev[rc_idx], p)
+            m = jnp.where(cur_is_rc, rc_meta[rc_idx], m)
+
+        valid = (m & jnp.int32(META_INVALID)) == 0
+        key_match = live & valid & (k == keys)
+        if not rc_match:
+            key_match = key_match & ~cur_is_rc
+        is_io = live & ~cur_is_rc & (cur < head_boundary)
+        ios = ios + is_io.astype(jnp.int32)
+        hops = hops + live.astype(jnp.int32)
+
+        faddr = jnp.where(key_match, cur, faddr)
+        done = done | key_match
+        nxt = jnp.where(live & ~key_match, p, cur)
+        nxt = jnp.where(done | ~live, cur, nxt)
+        return nxt, done, faddr, hops, ios
+
+    init = (
+        heads,
+        jnp.zeros((B,), jnp.bool_),
+        jnp.full((B,), NULL_ADDR, jnp.int32),
+        jnp.zeros((B,), jnp.int32),
+        jnp.zeros((B,), jnp.int32),
+    )
+    cur, done, faddr, hops, ios = lax.fori_loop(0, chain_max, body, init)
+
+    cur_is_rc = (cur >= 0) & ((cur & rc_flag) != 0)
+    still_in_range = jnp.where(cur_is_rc, cur != null,
+                               (cur != null) & (cur >= lower))
+    exhausted = active & ~done & still_in_range
+    found = done & active
+
+    # --- value/meta resolution at the hit address ---------------------------
+    f_is_rc = (faddr >= 0) & ((faddr & rc_flag) != 0)
+    log_idx = jnp.maximum(jnp.where(f_is_rc, null, faddr), 0) & jnp.int32(C - 1)
+    value = log_val[log_idx]
+    meta = log_meta[log_idx]
+    if has_rc:
+        rc_idx = jnp.maximum(faddr & ~rc_flag, 0) & jnp.int32(R - 1)
+        value = jnp.where(f_is_rc[:, None], rc_val[rc_idx], value)
+        meta = jnp.where(f_is_rc, rc_meta[rc_idx], meta)
+    value = jnp.where(found[:, None], value, 0)
+    meta = jnp.where(found, meta, 0)
+
+    return found, faddr, heads, value, meta, hops, ios, exhausted
+
+
+fused_probe_reference = fused_probe_body

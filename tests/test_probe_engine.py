@@ -1,0 +1,174 @@
+"""Parity suite for the fused probe engine (ISSUE 1 acceptance).
+
+Every backend of `core.probe_engine` — the unfused seed path ("jnp"), the
+pure-jnp fused reference ("fused_ref"), and the Pallas kernel in interpret
+mode ("fused_pallas") — must produce bit-exact (found, addr, value, meta,
+hops, io totals) on the same store state, across ≥3 key distributions
+including the adversarial all-colliding-slot batch, and the store-level
+read path must be engine-independent.
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import KV, compaction, hybrid_log, probe_engine, store
+from repro.core.types import IoStats, hash32
+from repro.core import cold_index
+from conftest import small_cfg
+
+ENGINES = ("jnp", "fused_ref", "fused_pallas")
+
+
+def _colliding_keys(index_size: int, n: int, slot: int = 7) -> np.ndarray:
+    """First n int32 keys whose hot-index slot == `slot` (brute force)."""
+    out = []
+    k = 0
+    while len(out) < n:
+        if int(hash32(jnp.int32(k)) & jnp.uint32(index_size - 1)) == slot:
+            out.append(k)
+        k += 1
+    return np.asarray(out, np.int32)
+
+
+def _mixed_state(cfg, keys, delete_every=7):
+    """A store exercising all probe cases: hot in-memory records, stable-tier
+    records, cold records, RC replicas, and tombstones."""
+    kv = KV(cfg, mode="f2", trigger=2.0, donate=False)
+    V = cfg.value_width
+    vals = np.stack([keys] * V, 1).astype(np.int32) + 1
+    kv.upsert(keys, vals)
+    kv.compact_hot_cold(int(kv.state.hot.tail) // 2)   # half the keys go cold
+    kv.read(keys[: len(keys) // 2])                    # RC admissions
+    if delete_every:
+        kv.delete(keys[::delete_every])                # hot tombstones
+    return kv
+
+
+def _probe_all_engines(cfg, st, qkeys, *, rc_match=True):
+    B = qkeys.shape[0]
+    lower = jnp.broadcast_to(st.hot.begin, (B,))
+    hb = hybrid_log.head_addr(st.hot, cfg.hot_mem)
+    act = jnp.ones((B,), bool)
+    return {
+        eng: probe_engine.probe(cfg, jnp.asarray(qkeys), st.hot, lower, hb,
+                                act, index=st.hot_index, rc=st.rc,
+                                rc_match=rc_match, engine=eng)
+        for eng in ENGINES
+    }
+
+
+def _assert_results_equal(res_by_engine):
+    ref = res_by_engine["jnp"]
+    for eng, r in res_by_engine.items():
+        for field in ref._fields:
+            a, b = np.asarray(getattr(ref, field)), np.asarray(getattr(r, field))
+            assert np.array_equal(a, b), (eng, field, a, b)
+
+
+def _distributions(cfg, rng):
+    """The ≥3 acceptance distributions, as (name, stored_keys, query_keys)."""
+    uniform = rng.permutation(np.arange(300)).astype(np.int32)
+    q_uniform = np.concatenate([uniform[:96], np.arange(9000, 9032)]).astype(np.int32)
+
+    collide = _colliding_keys(cfg.hot_index_size, 24)
+    q_collide = np.concatenate([collide, collide[:8]]).astype(np.int32)
+
+    zipf = np.minimum(rng.zipf(1.3, 400), 255).astype(np.int32)
+    q_zipf = np.minimum(rng.zipf(1.3, 128), 300).astype(np.int32)
+    return [("uniform", uniform, q_uniform),
+            ("all_colliding_slot", collide, q_collide),
+            ("zipf_duplicates", zipf, q_zipf)]
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return small_cfg(chain_max=64)
+
+
+def test_probe_parity_across_engines_and_distributions(cfg):
+    rng = np.random.default_rng(0)
+    for name, stored, queries in _distributions(cfg, rng):
+        kv = _mixed_state(cfg, np.unique(stored))
+        res = _probe_all_engines(cfg, kv.state, queries)
+        _assert_results_equal(res)
+        # the walk must actually resolve something in every distribution
+        assert int(np.sum(np.asarray(res["jnp"].found))) > 0, name
+
+
+def test_probe_parity_liveness_walk(cfg):
+    """rc_match=False (the ConditionalInsert liveness probe) parity."""
+    keys = np.unique(np.arange(200, dtype=np.int32))
+    kv = _mixed_state(cfg, keys, delete_every=0)
+    res = _probe_all_engines(cfg, kv.state, keys[:128], rc_match=False)
+    _assert_results_equal(res)
+    # liveness walks must never report an RC replica as the hit
+    addr = np.asarray(res["jnp"].addr)
+    found = np.asarray(res["jnp"].found)
+    assert not np.any(found & (addr >= 0) & ((addr & (1 << 30)) != 0))
+
+
+def test_probe_parity_cold_chain(cfg):
+    """heads= mode (cold-index chains, no read cache) parity."""
+    keys = np.arange(256, dtype=np.int32)
+    kv = KV(cfg, mode="f2", trigger=2.0, donate=False)
+    kv.upsert(keys, np.ones((256, cfg.value_width), np.int32))
+    kv.compact_hot_cold(int(kv.state.hot.tail))
+    st = kv.state
+    q = np.concatenate([keys[:96], np.arange(8000, 8032)]).astype(np.int32)
+    B = q.shape[0]
+    act = jnp.ones((B,), bool)
+    entries, _ = cold_index.find_entries(st.cold_idx, cfg, jnp.asarray(q),
+                                         act, IoStats.zeros())
+    lower = jnp.broadcast_to(st.cold.begin, (B,))
+    hb = hybrid_log.head_addr(st.cold, cfg.cold_mem)
+    res = {eng: probe_engine.probe(cfg, jnp.asarray(q), st.cold, lower, hb,
+                                   act, heads=entries, rc=None, engine=eng)
+           for eng in ENGINES}
+    _assert_results_equal(res)
+    assert int(np.sum(np.asarray(res["jnp"].found))) == 96
+
+
+def test_read_batch_engine_independent(cfg):
+    """Full store read path: status/values/io identical under every engine."""
+    rng = np.random.default_rng(1)
+    for name, stored, queries in _distributions(cfg, rng):
+        kv = _mixed_state(cfg, np.unique(stored))
+        B = queries.shape[0]
+        out = {}
+        for eng in ENGINES:
+            ecfg = dataclasses.replace(cfg, engine=eng)
+            st2, status, vals = store.read_batch(
+                ecfg, kv.state, jnp.asarray(queries),
+                jnp.ones((B,), bool), admit_rc=True)
+            out[eng] = (np.asarray(status), np.asarray(vals),
+                        np.asarray(st2.stats.read_ops),
+                        np.asarray(st2.stats.mem_hits),
+                        np.asarray(st2.rc.tail))
+        for eng in ENGINES[1:]:
+            for a, b in zip(out["jnp"], out[eng]):
+                assert np.array_equal(a, b), (name, eng)
+
+
+def test_conditional_insert_engine_independent(cfg):
+    keys = np.arange(32, dtype=np.int32)
+    kv = KV(cfg, mode="f2", trigger=2.0, donate=False)
+    kv.upsert(keys, np.ones((32, cfg.value_width), np.int32))
+    st0 = kv.state
+    addr_of = {int(st0.hot.key[a]): a for a in range(32)}
+    starts = jnp.asarray([addr_of[int(k)] for k in keys], jnp.int32)
+    mask = jnp.ones(32, bool)
+    vals = jnp.full((32, cfg.value_width), 7, jnp.int32)
+    out = {}
+    for eng in ENGINES:
+        ecfg = dataclasses.replace(cfg, engine=eng)
+        st, ok = compaction.conditional_insert_hot(ecfg, st0, mask,
+                                                   jnp.asarray(keys), vals,
+                                                   starts)
+        out[eng] = (np.asarray(ok), int(st.hot.tail),
+                    np.asarray(st.hot_index))
+    for eng in ENGINES[1:]:
+        for a, b in zip(out["jnp"], out[eng]):
+            assert np.array_equal(a, b), eng
+    assert np.all(out["jnp"][0])           # no newer records => all succeed

@@ -1,5 +1,9 @@
 """Property-based testing of the store's linearization invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install '.[test]')")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
