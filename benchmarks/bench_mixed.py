@@ -1,0 +1,190 @@
+"""Mixed-workload (YCSB-style) benchmark: fused vs. unfused engines on the
+full store pipeline (read + write + RMW hot paths).
+
+Times `store.apply` under each engine backend across YCSB-style op mixes
+
+    A: 50% read / 50% upsert     (update heavy)
+    B: 95% read /  5% upsert     (read mostly)
+    F: 50% read / 50% RMW        (read-modify-write counters)
+
+and Zipfian skew levels, on a store preloaded so operations hit every
+tier: hot in-memory records, stable-tier records, cold records, and RC
+replicas.  Reports wall-clock batch ops/s per (mix, skew, engine) as JSON
+— the mixed-workload perf trajectory artifact (`BENCH_mixed.json`).
+
+    PYTHONPATH=src python benchmarks/bench_mixed.py [--tiny] [--out f.json]
+
+`--tiny` is the CI smoke mode: a minimal store, one skew level, few
+iterations, plus a `fused_pallas` interpret-mode correctness lap — it
+proves the write-engine kernel path end-to-end on any backend and asserts
+bit-exact engine agreement on statuses and post-run store state.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import KV, F2Config, store
+from repro.core.types import OP_READ, OP_RMW, OP_UPSERT
+
+MIXES = {
+    "A": {OP_READ: 0.5, OP_UPSERT: 0.5},
+    "B": {OP_READ: 0.95, OP_UPSERT: 0.05},
+    "F": {OP_READ: 0.5, OP_RMW: 0.5},
+}
+
+
+def build_store(n_keys: int, cfg: F2Config) -> KV:
+    kv = KV(cfg, mode="f2", trigger=2.0, donate=False)
+    keys = np.arange(n_keys, dtype=np.int32)
+    vals = np.stack([keys] * cfg.value_width, 1).astype(np.int32)
+    B = 1024
+    for off in range(0, n_keys, B):
+        kv.upsert(keys[off:off + B], vals[off:off + B])
+    kv.compact_hot_cold(int(kv.state.hot.tail) // 2)   # half the keys go cold
+    kv.read(keys[:: max(1, n_keys // 512)])            # seed the read cache
+    return kv
+
+
+def zipf_keys(rng, n_keys: int, theta: float, shape) -> np.ndarray:
+    if theta <= 0.01:
+        draws = rng.integers(0, n_keys, shape)
+    else:
+        ranks = np.arange(1, n_keys + 1, dtype=np.float64)
+        p = ranks ** -theta
+        p /= p.sum()
+        draws = rng.choice(n_keys, shape, p=p)
+    perm = rng.permutation(n_keys)                     # YCSB key scramble
+    return perm[draws].astype(np.int32)
+
+
+def mixed_batches(rng, mix: dict, n_keys: int, theta: float, B: int,
+                  n_batches: int, value_width: int):
+    keys = zipf_keys(rng, n_keys, theta, (n_batches, B))
+    op_codes = np.asarray(sorted(mix), np.int32)
+    probs = np.asarray([mix[o] for o in sorted(mix)])
+    ops = rng.choice(op_codes, (n_batches, B), p=probs).astype(np.int32)
+    vals = rng.integers(0, 100, (n_batches, B, value_width)).astype(np.int32)
+    return keys, ops, vals
+
+
+def run_engine(kv: KV, cfg: F2Config, engine: str, batches, repeats: int,
+               admit_rc: bool = True) -> dict:
+    """Times jitted store.apply; returns throughput + a state fingerprint
+    for the cross-engine agreement assertion (writes mutate the store, so
+    identical inputs must produce identical final state)."""
+    ecfg = dataclasses.replace(cfg, engine=engine)
+    step = jax.jit(functools.partial(store.apply, ecfg, admit_rc=admit_rc))
+    keys, ops, vals = batches
+    dev = [(jnp.asarray(k), jnp.asarray(o), jnp.asarray(v))
+           for k, o, v in zip(keys, ops, vals)]
+    state, status, rvals = step(kv.state, *dev[0])     # compile
+    jax.block_until_ready(status)
+
+    # best-of-N lap timing: the min lap is robust to scheduler contention
+    # on shared CI runners, unlike one long accumulated loop
+    best = float("inf")
+    for _ in range(repeats):
+        st = kv.state
+        t0 = time.perf_counter()
+        for kb, ob, vb in dev:
+            st, status, rvals = step(st, kb, ob, vb)
+        jax.block_until_ready(st.hot.tail)
+        best = min(best, time.perf_counter() - t0)
+    dt = best
+    n_ops = keys.shape[0] * keys.shape[1]
+
+    st, status, _ = step(kv.state, *dev[0])            # agreement fingerprint
+    pos_w = 1 + jnp.arange(status.shape[0], dtype=jnp.int32)
+    fp = (int(jnp.sum(status.astype(jnp.int32) * pos_w)),
+          int(st.hot.tail), int(st.rc.tail),
+          int(st.stats.read_ops), int(st.stats.mem_hits))
+    return dict(engine=engine, ops_per_s=n_ops / dt, seconds=dt, n_ops=n_ops,
+                fingerprint=fp)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke mode: minimal sizes + interpret kernel lap")
+    ap.add_argument("--out", default=None, help="write results JSON here")
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--repeats", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    if args.tiny:
+        # laps are ~4 ms; compile time dominates the job regardless, so take
+        # plenty of best-of laps — the min is what survives noisy CI runners
+        n_keys, B, n_batches, repeats = 512, 128, 4, 30
+        thetas = [0.99]
+        mixes = ["A", "F"]
+        cfg = F2Config(hot_index_size=1 << 9, hot_capacity=1 << 11,
+                       hot_mem=1 << 8, cold_capacity=1 << 13, cold_mem=1 << 7,
+                       n_chunks=1 << 7, chunklog_capacity=1 << 11,
+                       chunklog_mem=1 << 6, rc_capacity=1 << 7,
+                       value_width=2, chain_max=48)
+        engines = ["jnp", "fused_ref", "fused_pallas"]
+    else:
+        n_keys, B, n_batches, repeats = 1 << 15, 4096, 8, 4
+        thetas = [0.0, 0.55, 0.99, 1.20]
+        mixes = ["A", "B", "F"]
+        cfg = F2Config(hot_index_size=1 << 14, hot_capacity=1 << 17,
+                       hot_mem=1 << 14, cold_capacity=1 << 18,
+                       cold_mem=1 << 10, n_chunks=1 << 10,
+                       chunklog_capacity=1 << 13, chunklog_mem=1 << 8,
+                       rc_capacity=1 << 12, value_width=2, chain_max=48)
+        engines = ["jnp", "fused"]
+    if args.batch:
+        B = args.batch
+    if args.repeats:
+        repeats = args.repeats
+
+    kv = build_store(n_keys, cfg)
+    results = dict(backend=jax.default_backend(), n_keys=n_keys, batch=B,
+                   tiny=bool(args.tiny), mixes=[])
+    for mix in mixes:
+        for theta in thetas:
+            rng = np.random.default_rng(17)
+            batches = mixed_batches(rng, MIXES[mix], n_keys, theta, B,
+                                    n_batches, cfg.value_width)
+            row = dict(mix=mix, theta=theta, engines=[])
+            for eng in engines:
+                r = run_engine(kv, cfg, eng, batches, repeats)
+                row["engines"].append(r)
+                print(f"mix={mix} theta={theta:<5} engine={eng:<13} "
+                      f"{r['ops_per_s'] / 1e3:9.1f} kops/s")
+            # fused-over-unfused speedup is the headline this artifact tracks
+            per = {e["engine"]: e["ops_per_s"] for e in row["engines"]}
+            base = per.get("jnp")
+            fused = per.get("fused", per.get("fused_ref"))
+            if base and fused:
+                row["fused_speedup"] = fused / base
+                print(f"    fused/jnp speedup: {row['fused_speedup']:.2f}x")
+            results["mixes"].append(row)
+
+    # engines must agree bit-exactly: same statuses, same final store state
+    for row in results["mixes"]:
+        fps = {tuple(e["fingerprint"]) for e in row["engines"]}
+        assert len(fps) == 1, (
+            f"engines disagree at mix={row['mix']} theta={row['theta']}: {fps}")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.out}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -24,10 +24,10 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import chain, cold_index, groups, hybrid_log, probe_engine, read_cache
+from . import cold_index, groups, hybrid_log, probe_engine, read_cache
 from .store import F2State, hot_slots, _merge_walk_io
-from .types import (META_INVALID, META_TOMBSTONE, NULL_ADDR, F2Config,
-                    IoStats, records_to_blocks)
+from .types import (META_INVALID, META_TOMBSTONE, NULL_ADDR, RC_FLAG,
+                    F2Config, IoStats, is_rc, rc_untag, records_to_blocks)
 
 
 def _frontier(log: hybrid_log.LogState, start: jax.Array, until: jax.Array,
@@ -71,7 +71,6 @@ def conditional_insert_hot(
     stats = _merge_walk_io(state.stats, res)
     ok = mask & ~res.found
 
-    from .types import is_rc, rc_untag
     head_is_rc = is_rc(heads)
     _, _, rc_p, _ = read_cache.gather(state.rc, rc_untag(heads))
     eff_prev = jnp.where(head_is_rc, rc_p, heads)
@@ -110,19 +109,17 @@ def hot_cold_step(cfg: F2Config, state: F2State, start: jax.Array,
                                     cfg.record_bytes)
 
     # liveness: most recent *log* record for the key must be this record.
-    # Fast path (the reason lookup-based compaction does 'only the
-    # absolutely necessary disk operations', paper S5.2): if the index
-    # entry ALREADY points at this record, it is live — a pure address
-    # compare, zero I/O.  Only records whose chain head differs walk.
-    heads = state.hot_index[hot_slots(cfg, k)]
-    live_fast = m & (heads == addrs)
-    need_walk = m & ~live_fast
+    # The engine's target mode embeds the fast path (the reason
+    # lookup-based compaction does 'only the absolutely necessary disk
+    # operations', paper S5.2): a lane whose index entry ALREADY points at
+    # this record resolves by pure address compare — zero hops, zero I/O —
+    # and only records whose chain head differs walk.
     hot_head = hybrid_log.head_addr(state.hot, cfg.hot_mem)
-    res = chain.walk(k, heads, state.hot, lower=addrs, head_boundary=hot_head,
-                     active=need_walk, chain_max=cfg.chain_max, rc=state.rc,
-                     rc_match=False)
+    res = probe_engine.probe(cfg, k, state.hot, addrs, hot_head, m,
+                             index=state.hot_index, rc=state.rc,
+                             rc_match=False, target=addrs)
     stats = _merge_walk_io(stats, res)
-    live = live_fast | (need_walk & res.found & (res.addr == addrs))
+    live = m & res.found & (res.addr == addrs)
 
     # upsert into the cold log (cold records are older by design, paper S5.2)
     entries, stats = cold_index.find_entries(state.cold_idx, cfg, k, live,
@@ -154,7 +151,6 @@ def hot_truncate(cfg: F2Config, state: F2State, until: jax.Array) -> F2State:
     point below it (RC-tagged heads survive — replicas remain readable)."""
     hot = hybrid_log.truncate(state.hot, until)
     a = state.hot_index
-    from .types import RC_FLAG
     dangling = (a >= 0) & ((a & RC_FLAG) == 0) & (a < hot.begin)
     idx = jnp.where(dangling, NULL_ADDR, a)
     hot = hot._replace(flushed_upto=jnp.maximum(hot.flushed_upto, hot.begin))
@@ -175,14 +171,12 @@ def cold_cold_step(cfg: F2Config, state: F2State, start: jax.Array,
                                     cfg.record_bytes)
 
     entries, stats = cold_index.find_entries(state.cold_idx, cfg, k, m, stats)
-    live_fast = m & (entries == addrs)               # zero-I/O address check
-    need_walk = m & ~live_fast
     cold_head = hybrid_log.head_addr(state.cold, cfg.cold_mem)
-    res = chain.walk(k, entries, state.cold, lower=addrs,
-                     head_boundary=cold_head, active=need_walk,
-                     chain_max=cfg.chain_max, rc=None)
+    # target mode: entries == addrs resolves in-engine with zero I/O
+    res = probe_engine.probe(cfg, k, state.cold, addrs, cold_head, m,
+                             heads=entries, rc=None, target=addrs)
     stats = _merge_walk_io(stats, res)
-    live = live_fast | (need_walk & res.found & (res.addr == addrs))
+    live = m & res.found & (res.addr == addrs)
     live = live & ((meta & META_TOMBSTONE) == 0)      # drop dead keys for good
 
     g, _, _ = cold_index.slot_coords(cfg, k)
@@ -236,16 +230,15 @@ def single_log_lookup_step(cfg: F2Config, state: F2State, start: jax.Array,
     stats = _charge_sequential_read(state.stats, jnp.sum(m.astype(jnp.int32)),
                                     cfg.record_bytes)
     slots = hot_slots(cfg, k)
-    heads = state.hot_index[slots]
-    live_fast = m & (heads == addrs)                 # zero-I/O address check
-    need_walk = m & ~live_fast
     hot_head = hybrid_log.head_addr(state.hot, cfg.hot_mem)
-    res = chain.walk(k, heads, state.hot, lower=addrs, head_boundary=hot_head,
-                     active=need_walk, chain_max=cfg.chain_max, rc=state.rc,
-                     rc_match=False)
+    # target mode: heads == addrs resolves in-engine with zero I/O
+    res = probe_engine.probe(cfg, k, state.hot, addrs, hot_head, m,
+                             index=state.hot_index, rc=state.rc,
+                             rc_match=False, target=addrs)
+    heads = res.heads
     if charge_walk_io:
         stats = _merge_walk_io(stats, res)
-    live = live_fast | (need_walk & res.found & (res.addr == addrs))
+    live = m & res.found & (res.addr == addrs)
     live = live & ((meta & META_TOMBSTONE) == 0)      # single log: drop dead
 
     ginfo = groups.group_info(live, slots)
@@ -255,7 +248,6 @@ def single_log_lookup_step(cfg: F2Config, state: F2State, start: jax.Array,
     pos = jnp.arange(B, dtype=jnp.int32)
     pred_addr = groups.select_at_pos(new_addrs, pos, ginfo.pred)
     # skip + detach RC heads exactly like the user append path
-    from .types import is_rc, rc_untag
     head_is_rc = is_rc(heads)
     _, _, rc_p, _ = read_cache.gather(state.rc, rc_untag(heads))
     eff_prev = jnp.where(head_is_rc, rc_p, heads)

@@ -18,7 +18,11 @@ bit-exact backends, selected by `F2Config.engine`:
 
 All backends return the same `ProbeResult` bit-exactly, so store-level
 behaviour (statuses, values, modeled I/O) is engine-independent; the parity
-suite (tests/test_probe_engine.py) enforces this.  Later subsystems that
+suite (tests/test_probe_engine.py) enforces this.  The `target=` mode adds
+lookup-based compaction's zero-I/O liveness fast path (`head == addr`
+resolves before the first hop) as an in-engine predicate — all three
+compaction steps probe through it.  The mutate pipeline has its own engine
+built on the same pattern (`core.write_engine`).  Later subsystems that
 want a kernel backend (cold-index chunk probe, compaction frontier scan)
 should follow this module's shape: one result type, one dispatch knob, a
 jnp oracle that stays in the tree.
@@ -113,12 +117,19 @@ def probe(
     heads: Optional[jax.Array] = None,   # int32 [B]: precomputed chain heads
     rc: Optional[read_cache.RCState] = None,
     rc_match: bool = True,
+    target: Optional[jax.Array] = None,   # int32 [B]: liveness fast path
     engine: Optional[str] = None,
 ) -> ProbeResult:
     """One fused probe pass.  Exactly one of `index` / `heads` is given:
     `index` fuses the hot-index slot hash + gather into the pass (read path,
     ConditionalInsert); `heads` starts from externally resolved entries
-    (cold-index chains)."""
+    (cold-index chains).
+
+    `target` is the liveness mode of lookup-based compaction: a lane whose
+    resolved chain head equals its target address is found at the target
+    with zero hops and zero modeled I/O (the paper's `head == addr` pure
+    address compare), and only the remaining lanes walk.  Callers test
+    `found & (addr == target)` for the liveness verdict."""
     assert (index is None) != (heads is None)
     n_heads = index.shape[0] if index is not None else heads.shape[0]
     engine = _resolve(cfg.engine if engine is None else engine, log, rc,
@@ -128,7 +139,7 @@ def probe(
     if engine == "jnp":
         return _probe_unfused(cfg, keys, log, lower, head_boundary, active,
                               index=index, heads=heads, rc=rc,
-                              rc_match=rc_match)
+                              rc_match=rc_match, target=target)
 
     has_rc = rc is not None
     # the kernel signature is total — absent RC becomes 1-record dummies
@@ -145,11 +156,13 @@ def probe(
     args = (keys, heads_src, lower, active, head_boundary,
             log.key, log.val, log.prev, log.meta, rck, rcv, rcp, rcm)
     kw = dict(chain_max=cfg.chain_max, rc_match=rc_match, has_rc=has_rc,
-              probe_index=probe_index)
+              probe_index=probe_index, target=target)
     if engine == "fused_pallas":
         out = probe_ops.fused_probe(*args, **kw)
     else:
-        out = fused_probe_reference(*args, **kw)
+        # the reference early-exits once every lane resolved (bit-exact);
+        # the kernel keeps the static trip count the TPU compiler wants
+        out = fused_probe_reference(*args, early_exit=True, **kw)
     found, addr, heads_out, value, meta, hops, ios, exhausted = out
     n_io = jnp.sum(ios)
     return ProbeResult(found=found, addr=addr, heads=heads_out, value=value,
@@ -158,27 +171,37 @@ def probe(
 
 
 def _probe_unfused(cfg, keys, log, lower, head_boundary, active, *,
-                   index, heads, rc, rc_match) -> ProbeResult:
+                   index, heads, rc, rc_match, target=None) -> ProbeResult:
     """The seed read path, repackaged: walk then gather.  Kept bit-exact as
     the oracle the fused backends are tested against.  (With RC admission
     on, read_batch re-gathers the RC for p_rc — one redundant gather on
     this debugging path; accepted rather than widening every backend's
-    interface with a `prev` output.)"""
+    interface with a `prev` output.)  The `target` fast path pre-filters
+    the walk exactly like the seed compaction steps did: fast lanes never
+    enter the walk, so they charge no hops and no I/O."""
     if heads is None:
         slots = (hash32(keys) & jnp.uint32(index.shape[0] - 1)).astype(jnp.int32)
         heads = index[slots]
-    res = chain.walk(keys, heads, log, lower, head_boundary, active,
+    if target is not None:
+        fast = active & (heads == target)
+        walk_active = active & ~fast
+    else:
+        fast = jnp.zeros_like(active)
+        walk_active = active
+    res = chain.walk(keys, heads, log, lower, head_boundary, walk_active,
                      cfg.chain_max, rc=rc, rc_match=rc_match)
-    hit_rc = res.found & is_rc(res.addr)
-    hit_log = res.found & ~hit_rc
-    _, v_log, _, m_log = hybrid_log.gather(log, jnp.where(hit_log, res.addr, 0))
+    found = res.found | fast
+    addr = jnp.where(fast, heads, res.addr)
+    hit_rc = found & is_rc(addr)
+    hit_log = found & ~hit_rc
+    _, v_log, _, m_log = hybrid_log.gather(log, jnp.where(hit_log, addr, 0))
     value = jnp.where(hit_log[:, None], v_log, 0)
     meta = jnp.where(hit_log, m_log, 0)
     if rc is not None:
-        _, v_rc, _, m_rc = read_cache.gather(rc, rc_untag(res.addr))
+        _, v_rc, _, m_rc = read_cache.gather(rc, rc_untag(addr))
         value = jnp.where(hit_rc[:, None], v_rc, value)
         meta = jnp.where(hit_rc, m_rc, meta)
-    return ProbeResult(found=res.found, addr=res.addr, heads=heads,
+    return ProbeResult(found=found, addr=addr, heads=heads,
                        value=value, meta=meta, hops=res.hops,
                        io_blocks=res.io_blocks, io_ops=res.io_ops,
                        mem_hits=res.mem_hits, exhausted=res.exhausted)

@@ -89,6 +89,14 @@ def insert(
     mask = mask & info.is_first            # one RC record per chain
     m32 = mask.astype(jnp.int32)
     offs = jnp.cumsum(m32) - m32
+    # The ring must not wrap within one batch: the eviction repair below
+    # reads the *pre-batch* ring content and index, so a logical address
+    # dying to this batch's own writes could not be repaired — the index
+    # would keep an RC tag for a slot now holding a different key, poisoning
+    # every later walk (and through liveness verdicts, compaction).  Drop
+    # admissions past the capacity instead (admission is best-effort).
+    mask = mask & (offs < jnp.int32(cap))
+    m32 = mask.astype(jnp.int32)
     new_addr = jnp.where(mask, rc.tail + offs, NULL_ADDR)
     phys = jnp.maximum(new_addr, 0) & jnp.int32(cap - 1)
 

@@ -17,11 +17,11 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import chain, cold_index, groups, hybrid_log, probe_engine, read_cache
-from .types import (META_INVALID, META_TOMBSTONE, NULL_ADDR, OP_DELETE,
-                    OP_NOOP, OP_READ, OP_RMW, OP_UPSERT, ST_CREATED, ST_NONE,
-                    ST_NOT_FOUND, ST_OK, F2Config, IoStats, hash32, is_rc,
-                    rc_untag, records_to_blocks)
+from . import (cold_index, hybrid_log, probe_engine, read_cache,
+               write_engine)
+from .types import (META_TOMBSTONE, NULL_ADDR, OP_DELETE, OP_READ, OP_RMW,
+                    OP_UPSERT, ST_CREATED, ST_NONE, ST_NOT_FOUND, ST_OK,
+                    F2Config, IoStats, hash32, is_rc, rc_untag)
 
 
 class F2State(NamedTuple):
@@ -140,107 +140,60 @@ def write_batch(
     """Returns (state, status[B]).  RMW semantics: integer vector add with
     initial value 0 (YCSB-F counter update); intra-batch RMWs to one key
     accumulate associatively after the last Upsert/Delete, which is an exact
-    sequential linearization for add-RMWs (DESIGN.md S2)."""
+    sequential linearization for add-RMWs (DESIGN.md S2).
+
+    The whole mutate pipeline — linearization, locate walk with RC skip,
+    in-place-vs-RCU classification, intra-batch chain offsets, publish
+    preparation — runs as one write-engine pass (backend per cfg.engine);
+    this function resolves cold base values for pure-RMW misses and applies
+    the plan's scatters."""
     B = keys.shape[0]
     wmask = (ops == OP_UPSERT) | (ops == OP_RMW) | (ops == OP_DELETE)
-    is_set = (ops == OP_UPSERT) | (ops == OP_DELETE)
-    pos = jnp.arange(B, dtype=jnp.int32)
 
-    # --- per-key linearization (group by key) --------------------------------
-    info, last_set_pos = groups.segment_reduce_last_set(wmask, keys, is_set, B)
-    has_set = last_set_pos >= 0
-    set_val = groups.select_at_pos(vals, pos, last_set_pos)  # value at last set
-    set_op = groups.select_at_pos(ops, pos, last_set_pos)
-    set_is_del = has_set & (set_op == OP_DELETE)
-    rmw_after = wmask & (ops == OP_RMW) & (pos > last_set_pos)
-    rmw_sum = groups.segment_sum_where(vals, rmw_after, info.run_id, B)
-    rmw_cnt = groups.segment_sum_where(rmw_after.astype(jnp.int32),
-                                       rmw_after, info.run_id, B)
-    rep = wmask & info.is_first               # one mutating lane per key
+    plan = write_engine.plan(cfg, keys, ops, vals, state.hot,
+                             state.hot_index, state.rc)
+    stats = _merge_walk_io(state.stats, plan)
 
-    # --- locate the most recent *log* record (skip RC replicas) --------------
-    slots = hot_slots(cfg, keys)
-    heads = state.hot_index[slots]
-    hot_head = hybrid_log.head_addr(state.hot, cfg.hot_mem)
-    ro_addr = hybrid_log.read_only_addr(state.hot, cfg.hot_mem,
-                                        cfg.hot_mutable_frac)
-    lower = jnp.broadcast_to(state.hot.begin, (B,))
-    res = chain.walk(keys, heads, state.hot, lower, hot_head, rep,
-                     cfg.chain_max, rc=state.rc, rc_match=False)
-    stats = _merge_walk_io(state.stats, res)
-    found = res.found
-    _, fval, _, fmeta = hybrid_log.gather(state.hot, jnp.where(found, res.addr, 0))
-    found_tomb = found & ((fmeta & META_TOMBSTONE) != 0)
-    found_mut = found & (res.addr >= ro_addr)
-
-    # --- base value for pure-RMW groups (Algorithm 1 L6-L10) -----------------
-    pure_rmw = rep & ~has_set & (rmw_cnt > 0)
-    base_hot = pure_rmw & found & ~found_tomb
-    need_cold = pure_rmw & ~found             # hot tombstone => absent, skip cold
+    # --- cold base values for pure-RMW groups that missed the hot log
+    #     (Algorithm 1 L6-L10; the only part of the pipeline that touches
+    #     the cold tier, composed outside the engine pass) ------------------
     entries, stats = cold_index.find_entries(state.cold_idx, cfg, keys,
-                                             need_cold, stats)
+                                             plan.need_cold, stats)
     cold_head = hybrid_log.head_addr(state.cold, cfg.cold_mem)
     lower_c = jnp.broadcast_to(state.cold.begin, (B,))
-    res_c = chain.walk(keys, entries, state.cold, lower_c, cold_head,
-                       need_cold, cfg.chain_max, rc=None)
+    res_c = probe_engine.probe(cfg, keys, state.cold, lower_c, cold_head,
+                               plan.need_cold, heads=entries, rc=None)
     stats = _merge_walk_io(stats, res_c)
-    _, cval, _, cmeta = hybrid_log.gather(state.cold, jnp.where(res_c.found, res_c.addr, 0))
-    cold_ok = res_c.found & ((cmeta & META_TOMBSTONE) == 0)
-    base = jnp.where(base_hot[:, None], fval,
-                     jnp.where((need_cold & cold_ok)[:, None], cval, 0))
-    created = pure_rmw & ~base_hot & ~(need_cold & cold_ok)
+    cold_ok = res_c.found & ((res_c.meta & META_TOMBSTONE) == 0)
+    use_cold = plan.need_cold & cold_ok
+    final_val = plan.val_nocold + jnp.where(use_cold[:, None], res_c.value, 0)
+    created = plan.created_nocold & ~use_cold
 
-    # --- final value / tombstone per representative ---------------------------
-    final_val = jnp.where(has_set[:, None] & ~set_is_del[:, None],
-                          set_val + rmw_sum,
-                          jnp.where((has_set & set_is_del & (rmw_cnt > 0))[:, None],
-                                    rmw_sum, base + rmw_sum))
-    final_tomb = has_set & set_is_del & (rmw_cnt == 0)
-
-    # --- in-place (mutable region) vs RCU append ------------------------------
-    in_place = rep & found_mut
-    new_meta = jnp.where(final_tomb, META_TOMBSTONE, 0).astype(jnp.int32)
-    hot = hybrid_log.update_in_place(state.hot, in_place, res.addr, final_val,
-                                     new_meta)
-
-    append = rep & ~in_place
-    # effective chain head: skip + detach an RC head (hot records never point
-    # into the read cache — FASTER read-cache rule)
-    head_is_rc = is_rc(heads)
-    rc_k, _, rc_p, _ = read_cache.gather(state.rc, rc_untag(heads))
-    eff_prev = jnp.where(append & head_is_rc, rc_p, heads)
+    # --- apply the plan: in-place scatter, RC detach, append, publish -------
+    new_meta = jnp.where(plan.final_tomb, META_TOMBSTONE, 0).astype(jnp.int32)
+    hot = hybrid_log.update_in_place(state.hot, plan.in_place, plan.addr,
+                                     final_val, new_meta)
     # appends detach the RC head (chain bypasses it); in-place updates only
-    # need to invalidate a matching-key replica (it just went stale)
-    rc_inval = (append & head_is_rc) | (in_place & head_is_rc & (rc_k == keys))
-    rc = read_cache.invalidate(state.rc, rc_inval, rc_untag(heads))
-
-    # intra-batch chaining by hash slot (different keys may share a chain)
-    ginfo = groups.group_info(append, slots)
-    a32 = append.astype(jnp.int32)
-    offs = jnp.cumsum(a32) - a32
-    new_addrs = jnp.where(append, hot.tail + offs, NULL_ADDR)
-    pred_addr = groups.select_at_pos(new_addrs, pos, ginfo.pred)
-    prevs = jnp.where(ginfo.pred >= 0, pred_addr, eff_prev)
-    hot, new_addrs2 = hybrid_log.append(hot, append, keys, final_val, prevs,
-                                        new_meta)
+    # invalidate a matching-key replica (it just went stale)
+    rc = read_cache.invalidate(state.rc, plan.rc_inval, rc_untag(plan.heads))
+    hot, _ = hybrid_log.append(hot, plan.append, keys, final_val, plan.prevs,
+                               new_meta)
     # publish: last lane of each slot-run swings the index entry
-    pidx = jnp.where(append & ginfo.is_last, slots, jnp.int32(cfg.hot_index_size))
-    hot_index = state.hot_index.at[pidx].set(new_addrs, mode="drop")
+    pidx = jnp.where(plan.publish, plan.slots, jnp.int32(cfg.hot_index_size))
+    hot_index = state.hot_index.at[pidx].set(plan.new_addrs, mode="drop")
 
     hot, stats = hybrid_log.charge_flush(hot, stats, cfg.hot_mem,
                                          cfg.record_bytes)
 
-    # --- statuses broadcast back to every lane of the group -------------------
-    rep_created = created
-    grp_created = groups.segment_sum_where(rep_created.astype(jnp.int32),
-                                           rep, info.run_id, B) > 0
+    # --- statuses broadcast back to every lane of the group -----------------
+    grp_created = (plan.rep_pos >= 0) & created[jnp.maximum(plan.rep_pos, 0)]
     status = jnp.where(wmask,
                        jnp.where((ops == OP_RMW) & grp_created, ST_CREATED, ST_OK),
                        ST_NONE)
 
     state = state._replace(
         hot=hot, hot_index=hot_index, rc=rc, stats=stats,
-        walk_exhausted=state.walk_exhausted | jnp.any(res.exhausted) | jnp.any(res_c.exhausted),
+        walk_exhausted=state.walk_exhausted | jnp.any(plan.exhausted) | jnp.any(res_c.exhausted),
     )
     return state, status
 
@@ -298,26 +251,26 @@ def read_finish(cfg: F2Config, state: F2State, snap: ReadSnapshot
     """Phase 2: walk from the snapshot.  If a lane misses and truncation(s)
     occurred since phase 1, re-traverse only the newly-compacted tail
     segment (snap.cold_tail, TAIL] from the *current* index — the paper's
-    lightweight num_truncs fix for the false-absence anomaly."""
+    lightweight num_truncs fix for the false-absence anomaly.  All three
+    snapshot-head walks run on the fused probe engine (heads mode)."""
     B = snap.keys.shape[0]
     keys, active = snap.keys, snap.active
     hot_head = hybrid_log.head_addr(state.hot, cfg.hot_mem)
     lower = jnp.broadcast_to(state.hot.begin, (B,))
-    res_h = chain.walk(keys, snap.hot_heads, state.hot, lower, hot_head,
-                       active, cfg.chain_max, rc=state.rc, rc_match=True)
+    res_h = probe_engine.probe(cfg, keys, state.hot, lower, hot_head, active,
+                               heads=snap.hot_heads, rc=state.rc,
+                               rc_match=True)
     stats = _merge_walk_io(state.stats, res_h)
     hit_rc = res_h.found & is_rc(res_h.addr)
-    hit_log = res_h.found & ~is_rc(res_h.addr)
-    _, v_log, _, m_log = hybrid_log.gather(state.hot, jnp.where(hit_log, res_h.addr, 0))
-    _, v_rc, _, _ = read_cache.gather(state.rc, rc_untag(res_h.addr))
-    tomb_hot = hit_log & ((m_log & META_TOMBSTONE) != 0)
+    hit_log = res_h.found & ~hit_rc
+    tomb_hot = hit_log & ((res_h.meta & META_TOMBSTONE) != 0)
     ok_hot = hit_rc | (hit_log & ~tomb_hot)
 
     cold_active = active & ~res_h.found
     cold_head = hybrid_log.head_addr(state.cold, cfg.cold_mem)
     lower_c = jnp.broadcast_to(state.cold.begin, (B,))
-    res_c = chain.walk(keys, snap.cold_entries, state.cold, lower_c, cold_head,
-                       cold_active, cfg.chain_max, rc=None)
+    res_c = probe_engine.probe(cfg, keys, state.cold, lower_c, cold_head,
+                               cold_active, heads=snap.cold_entries, rc=None)
     stats = _merge_walk_io(stats, res_c)
 
     # --- the anomaly fix: recheck the new tail segment on miss ---------------
@@ -326,19 +279,18 @@ def read_finish(cfg: F2Config, state: F2State, snap: ReadSnapshot
     entries2, stats = cold_index.find_entries(state.cold_idx, cfg, keys,
                                               retry, stats)
     lower_retry = jnp.broadcast_to(snap.cold_tail, (B,))  # only the new part
-    res_r = chain.walk(keys, entries2, state.cold, lower_retry, cold_head,
-                       retry, cfg.chain_max, rc=None)
+    res_r = probe_engine.probe(cfg, keys, state.cold, lower_retry, cold_head,
+                               retry, heads=entries2, rc=None)
     stats = _merge_walk_io(stats, res_r)
 
     cold_found = res_c.found | res_r.found
-    cold_addr = jnp.where(res_c.found, res_c.addr, res_r.addr)
-    _, v_cold, _, m_cold = hybrid_log.gather(state.cold, jnp.where(cold_found, cold_addr, 0))
+    v_cold = jnp.where(res_c.found[:, None], res_c.value, res_r.value)
+    m_cold = jnp.where(res_c.found, res_c.meta, res_r.meta)
     tomb_cold = cold_found & ((m_cold & META_TOMBSTONE) != 0)
     ok_cold = cold_found & ~tomb_cold
 
-    vals = jnp.where(hit_rc[:, None], v_rc,
-                     jnp.where(ok_hot[:, None], v_log,
-                               jnp.where(ok_cold[:, None], v_cold, 0)))
+    vals = jnp.where(ok_hot[:, None], res_h.value,
+                     jnp.where(ok_cold[:, None], v_cold, 0))
     found = ok_hot | ok_cold
     status = jnp.where(found, ST_OK, jnp.where(active, ST_NOT_FOUND, ST_NONE))
     return state._replace(stats=stats), status, vals

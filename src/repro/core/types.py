@@ -131,7 +131,8 @@ class F2Config:
     # execution
     value_width: int = 2                   # int32 words per value
     chain_max: int = 24                    # bounded hash-chain walk length
-    engine: str = "fused"                  # read-probe backend (probe_engine):
+    engine: str = "fused"                  # probe + write engine backend
+                                           # (probe_engine / write_engine):
                                            # "fused" (Pallas on TPU when the
                                            # store fits VMEM, jnp reference
                                            # elsewhere), "jnp" (unfused seed

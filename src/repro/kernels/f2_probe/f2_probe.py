@@ -1,6 +1,6 @@
-"""Pallas TPU kernels for the F2 read hot path.
+"""Pallas TPU kernels for the F2 read and write hot paths.
 
-Two kernels:
+Three kernels:
 
   * `probe` — the original first-hop kernel (slot hash -> index gather ->
     RC decode), index-tiled so VMEM pressure stays (B_tile + E_tile).
@@ -9,14 +9,23 @@ Two kernels:
     address lower bounds (resolving records from the log ring *or* the
     read cache via RC-tagged addresses) -> value/meta resolution, emitting
     (found, addr, heads, value, meta, hops, ios, exhausted) in one pass.
+    The optional `target` input adds compaction's zero-I/O liveness fast
+    path (`head == addr`) as an in-kernel predicate.
+  * `fused_write` — the write engine: one pass per mutate batch that
+    linearizes per key (last-set + RMW accumulation via B x B group
+    masks), runs the locate walk with RC skip, classifies in-place vs RCU
+    against the mutable boundary, and emits the append/index-publish plan
+    (`core.write_engine.WritePlan`).  The whole batch is one grid step —
+    intra-batch grouping needs every lane visible, so the batch cannot be
+    tiled the way the read probe tiles.
 
-The fused kernel keeps the log/read-cache columns (key, prev, meta, val)
-fully VMEM-resident per grid step and tiles only the key batch: the walk's
-gathers are data-dependent, so log blocking would need scalar-prefetched
-DMA per hop — the right trade once logs outgrow VMEM (~16 MB/core), noted
-as future work in README.md.  Grid: (B // b_tile,).  I/O accounting mirrors
-`core.chain.walk`: every live hop below `head_boundary` is one modeled
-4 KiB random block read; the rest are memory-tier touches.
+The fused kernels keep the log/read-cache columns (key, prev, meta, val)
+fully VMEM-resident per grid step: the walk's gathers are data-dependent,
+so log blocking would need scalar-prefetched DMA per hop — the right trade
+once logs outgrow VMEM (~16 MB/core), noted as future work in README.md.
+I/O accounting mirrors `core.chain.walk`: every live hop below
+`head_boundary` is one modeled 4 KiB random block read; the rest are
+memory-tier touches.
 """
 from __future__ import annotations
 
@@ -26,7 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .ref import META_INVALID, NULL_ADDR, RC_FLAG, _mix, fused_probe_body
+from .ref import (META_INVALID, NULL_ADDR, RC_FLAG, _mix, fused_probe_body,
+                  fused_write_body)
 
 
 # ---------------------------------------------------------------------------
@@ -86,13 +96,14 @@ def probe(keys, index_addr, *, b_tile: int = 1024, e_tile: int = 1 << 16,
 # Fused probe engine (slot hash -> chain walk -> RC check -> value)
 # ---------------------------------------------------------------------------
 
-def _fused_kernel(keys_ref, heads_ref, lower_ref, active_ref, hb_ref,
+def _fused_kernel(keys_ref, heads_ref, lower_ref, active_ref, target_ref,
+                  hb_ref,
                   log_key_ref, log_val_ref, log_prev_ref, log_meta_ref,
                   rc_key_ref, rc_val_ref, rc_prev_ref, rc_meta_ref,
                   found_ref, addr_ref, heads_out_ref, val_ref, meta_ref,
                   hops_ref, ios_ref, exh_ref, *,
                   chain_max: int, rc_match: bool, has_rc: bool,
-                  probe_index: bool):
+                  probe_index: bool, has_target: bool):
     # load the VMEM blocks into arrays, then run the shared walk body —
     # kernel and jnp reference execute literally the same code
     found, faddr, heads, value, meta, hops, ios, exhausted = fused_probe_body(
@@ -102,7 +113,8 @@ def _fused_kernel(keys_ref, heads_ref, lower_ref, active_ref, hb_ref,
         log_meta_ref[...],
         rc_key_ref[...], rc_val_ref[...], rc_prev_ref[...], rc_meta_ref[...],
         chain_max=chain_max, rc_match=rc_match, has_rc=has_rc,
-        probe_index=probe_index)
+        probe_index=probe_index,
+        target=target_ref[...] if has_target else None)
     found_ref[...] = found.astype(jnp.int32)
     addr_ref[...] = faddr
     heads_out_ref[...] = heads
@@ -117,7 +129,7 @@ def fused_probe(keys, heads_src, lower, active, head_boundary,
                 log_key, log_val, log_prev, log_meta,
                 rc_key, rc_val, rc_prev, rc_meta, *,
                 chain_max: int, rc_match: bool = True, has_rc: bool = True,
-                probe_index: bool = True, b_tile: int = 1024,
+                probe_index: bool = True, target=None, b_tile: int = 1024,
                 interpret: bool = False):
     """Fused probe over a key batch.  Shapes as in `ref.fused_probe_reference`;
     `active` and the returned found/exhausted are int32 masks (0/1) at this
@@ -132,6 +144,9 @@ def fused_probe(keys, heads_src, lower, active, head_boundary,
     b_tile = min(b_tile, B)
     assert B % b_tile == 0
     grid = (B // b_tile,)
+    has_target = target is not None
+    if target is None:
+        target = jnp.full((B,), NULL_ADDR, jnp.int32)   # never dereferenced
 
     lane = pl.BlockSpec((b_tile,), lambda bi: (bi,))
 
@@ -141,7 +156,7 @@ def fused_probe(keys, heads_src, lower, active, head_boundary,
     heads_spec = full((E,)) if probe_index else lane
     kernel = functools.partial(
         _fused_kernel, chain_max=chain_max, rc_match=rc_match, has_rc=has_rc,
-        probe_index=probe_index)
+        probe_index=probe_index, has_target=has_target)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -150,6 +165,7 @@ def fused_probe(keys, heads_src, lower, active, head_boundary,
             heads_spec,           # index or per-lane heads
             lane,                 # lower
             lane,                 # active
+            lane,                 # target
             full((1,)),           # head_boundary
             full((C,)), full((C, V)), full((C,)), full((C,)),   # log columns
             full((R,)), full((R, V)), full((R,)), full((R,)),   # rc columns
@@ -169,6 +185,80 @@ def fused_probe(keys, heads_src, lower, active, head_boundary,
             jax.ShapeDtypeStruct((B,), jnp.int32),      # exhausted
         ],
         interpret=interpret,
-    )(keys, heads_src, lower, active, head_boundary,
+    )(keys, heads_src, lower, active, target, head_boundary,
+      log_key, log_val, log_prev, log_meta,
+      rc_key, rc_val, rc_prev, rc_meta)
+
+
+# ---------------------------------------------------------------------------
+# Fused write engine (linearize -> locate -> classify -> plan)
+# ---------------------------------------------------------------------------
+
+def _fused_write_kernel(keys_ref, ops_ref, vals_ref, index_ref, bounds_ref,
+                        log_key_ref, log_val_ref, log_prev_ref, log_meta_ref,
+                        rc_key_ref, rc_val_ref, rc_prev_ref, rc_meta_ref,
+                        rep_ref, rep_pos_ref, val_nc_ref, tomb_ref, cold_ref,
+                        created_ref, found_ref, addr_ref, inpl_ref, app_ref,
+                        new_addr_ref, prevs_ref, slots_ref, pub_ref,
+                        heads_ref, rcinv_ref, hops_ref, ios_ref, exh_ref, *,
+                        chain_max: int):
+    out = fused_write_body(
+        keys_ref[...], ops_ref[...], vals_ref[...], index_ref[...],
+        bounds_ref[0], bounds_ref[1], bounds_ref[2], bounds_ref[3],
+        log_key_ref[...], log_val_ref[...], log_prev_ref[...],
+        log_meta_ref[...],
+        rc_key_ref[...], rc_val_ref[...], rc_prev_ref[...], rc_meta_ref[...],
+        chain_max=chain_max)
+    refs = (rep_ref, rep_pos_ref, val_nc_ref, tomb_ref, cold_ref, created_ref,
+            found_ref, addr_ref, inpl_ref, app_ref, new_addr_ref, prevs_ref,
+            slots_ref, pub_ref, heads_ref, rcinv_ref, hops_ref, ios_ref,
+            exh_ref)
+    for ref, arr in zip(refs, out):
+        ref[...] = arr.astype(jnp.int32)
+
+
+def fused_write(keys, ops, vals, index, bounds,
+                log_key, log_val, log_prev, log_meta,
+                rc_key, rc_val, rc_prev, rc_meta, *,
+                chain_max: int, interpret: bool = False):
+    """Fused write-plan pass.  `bounds` packs the four scalars
+    (begin, head_boundary, ro_addr, tail) as an int32 [4] array.  The whole
+    batch is one grid step (intra-batch grouping needs every lane); masks
+    in/out are int32 at this layer.  Returns the 19-tuple of
+    `ref.fused_write_body`, every element int32.
+    """
+    B = keys.shape[0]
+    C = log_key.shape[0]
+    R = rc_key.shape[0]
+    V = log_val.shape[1]
+    E = index.shape[0]
+    assert (C & (C - 1)) == 0 and (R & (R - 1)) == 0
+
+    def full(shape):
+        return pl.BlockSpec(shape, lambda: (0,) * len(shape))
+
+    lane_shapes = dict(B=(B,), BV=(B, V))
+    out_specs = [full(lane_shapes["B"])] * 2 + [full(lane_shapes["BV"])] + \
+                [full(lane_shapes["B"])] * 16
+    out_shape = ([jax.ShapeDtypeStruct((B,), jnp.int32)] * 2
+                 + [jax.ShapeDtypeStruct((B, V), jnp.int32)]
+                 + [jax.ShapeDtypeStruct((B,), jnp.int32)] * 16)
+    kernel = functools.partial(_fused_write_kernel, chain_max=chain_max)
+    return pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[
+            full((B,)),           # keys
+            full((B,)),           # ops
+            full((B, V)),         # vals
+            full((E,)),           # hot index
+            full((4,)),           # bounds: begin, head_boundary, ro, tail
+            full((C,)), full((C, V)), full((C,)), full((C,)),   # log columns
+            full((R,)), full((R, V)), full((R,)), full((R,)),   # rc columns
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(keys, ops, vals, index, bounds,
       log_key, log_val, log_prev, log_meta,
       rc_key, rc_val, rc_prev, rc_meta)

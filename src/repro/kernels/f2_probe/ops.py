@@ -1,8 +1,10 @@
-"""jit'd wrappers for the F2 probe kernels.
+"""jit'd wrappers for the F2 probe/write kernels.
 
 `fused_probe` pads the key batch up to a tile multiple with inactive lanes
 (inactive lanes emit found=0, hops=0 and contribute nothing to the modeled
-I/O sums), so callers may pass any batch size.
+I/O sums), so callers may pass any batch size.  `fused_write` pads to a
+lane multiple with OP_NOOP lanes, which never group, walk, append, or
+publish.
 """
 from __future__ import annotations
 
@@ -12,8 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from .f2_probe import fused_probe as _fused_kernel
+from .f2_probe import fused_write as _fused_write_kernel
 from .f2_probe import probe as _kernel
-from .ref import fused_probe_reference, probe_reference
+from .ref import fused_probe_reference, fused_write_reference, probe_reference
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -26,7 +29,7 @@ def fused_probe(keys, heads_src, lower, active, head_boundary,
                 log_key, log_val, log_prev, log_meta,
                 rc_key, rc_val, rc_prev, rc_meta, *,
                 chain_max: int, rc_match: bool = True, has_rc: bool = True,
-                probe_index: bool = True, b_tile: int = 1024,
+                probe_index: bool = True, target=None, b_tile: int = 1024,
                 interpret: bool | None = None):
     """Callable under an outer jit.  Boolean masks in/out; pads B to a tile
     multiple.  Returns (found, addr, heads, value, meta, hops, ios,
@@ -43,6 +46,7 @@ def fused_probe(keys, heads_src, lower, active, head_boundary,
     lower_p = pad1(lower)
     active_p = pad1(active.astype(jnp.int32))
     heads_p = heads_src if probe_index else pad1(heads_src, fill=-1)
+    target_p = None if target is None else pad1(target, fill=-1)
     hb = jnp.reshape(head_boundary.astype(jnp.int32), (1,))
 
     out = _fused_kernel(
@@ -50,7 +54,7 @@ def fused_probe(keys, heads_src, lower, active, head_boundary,
         log_key, log_val, log_prev, log_meta,
         rc_key, rc_val, rc_prev, rc_meta,
         chain_max=chain_max, rc_match=rc_match, has_rc=has_rc,
-        probe_index=probe_index, b_tile=bt, interpret=itp)
+        probe_index=probe_index, target=target_p, b_tile=bt, interpret=itp)
     found, addr, heads, value, meta, hops, ios, exhausted = out
     if pad:
         found, addr, heads, meta, hops, ios, exhausted = (
@@ -59,5 +63,43 @@ def fused_probe(keys, heads_src, lower, active, head_boundary,
     return (found != 0, addr, heads, value, meta, hops, ios, exhausted != 0)
 
 
+def fused_write(keys, ops, vals, index, begin, head_boundary, ro_addr, tail,
+                log_key, log_val, log_prev, log_meta,
+                rc_key, rc_val, rc_prev, rc_meta, *,
+                chain_max: int, lane_multiple: int = 128,
+                interpret: bool | None = None):
+    """Callable under an outer jit.  Pads B up to `lane_multiple` with
+    OP_NOOP lanes (inert: no grouping, no walk, no append).  Boolean masks
+    out; returns the 19-tuple of `ref.fused_write_body`."""
+    itp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    B = keys.shape[0]
+    pad = (-B) % lane_multiple
+
+    def pad1(x, fill=0):
+        return jnp.pad(x, (0, pad), constant_values=fill) if pad else x
+
+    keys_p = pad1(keys)
+    ops_p = pad1(ops)            # 0 == OP_NOOP: padded lanes never mutate
+    vals_p = jnp.pad(vals, ((0, pad), (0, 0))) if pad else vals
+    bounds = jnp.stack([jnp.int32(begin), jnp.int32(head_boundary),
+                        jnp.int32(ro_addr), jnp.int32(tail)])
+
+    out = _fused_write_kernel(
+        keys_p, ops_p, vals_p, index, bounds,
+        log_key, log_val, log_prev, log_meta,
+        rc_key, rc_val, rc_prev, rc_meta,
+        chain_max=chain_max, interpret=itp)
+    if pad:
+        out = tuple(x[:B] for x in out)
+    (rep, rep_pos, val_nocold, final_tomb, need_cold, created_nocold,
+     found, addr, in_place, append, new_addrs, prevs, slots, publish,
+     heads, rc_inval, hops, ios, exhausted) = out
+    return (rep != 0, rep_pos, val_nocold, final_tomb != 0, need_cold != 0,
+            created_nocold != 0, found != 0, addr, in_place != 0,
+            append != 0, new_addrs, prevs, slots, publish != 0, heads,
+            rc_inval != 0, hops, ios, exhausted != 0)
+
+
 probe_ref = probe_reference
 fused_probe_ref = fused_probe_reference
+fused_write_ref = fused_write_reference

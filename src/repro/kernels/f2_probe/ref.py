@@ -1,14 +1,25 @@
-"""Pure-jnp oracles for the F2 probe kernels.
+"""Pure-jnp oracles for the F2 probe/write kernels.
 
-Two levels:
+Three levels:
 
   * `probe_reference` — the original first-hop oracle (slot hash -> index
     gather -> RC decode), kept for the legacy `probe` kernel.
-  * `fused_probe_reference` — the full fused engine oracle: slot hash ->
+  * `fused_probe_reference` — the full read-engine oracle: slot hash ->
     index gather -> bounded chain walk with per-hop lower bounds (resolving
     both log and read-cache records) -> value/meta resolution.  This is the
     `interpret`/reference fallback of the Pallas engine and is bit-exact
-    with `core.chain.walk` + the store's unfused gather sequence.
+    with `core.chain.walk` + the store's unfused gather sequence.  The
+    optional `target` input is the liveness fast path of lookup-based
+    compaction (paper S5.2): a lane whose resolved chain head already
+    equals its target address resolves at hop 0 with zero modeled I/O —
+    the `head == addr` pure-address compare as a kernel predicate.
+  * `fused_write_reference` — the write-engine oracle: one pass that
+    linearizes a mutate batch per key (last-set selection + RMW
+    accumulation, computed with B x B group masks instead of the argsort
+    the unfused path uses — bit-exact because int32 addition commutes),
+    runs the hot-log locate walk with RC skip, classifies in-place vs RCU
+    against the mutable boundary, computes intra-batch chain offsets, and
+    emits the append/index-publish plan that `store.write_batch` applies.
 """
 from __future__ import annotations
 
@@ -18,6 +29,17 @@ from jax import lax
 RC_FLAG = 1 << 30
 NULL_ADDR = -1
 META_INVALID = 2
+META_TOMBSTONE = 1
+OP_UPSERT = 2
+OP_RMW = 3
+OP_DELETE = 4
+
+_BIG = 2**30
+
+
+def _iota(n: int):
+    """1-D int32 iota via a 2-D broadcast (TPU has no 1-D iota)."""
+    return lax.broadcasted_iota(jnp.int32, (n, 1), 0).reshape((n,))
 
 
 def _mix(x):
@@ -51,13 +73,25 @@ def fused_probe_body(
     rc_match: bool = True,
     has_rc: bool = True,
     probe_index: bool = True,
+    target=None,          # int32 [B] or None: liveness fast-path addresses
+    early_exit: bool = False,
 ):
     """Returns (found, addr, heads, value, meta, hops, ios, exhausted).
+
+    `early_exit` swaps the static-trip fori_loop for a while_loop that
+    stops once no lane can still progress — bit-exact (the skipped
+    iterations are no-ops: every lane is done or out of range) and a large
+    win off-TPU where skewed batches resolve in a few hops; the Pallas
+    kernel keeps the static trip count the TPU compiler wants.
 
     found [B] bool; addr [B] int32 (RC-tagged when the hit is a replica);
     heads [B] int32 the resolved chain heads; value [B, V] / meta [B] of the
     hit record (0 when not found); hops/ios [B] int32 per-lane record
     touches / stable-tier touches; exhausted [B] bool.
+
+    With `target`, a lane whose resolved head equals its target address is
+    done before the first hop (found at the target, hops = ios = 0) — the
+    zero-I/O liveness fast path of lookup-based compaction.
 
     Plain-array single source of truth for the fused walk: the Pallas
     kernel loads its VMEM blocks and calls this same body, so kernel and
@@ -76,6 +110,11 @@ def fused_probe_body(
 
     null = jnp.int32(NULL_ADDR)
     rc_flag = jnp.int32(RC_FLAG)
+
+    if target is not None:
+        fast = active & (heads == target)
+    else:
+        fast = jnp.zeros((B,), jnp.bool_)
 
     def body(_, carry):
         cur, done, faddr, hops, ios = carry
@@ -111,12 +150,27 @@ def fused_probe_body(
 
     init = (
         heads,
-        jnp.zeros((B,), jnp.bool_),
-        jnp.full((B,), NULL_ADDR, jnp.int32),
+        fast,
+        jnp.where(fast, heads, jnp.int32(NULL_ADDR)),
         jnp.zeros((B,), jnp.int32),
         jnp.zeros((B,), jnp.int32),
     )
-    cur, done, faddr, hops, ios = lax.fori_loop(0, chain_max, body, init)
+    if early_exit:
+        def cond(carry):
+            i, cur, done, _, _, _ = carry
+            cur_is_rc = (cur >= 0) & ((cur & rc_flag) != 0)
+            in_range = jnp.where(cur_is_rc, cur != null,
+                                 (cur != null) & (cur >= lower))
+            return (i < chain_max) & jnp.any(active & ~done & in_range)
+
+        def wbody(carry):
+            i, *rest = carry
+            return (i + jnp.int32(1),) + tuple(body(i, tuple(rest)))
+
+        out = lax.while_loop(cond, wbody, (jnp.int32(0),) + init)
+        cur, done, faddr, hops, ios = out[1:]
+    else:
+        cur, done, faddr, hops, ios = lax.fori_loop(0, chain_max, body, init)
 
     cur_is_rc = (cur >= 0) & ((cur & rc_flag) != 0)
     still_in_range = jnp.where(cur_is_rc, cur != null,
@@ -140,3 +194,130 @@ def fused_probe_body(
 
 
 fused_probe_reference = fused_probe_body
+
+
+# ---------------------------------------------------------------------------
+# Fused write engine (linearize -> locate -> classify -> plan)
+# ---------------------------------------------------------------------------
+
+def fused_write_body(
+    keys,                 # int32 [B]
+    ops,                  # int32 [B] op codes (OP_UPSERT/OP_RMW/OP_DELETE mutate)
+    vals,                 # int32 [B, V]
+    index,                # int32 [E] hot-index chain heads (maybe RC-tagged)
+    begin,                # int32 scalar: hot-log BEGIN (walk lower bound)
+    head_boundary,        # int32 scalar: first in-memory address (I/O model)
+    ro_addr,              # int32 scalar: mutable-region boundary (in-place vs RCU)
+    tail,                 # int32 scalar: hot-log TAIL (append address base)
+    log_key, log_val, log_prev, log_meta,   # [C], [C,V], [C], [C]
+    rc_key, rc_val, rc_prev, rc_meta,       # [R], [R,V], [R], [R]
+    *,
+    chain_max: int,
+    early_exit: bool = False,
+):
+    """One fused pass over a mutate batch; returns the 19-tuple write plan
+
+        (rep, rep_pos, val_nocold, final_tomb, need_cold, created_nocold,
+         found, addr, in_place, append, new_addrs, prevs, slots, publish,
+         heads, rc_inval, hops, ios, exhausted)
+
+    aligned with `core.write_engine.WritePlan`.  Group structure (one
+    representative per key, last-set position, RMW accumulation, per-slot
+    append chaining) is computed with B x B equality masks — the branch-free
+    replacement for the unfused path's stable argsort; both orderings sum
+    the same int32 contributions, so the results are bit-exact.
+
+    `val_nocold` is the final record value assuming the cold log contributes
+    nothing; lanes in `need_cold` (pure-RMW groups that missed the hot log)
+    add their cold base value outside this pass, which keeps the engine free
+    of any cold-index dependency.
+    """
+    B = keys.shape[0]
+    V = vals.shape[1]
+    E = index.shape[0]
+    R = rc_key.shape[0]
+    pos = _iota(B)
+    pi = pos[:, None]
+    pj = pos[None, :]
+
+    wmask = (ops == OP_UPSERT) | (ops == OP_RMW) | (ops == OP_DELETE)
+    is_set = (ops == OP_UPSERT) | (ops == OP_DELETE)
+
+    # --- per-key linearization (B x B group masks) --------------------------
+    eqk = wmask[:, None] & wmask[None, :] & (keys[:, None] == keys[None, :])
+    rep_pos = jnp.min(jnp.where(eqk, pj, jnp.int32(_BIG)), axis=1)
+    rep_pos = jnp.where(wmask, rep_pos, -1)
+    rep = wmask & (rep_pos == pos)
+    last_set = jnp.max(jnp.where(eqk & is_set[None, :], pj, -1), axis=1)
+    last_set = jnp.where(wmask, last_set, -1)
+    has_set = last_set >= 0
+    set_val = jnp.where(has_set[:, None], vals[jnp.maximum(last_set, 0)], 0)
+    set_is_del = has_set & (ops[jnp.maximum(last_set, 0)] == OP_DELETE)
+    rmw_after = wmask & (ops == OP_RMW) & (pos > last_set)
+    contrib = eqk & rmw_after[None, :]
+    # per-word masked row sums (V is tiny; avoids an int32 matmul)
+    rmw_sum = jnp.stack(
+        [jnp.sum(jnp.where(contrib, vals[:, v][None, :], 0), axis=1)
+         for v in range(V)], axis=1)
+    rmw_cnt = jnp.sum(contrib.astype(jnp.int32), axis=1)
+
+    # --- locate the most recent *log* record (RC skip) ----------------------
+    lower = jnp.broadcast_to(begin, (B,))
+    found, faddr, heads, fval, fmeta, hops, ios, exhausted = fused_probe_body(
+        keys, index, lower, rep, head_boundary,
+        log_key, log_val, log_prev, log_meta,
+        rc_key, rc_val, rc_prev, rc_meta,
+        chain_max=chain_max, rc_match=False, has_rc=True, probe_index=True,
+        early_exit=early_exit)
+    found_tomb = found & ((fmeta & jnp.int32(META_TOMBSTONE)) != 0)
+    found_mut = found & (faddr >= ro_addr)
+
+    # --- base value for pure-RMW groups -------------------------------------
+    pure_rmw = rep & ~has_set & (rmw_cnt > 0)
+    base_hot = pure_rmw & found & ~found_tomb
+    need_cold = pure_rmw & ~found      # hot tombstone => absent, skip cold
+    created_nocold = pure_rmw & ~base_hot
+
+    base = jnp.where(base_hot[:, None], fval, 0)
+    val_nocold = jnp.where(has_set[:, None] & ~set_is_del[:, None],
+                           set_val + rmw_sum,
+                           jnp.where((has_set & set_is_del
+                                      & (rmw_cnt > 0))[:, None],
+                                     rmw_sum, base + rmw_sum))
+    val_nocold = jnp.where(rep[:, None], val_nocold, 0)
+    final_tomb = rep & has_set & set_is_del & (rmw_cnt == 0)
+
+    # --- in-place (mutable region) vs RCU append ----------------------------
+    in_place = rep & found_mut
+    append = rep & ~in_place
+
+    # effective chain head: skip + detach an RC head (hot records never
+    # point into the read cache)
+    rc_flag = jnp.int32(RC_FLAG)
+    head_is_rc = (heads >= 0) & ((heads & rc_flag) != 0)
+    rc_idx = jnp.maximum(heads & ~rc_flag, 0) & jnp.int32(R - 1)
+    rc_k = rc_key[rc_idx]
+    rc_p = rc_prev[rc_idx]
+    eff_prev = jnp.where(head_is_rc, rc_p, heads)
+    rc_inval = (append & head_is_rc) | (in_place & head_is_rc
+                                        & (rc_k == keys))
+
+    # --- intra-batch chaining by hash slot ----------------------------------
+    slots = (_mix(keys) & jnp.uint32(E - 1)).astype(jnp.int32)
+    eqs = append[:, None] & append[None, :] & (slots[:, None] == slots[None, :])
+    pred = jnp.max(jnp.where(eqs & (pj < pi), pj, -1), axis=1)
+    is_last = append & ~jnp.any(eqs & (pj > pi), axis=1)
+    a32 = append.astype(jnp.int32)
+    offs = jnp.cumsum(a32) - a32
+    new_addrs = jnp.where(append, tail + offs, jnp.int32(NULL_ADDR))
+    pred_addr = jnp.where(pred >= 0, new_addrs[jnp.maximum(pred, 0)], 0)
+    prevs = jnp.where(append,
+                      jnp.where(pred >= 0, pred_addr, eff_prev),
+                      jnp.int32(NULL_ADDR))
+
+    return (rep, rep_pos, val_nocold, final_tomb, need_cold, created_nocold,
+            found, faddr, in_place, append, new_addrs, prevs, slots,
+            is_last, heads, rc_inval, hops, ios, exhausted)
+
+
+fused_write_reference = fused_write_body

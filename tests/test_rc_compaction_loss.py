@@ -1,0 +1,108 @@
+"""Regression suite for the RC-admission/compaction record-loss bug
+(ROADMAP, found while verifying PR 1).
+
+Root cause: a single read batch could admit more replicas than the read
+cache holds.  `read_cache.insert`'s eviction repair reads the *pre-batch*
+ring content and index, so when the ring wrapped within one insert, index
+entries stayed RC-tagged while their slot was overwritten by another key.
+A later liveness walk starting from such a head lands on a wrong-key
+replica and continues along the *wrong* chain (the overwriting record's
+`prev`), so compaction judged live records dead and truncation lost them
+(~71% of keys in the quickstart-shaped repro).
+
+The fix clamps admissions per batch to the ring capacity, so every dying
+logical address belongs to a previous batch and the repair pass sees it.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import KV, F2Config, ST_OK, read_cache
+from repro.core.types import RC_FLAG, rc_untag, hash32
+
+
+def _quickstart_cfg(**kw):
+    base = dict(hot_index_size=1 << 12, hot_capacity=1 << 13,
+                hot_mem=1 << 10, cold_capacity=1 << 15, cold_mem=1 << 8,
+                n_chunks=1 << 9, chunklog_capacity=1 << 12,
+                chunklog_mem=1 << 7, rc_capacity=1 << 9, value_width=4)
+    base.update(kw)
+    return F2Config(**base)
+
+
+def _rc_heads_consistent(state):
+    """Every RC-tagged index entry must point at a ring slot that still
+    holds its logical address (i.e. hashes back to that index slot)."""
+    idx = np.asarray(state.hot_index)
+    tagged = (idx >= 0) & ((idx & int(RC_FLAG)) != 0)
+    if not tagged.any():
+        return True
+    cap = state.rc.key.shape[0]
+    ut = idx[tagged] & ~int(RC_FLAG)
+    # logical address must still be within the live ring window
+    in_window = ut >= int(state.rc.tail) - cap
+    rc_keys = np.asarray(state.rc.key)[ut & (cap - 1)]
+    islot = np.asarray(hash32(jnp.asarray(rc_keys))
+                       & jnp.uint32(idx.shape[0] - 1))
+    return bool(np.all(in_window & (islot == np.flatnonzero(tagged))))
+
+
+def test_upsert_read_compact_read_loses_nothing():
+    """The ROADMAP repro: upsert 4096 -> read (RC admits) ->
+    compact_hot_cold(tail) -> read must find every key."""
+    cfg = _quickstart_cfg()
+    kv = KV(cfg, mode="f2")
+    keys = np.arange(4096, dtype=np.int32)
+    vals = np.stack([keys, keys * 2, keys * 3, keys * 4], 1).astype(np.int32)
+    kv.upsert(keys, vals)
+
+    status, _ = kv.read(keys)                   # RC admission pass
+    assert np.all(np.asarray(status) == ST_OK)
+    assert _rc_heads_consistent(kv.state)
+
+    kv.compact_hot_cold(int(kv.state.hot.tail))  # full hot->cold compaction
+    status, out = kv.read(keys)
+    lost = np.flatnonzero(np.asarray(status) != ST_OK)
+    assert lost.size == 0, f"{lost.size}/4096 keys lost: {lost[:16]}"
+    assert np.array_equal(np.asarray(out), vals)
+    kv.check_invariants()
+
+
+def test_rc_insert_batch_larger_than_capacity():
+    """Unit-level: one insert of 4*capacity lanes must keep the index free
+    of dangling RC tags and never publish an overwritten logical address."""
+    cfg = _quickstart_cfg()
+    cap = cfg.rc_capacity
+    E = cfg.hot_index_size
+    B = 4 * cap
+    rc = read_cache.create(cap, cfg.value_width)
+    index = jnp.full((E,), 5, jnp.int32)         # fake hot-log heads
+    keys = jnp.arange(B, dtype=jnp.int32)
+    vals = jnp.zeros((B, cfg.value_width), jnp.int32)
+    prevs = jnp.full((B,), 5, jnp.int32)
+    mask = jnp.ones((B,), bool)
+    rc, index, tagged = read_cache.insert(rc, index, mask, keys, vals, prevs)
+    # no more admissions than the ring holds
+    assert int(rc.tail) <= cap
+    # every published tag resolves to the key that was admitted
+    t = np.asarray(tagged)
+    live = t != -1
+    slots = np.asarray(rc_untag(jnp.asarray(t[live]))) & (cap - 1)
+    assert np.array_equal(np.asarray(rc.key)[slots],
+                          np.asarray(keys)[live])
+
+
+@pytest.mark.parametrize("rc_capacity", [1, 1 << 7, 1 << 9])
+def test_compaction_loss_across_rc_sizes(rc_capacity):
+    """The repro must hold whether the RC is disabled-ish (1), smaller than
+    the batch, or quickstart-sized."""
+    cfg = _quickstart_cfg(rc_capacity=rc_capacity)
+    kv = KV(cfg, mode="f2")
+    keys = np.arange(2048, dtype=np.int32)
+    vals = np.stack([keys] * cfg.value_width, 1).astype(np.int32)
+    kv.upsert(keys, vals)
+    kv.read(keys)
+    kv.compact_hot_cold(int(kv.state.hot.tail))
+    status, _ = kv.read(keys)
+    assert np.all(np.asarray(status) == ST_OK)
+    kv.check_invariants()

@@ -1,0 +1,224 @@
+"""Parity suite for the fused write engine (ISSUE 2 acceptance).
+
+Every backend of `core.write_engine` — the unfused seed path ("jnp",
+argsort linearization + `chain.walk`), the pure-jnp fused reference
+("fused_ref", B x B group masks), and the Pallas kernel in interpret mode
+("fused_pallas") — must produce a bit-exact `WritePlan` on the same store
+state, across mixed Upsert/RMW/Delete batches including duplicate-key
+batches, all-colliding-slot batches, and RMW-after-Delete groups; and
+`store.write_batch` must produce bit-exact statuses and F2State under
+every engine.  The compaction liveness probes (target mode) must agree
+with the unfused `chain.walk` verdicts on frontiers holding live, dead,
+and tombstone records.
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import KV, compaction, hybrid_log, probe_engine, store, write_engine
+from repro.core.types import (OP_DELETE, OP_NOOP, OP_READ, OP_RMW, OP_UPSERT,
+                              hash32)
+from conftest import small_cfg
+
+ENGINES = ("jnp", "fused_ref", "fused_pallas")
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return small_cfg(chain_max=64)
+
+
+def _colliding_keys(index_size: int, n: int, slot: int = 7) -> np.ndarray:
+    out = []
+    k = 0
+    while len(out) < n:
+        if int(hash32(jnp.int32(k)) & jnp.uint32(index_size - 1)) == slot:
+            out.append(k)
+        k += 1
+    return np.asarray(out, np.int32)
+
+
+def _mixed_state(cfg, keys, read_frac=0.5):
+    """Hot in-memory + stable-tier + cold records + RC replicas + tombstones:
+    the write path must classify against all of them."""
+    kv = KV(cfg, mode="f2", trigger=2.0, donate=False)
+    vals = np.stack([keys] * cfg.value_width, 1).astype(np.int32) + 1
+    kv.upsert(keys, vals)
+    kv.compact_hot_cold(int(kv.state.hot.tail) // 2)
+    kv.read(keys[: int(len(keys) * read_frac)])       # RC admissions
+    kv.delete(keys[::11])                             # hot tombstones
+    return kv
+
+
+def _write_batches(cfg, rng):
+    """The acceptance distributions: (name, keys, ops, vals)."""
+    V = cfg.value_width
+
+    def mk(keys, ops):
+        vals = rng.integers(0, 100, (len(keys), V)).astype(np.int32)
+        return (np.asarray(keys, np.int32), np.asarray(ops, np.int32), vals)
+
+    B = 192
+    mixed_ops = rng.choice([OP_READ, OP_UPSERT, OP_RMW, OP_DELETE], B,
+                           p=[.2, .3, .3, .2])
+    uniform = mk(rng.integers(0, 300, B), mixed_ops)
+
+    # duplicate-key batches: every key appears ~8x with mixed ops
+    dup_keys = np.repeat(rng.integers(0, 24, B // 8), 8)
+    dup = mk(rng.permutation(dup_keys),
+             rng.choice([OP_UPSERT, OP_RMW, OP_DELETE], B))
+
+    # all ops land on one hash-index slot (adversarial chain sharing)
+    collide = _colliding_keys(cfg.hot_index_size, 32)
+    coll_keys = np.concatenate([collide, collide[:16]])
+    coll = mk(coll_keys, rng.choice([OP_UPSERT, OP_RMW, OP_DELETE],
+                                    len(coll_keys)))
+
+    # RMW-after-Delete groups: Delete then RMWs to the same key in-batch
+    rad_keys = np.repeat(np.arange(16, dtype=np.int32), 6)
+    rad_ops = np.tile([OP_DELETE, OP_RMW, OP_RMW, OP_UPSERT, OP_DELETE,
+                       OP_RMW], 16)
+    rad = mk(rad_keys, rad_ops)
+
+    # pure-RMW batch on absent + cold-resident + hot keys (created / cold base)
+    pr_keys = np.concatenate([np.arange(0, 32), np.arange(9000, 9032)])
+    pure = mk(pr_keys.astype(np.int32), np.full(64, OP_RMW))
+
+    return [("uniform_mixed", *uniform), ("duplicate_keys", *dup),
+            ("all_colliding_slot", *coll), ("rmw_after_delete", *rad),
+            ("pure_rmw_created", *pure)]
+
+
+def _assert_plans_equal(plans, ctx):
+    ref = plans["jnp"]
+    for eng, p in plans.items():
+        for field in ref._fields:
+            a = np.asarray(getattr(ref, field))
+            b = np.asarray(getattr(p, field))
+            assert np.array_equal(a, b), (ctx, eng, field)
+
+
+def test_write_plan_parity_across_engines(cfg):
+    rng = np.random.default_rng(0)
+    kv = _mixed_state(cfg, np.arange(256, dtype=np.int32))
+    st = kv.state
+    for name, keys, ops, vals in _write_batches(cfg, rng):
+        plans = {
+            eng: write_engine.plan(cfg, jnp.asarray(keys), jnp.asarray(ops),
+                                   jnp.asarray(vals), st.hot, st.hot_index,
+                                   st.rc, engine=eng)
+            for eng in ENGINES
+        }
+        _assert_plans_equal(plans, name)
+        # the batch must actually exercise the interesting paths
+        plan = plans["jnp"]
+        assert int(np.sum(np.asarray(plan.rep))) > 0, name
+        if name == "duplicate_keys":
+            assert int(np.sum(np.asarray(plan.rep))) < len(keys)
+
+
+def _state_fingerprint(st, status):
+    return (np.asarray(status), np.asarray(st.hot.key), np.asarray(st.hot.val),
+            np.asarray(st.hot.prev), np.asarray(st.hot.meta),
+            np.asarray(st.hot.tail), np.asarray(st.hot_index),
+            np.asarray(st.rc.meta), np.asarray(st.rc.tail),
+            np.asarray(st.stats.read_ops), np.asarray(st.stats.read_blocks),
+            np.asarray(st.stats.mem_hits), np.asarray(st.stats.write_blocks))
+
+
+def test_write_batch_engine_independent(cfg):
+    """Full store write path: statuses and the entire post-batch F2State
+    must be bit-exact under every engine."""
+    rng = np.random.default_rng(1)
+    kv = _mixed_state(cfg, np.arange(256, dtype=np.int32))
+    for name, keys, ops, vals in _write_batches(cfg, rng):
+        out = {}
+        for eng in ENGINES:
+            ecfg = dataclasses.replace(cfg, engine=eng)
+            st2, status = store.write_batch(ecfg, kv.state, jnp.asarray(keys),
+                                            jnp.asarray(ops),
+                                            jnp.asarray(vals))
+            out[eng] = _state_fingerprint(st2, status)
+        for eng in ENGINES[1:]:
+            for i, (a, b) in enumerate(zip(out["jnp"], out[eng])):
+                assert np.array_equal(a, b), (name, eng, i)
+
+
+def test_rmw_after_delete_linearization(cfg):
+    """Delete then k RMWs in one batch == counter restarted at sum(deltas),
+    under every engine (exact sequential linearization)."""
+    for eng in ENGINES:
+        ecfg = dataclasses.replace(cfg, engine=eng)
+        kv = KV(ecfg, mode="f2", trigger=2.0, donate=False)
+        V = ecfg.value_width
+        kv.upsert(np.asarray([7], np.int32), np.full((1, V), 100, np.int32))
+        keys = np.full(4, 7, np.int32)
+        ops = np.asarray([OP_RMW, OP_DELETE, OP_RMW, OP_RMW], np.int32)
+        vals = np.stack([np.full(V, d, np.int32) for d in (5, 0, 3, 9)])
+        kv.apply(keys, ops, vals)
+        status, out = kv.read(np.asarray([7], np.int32))
+        assert int(status[0]) == 1
+        assert np.all(np.asarray(out)[0] == 12), eng      # 3 + 9, not 117
+
+
+def test_compaction_liveness_parity(cfg):
+    """Fused liveness verdicts (probe target mode) == unfused chain.walk
+    verdicts on a frontier holding live records, superseded (dead) records,
+    and tombstones — for all three compaction steps."""
+    # a tiny mutable region forces supersedes/deletes to append (RCU), so
+    # the frontier really holds dead records below newer versions
+    lcfg = small_cfg(chain_max=64, hot_mutable_frac=0.05)
+    keys = np.arange(192, dtype=np.int32)
+    kv = _mixed_state(lcfg, keys, read_frac=0.3)
+    # supersede a third of the keys so the frontier has dead records
+    kv.upsert(keys[::3], np.full((len(keys[::3]), lcfg.value_width), 9,
+                                 np.int32))
+    st = kv.state
+    B = 128
+    outs = {}
+    for eng in ENGINES:
+        ecfg = dataclasses.replace(lcfg, engine=eng)
+        res = {}
+        st_h, n_h = compaction.hot_cold_step(ecfg, st, st.hot.begin,
+                                             st.hot.tail, B)
+        res["hot_cold"] = (int(n_h), *_state_fingerprint(st_h, 0))
+        st_c, n_c = compaction.cold_cold_step(ecfg, st, st.cold.begin,
+                                              st.cold.tail, B)
+        res["cold_cold"] = (int(n_c), np.asarray(st_c.cold.tail),
+                            np.asarray(st_c.cold.key),
+                            np.asarray(st_c.stats.read_ops),
+                            np.asarray(st_c.stats.mem_hits))
+        st_s, n_s = compaction.single_log_lookup_step(ecfg, st, st.hot.begin,
+                                                      st.hot.tail, B)
+        res["single_log"] = (int(n_s), *_state_fingerprint(st_s, 0))
+        outs[eng] = res
+    for eng in ENGINES[1:]:
+        for step in outs["jnp"]:
+            for i, (a, b) in enumerate(zip(outs["jnp"][step], outs[eng][step])):
+                assert np.array_equal(a, b), (step, eng, i)
+    # the frontier must exercise all three verdicts
+    assert 0 < outs["jnp"]["hot_cold"][0] < B
+
+
+def test_write_batch_no_chain_walk_when_fused(cfg, monkeypatch):
+    """Acceptance: with a fused engine, neither write_batch nor the
+    compaction steps may dispatch the unfused per-hop chain.walk."""
+    from repro.core import chain
+
+    def boom(*a, **k):
+        raise AssertionError("chain.walk dispatched under a fused engine")
+
+    monkeypatch.setattr(chain, "walk", boom)
+    ecfg = dataclasses.replace(cfg, engine="fused_ref")
+    kv = KV(ecfg, mode="f2", trigger=2.0, donate=False)
+    keys = np.arange(64, dtype=np.int32)
+    kv.upsert(keys, np.ones((64, ecfg.value_width), np.int32))
+    kv.rmw(keys[:16], np.ones((16, ecfg.value_width), np.int32))
+    kv.delete(keys[:4])
+    st, _ = compaction.hot_cold_step(ecfg, kv.state, kv.state.hot.begin,
+                                     kv.state.hot.tail, 64)
+    compaction.cold_cold_step(ecfg, st, st.cold.begin, st.cold.tail, 64)
+    compaction.single_log_lookup_step(ecfg, kv.state, kv.state.hot.begin,
+                                      kv.state.hot.tail, 64)
