@@ -12,14 +12,16 @@ from repro.core import KV
 from .harness import READ_BW, READ_IOPS, Zipf, load_store, make_faster_config, run_workload
 
 
-def run(n_keys: int = 1 << 16, frac: float = 0.125, batch: int = 256):
+def run(n_keys: int = 1 << 16, frac: float = 0.125, batch: int = 256,
+        engine: str = "fused", seed: int = 2):
     """Single-log compaction microbench (paper Fig 7 setup: compact ~7% of
     a churned log; index unconstrained — chains ~1 record, so liveness is
     mostly the zero-I/O address check)."""
     out = {}
     for kind in ("scan", "lookup"):
         import dataclasses
-        cfg = dataclasses.replace(make_faster_config(n_keys, 0.10),
+        cfg = dataclasses.replace(make_faster_config(n_keys, 0.10,
+                                                     engine=engine),
                                   hot_index_size=1 << 19)
         # 8x keys: a flat direct-mapped index needs ~8x headroom to match
         # the chain resolution of FASTER's (bucket, tag-bits) entries —
@@ -36,7 +38,7 @@ def run(n_keys: int = 1 << 16, frac: float = 0.125, batch: int = 256):
         # walk cost scales with the dead fraction; a 4 KiB random read per
         # dead record vs 116 B sequential — see EXPERIMENTS.md SRepro).
         zipf = Zipf(n_keys, 0.99)
-        run_workload(kv, "A", zipf, n_keys // 8, batch)
+        run_workload(kv, "A", zipf, n_keys // 8, batch, seed=seed)
         io0 = kv.io_stats()
         t0 = time.perf_counter()
         n = int((int(kv.state.hot.tail) - int(kv.state.hot.begin)) * frac)

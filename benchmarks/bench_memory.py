@@ -8,7 +8,8 @@ from .harness import Zipf, load_store, make_f2_config, make_faster_kv, run_workl
 
 
 def run(n_keys: int = 1 << 16, n_ops: int = 1 << 15, batch: int = 4096,
-        fracs=(0.025, 0.05, 0.10, 0.25)):
+        fracs=(0.025, 0.05, 0.10, 0.25), engine: str = "fused",
+        seed: int = 2):
     zipf = Zipf(n_keys, 0.99)
     out = {}
     for system in ("F2", "FASTER"):
@@ -17,12 +18,14 @@ def run(n_keys: int = 1 << 16, n_ops: int = 1 << 15, batch: int = 4096,
             row = {}
             for f in fracs:
                 if system == "F2":
-                    cfg = make_f2_config(n_keys, f, rc_enabled=(f > 0.03))
+                    cfg = make_f2_config(n_keys, f, rc_enabled=(f > 0.03),
+                                         engine=engine)
                     kv = KV(cfg, mode="f2", compact_batch=batch)
                 else:
-                    kv = make_faster_kv(n_keys, f, batch=batch)
+                    kv = make_faster_kv(n_keys, f, batch=batch,
+                                        engine=engine)
                 load_store(kv, n_keys, batch)
-                r = run_workload(kv, wl, zipf, n_ops, batch,
+                r = run_workload(kv, wl, zipf, n_ops, batch, seed=seed,
                                  warmup_ops=n_keys)
                 kv.check_invariants()
                 row[f] = r.modeled_kops

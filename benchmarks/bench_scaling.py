@@ -9,15 +9,17 @@ from .harness import Zipf, load_store, make_f2_config, run_workload
 
 
 def run(n_keys: int = 1 << 16, n_ops: int = 1 << 15,
-        batches=(512, 1024, 4096, 8192)):
+        batches=(512, 1024, 4096, 8192), engine: str = "fused",
+        seed: int = 2):
     zipf = Zipf(n_keys, 0.99)
     out = {}
     for wl in ("A", "B"):
         row = {}
         for b in batches:
-            kv = KV(make_f2_config(n_keys, 0.10), mode="f2", compact_batch=b)
+            kv = KV(make_f2_config(n_keys, 0.10, engine=engine), mode="f2",
+                    compact_batch=b)
             load_store(kv, n_keys, b)
-            r = run_workload(kv, wl, zipf, n_ops, b)
+            r = run_workload(kv, wl, zipf, n_ops, b, seed=seed)
             kv.check_invariants()
             row[b] = r.wall_kops
         out[wl] = row

@@ -8,17 +8,19 @@ from .harness import Zipf, load_store, make_f2_config, run_workload
 
 
 def run_chunks(n_keys: int = 1 << 16, n_ops: int = 1 << 15,
-               batch: int = 4096, chunk_slots=(8, 16, 32, 128, 512)):
+               batch: int = 4096, chunk_slots=(8, 16, 32, 128, 512),
+               engine: str = "fused", seed: int = 2):
     """chunk_slots * 8B = chunk bytes: 64B .. 4KiB (paper's x-axis)."""
     zipf = Zipf(n_keys, 0.99)
     out = {}
     for wl in ("A", "B"):
         row = {}
         for cs in chunk_slots:
-            kv = KV(make_f2_config(n_keys, 0.10, chunk_slots=cs),
+            kv = KV(make_f2_config(n_keys, 0.10, chunk_slots=cs,
+                                   engine=engine),
                     mode="f2", compact_batch=batch)
             load_store(kv, n_keys, batch)
-            r = run_workload(kv, wl, zipf, n_ops, batch,
+            r = run_workload(kv, wl, zipf, n_ops, batch, seed=seed,
                              warmup_ops=n_keys)
             kv.check_invariants()
             row[cs * 8] = (r.modeled_kops, r.write_amp)
@@ -27,17 +29,18 @@ def run_chunks(n_keys: int = 1 << 16, n_ops: int = 1 << 15,
 
 
 def run_rc(n_keys: int = 1 << 16, n_ops: int = 1 << 15, batch: int = 4096,
-           rc_fracs=(0.0, 0.08, 0.17, 0.34)):
+           rc_fracs=(0.0, 0.08, 0.17, 0.34), engine: str = "fused",
+           seed: int = 2):
     zipf = Zipf(n_keys, 0.99)
     out = {}
     for wl in ("B", "C"):
         row = {}
         for f in rc_fracs:
             kv = KV(make_f2_config(n_keys, 0.10, rc_frac=max(f, 0.01),
-                                   rc_enabled=(f > 0)),
+                                   rc_enabled=(f > 0), engine=engine),
                     mode="f2", compact_batch=batch)
             load_store(kv, n_keys, batch)
-            r = run_workload(kv, wl, zipf, n_ops, batch,
+            r = run_workload(kv, wl, zipf, n_ops, batch, seed=seed,
                              warmup_ops=n_keys)
             kv.check_invariants()
             row[f] = r.modeled_kops

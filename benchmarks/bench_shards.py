@@ -1,0 +1,171 @@
+"""Shard-scaling benchmark: ShardedKV throughput across S ∈ {1,2,4,8}.
+
+Weak-scaling setup (the tensorized analogue of the paper's thread-count
+sweep, Fig 11): the per-shard sub-batch width W is held fixed — the
+"machine width per shard" — and the incoming op batch grows with the
+shard count (B = S*W/2, 2x routing headroom), so every configuration
+pays the same per-lane work and the per-dispatch overhead is amortized
+over S-times more operations as shards are added.  Each shard is sized
+for its 1/S slice of the key space, so total capacity scales with S too.
+
+Per (mix, skew, S) the run reports wall-clock ops/s, routed rounds per
+batch, and router balance stats (shards are chosen by key hash, so even
+heavily Zipf-skewed *access* patterns spread near-uniformly across
+shards — max/mean sub-batch occupancy quantifies the residual
+imbalance), plus per-shard store occupancy after the run.
+
+    PYTHONPATH=src python benchmarks/bench_shards.py [--tiny] [--out f.json]
+
+`--tiny` is the CI smoke mode (`BENCH_shards.json` artifact): minimal
+sizes, one skew level, and the scaling gate — S=4 wall-clock throughput
+must be >= S=1 on the YCSB-B mix.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import jax
+
+from benchmarks.bench_mixed import MIXES, mixed_batches, zipf_keys  # noqa: F401
+from benchmarks.harness import make_sharded_kv
+from repro.core import shard_router
+from repro.core.sharded import ShardedKV
+
+
+def build_sharded(n_keys: int, S: int, W: int, value_width: int,
+                  engine: str) -> ShardedKV:
+    # bench-scale stores are small: spend more of the (tiny) budget on the
+    # hot index so hash chains stay short at a few thousand keys/shard
+    kv = make_sharded_kv(n_keys, S, mem_frac=0.25, value_width=value_width,
+                         engine=engine, lanes=W, trigger=0.8,
+                         compact_batch=min(W, 1024), index_frac=0.7)
+    keys = np.arange(n_keys, dtype=np.int32)
+    vals = np.stack([keys] * value_width, 1).astype(np.int32)
+    B = S * W // 2
+    for off in range(0, n_keys, B):
+        ks = keys[off:off + B]
+        if len(ks) < B:
+            ks = np.pad(ks, (0, B - len(ks)), mode="edge")
+            vs = vals[off:off + B]
+            vs = np.pad(vs, ((0, B - len(vs)), (0, 0)), mode="edge")
+        else:
+            vs = vals[off:off + B]
+        kv.upsert(ks, vs)
+    # exercise the masked compaction path once on every shard before
+    # measuring, so steady-state laps start from a compacted store
+    kv.compact_hot_cold()
+    kv.check_invariants()
+    return kv
+
+
+def run_config(kv: ShardedKV, batches, repeats: int) -> dict:
+    keys, ops, vals = batches
+    n_batches, B = keys.shape
+    rounds0 = kv.rounds
+    kv.apply(keys[0], ops[0], vals[0])            # compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for j in range(n_batches):
+            kv.apply(keys[j], ops[j], vals[j])
+        jax.block_until_ready(kv.state.hot.tail)
+        best = min(best, time.perf_counter() - t0)
+    n_ops = n_batches * B
+    rounds = kv.rounds - rounds0
+    # router balance on the measured batches (counts are data, not timing)
+    sid = np.asarray(shard_router.shard_of(
+        jax.numpy.asarray(keys.reshape(-1)), kv.S)).reshape(n_batches, B)
+    counts = np.stack([np.bincount(s, minlength=kv.S) for s in sid])
+    imbalance = float((counts.max(1) / np.maximum(
+        counts.mean(1), 1e-9)).mean())
+    return dict(
+        ops_per_s=n_ops / best,
+        seconds=best,
+        n_ops=n_ops,
+        rounds_per_batch=rounds / (1 + n_batches * repeats),
+        imbalance_max_over_mean=imbalance,
+        shard_occupancy=kv.last_occupancy.tolist(),
+        hot_fill_per_shard=np.round(kv.hot_fills(), 4).tolist(),
+        compactions_per_shard=kv.compactions.tolist(),
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke mode: minimal sizes + S4>=S1 gate")
+    ap.add_argument("--out", default=None, help="write results JSON here")
+    ap.add_argument("--shards", default=None,
+                    help="comma list of shard counts (default 1,2,4,8)")
+    ap.add_argument("--engine", default="fused",
+                    choices=("jnp", "fused", "fused_ref", "fused_pallas"))
+    ap.add_argument("--repeats", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    if args.tiny:
+        n_keys, W, n_batches, repeats, vw = 4096, 512, 4, 12, 2
+        thetas = [0.99]
+        mixes = ["A", "B"]
+    else:
+        n_keys, W, n_batches, repeats, vw = 1 << 15, 2048, 8, 4, 8
+        thetas = [0.55, 0.99, 1.20]
+        mixes = ["A", "B"]
+    shard_counts = ([int(s) for s in args.shards.split(",")]
+                    if args.shards else [1, 2, 4, 8])
+    if args.repeats:
+        repeats = args.repeats
+
+    results = dict(backend=jax.default_backend(),
+                   n_devices=len(jax.devices()), n_keys=n_keys, lanes=W,
+                   tiny=bool(args.tiny), engine=args.engine, sweeps=[])
+    for mix in mixes:
+        for theta in thetas:
+            row = dict(mix=mix, theta=theta, shards=[])
+            for S in shard_counts:
+                kv = build_sharded(n_keys, S, W, vw, args.engine)
+                B = S * W // 2
+                rng = np.random.default_rng(17)
+                batches = mixed_batches(rng, MIXES[mix], n_keys, theta, B,
+                                        n_batches, vw)
+                r = run_config(kv, batches, repeats)
+                r["n_shards"] = S
+                r["batch"] = B
+                r["dispatch"] = kv.dispatch
+                kv.check_invariants()
+                row["shards"].append(r)
+                print(f"mix={mix} theta={theta:<5} S={S} B={B:<5} "
+                      f"{r['ops_per_s'] / 1e3:9.1f} kops/s "
+                      f"rounds/batch={r['rounds_per_batch']:.2f} "
+                      f"imbalance={r['imbalance_max_over_mean']:.2f}")
+            per = {r["n_shards"]: r["ops_per_s"] for r in row["shards"]}
+            if 1 in per and 4 in per:
+                row["s4_over_s1"] = per[4] / per[1]
+                print(f"    S=4/S=1 scaling: {row['s4_over_s1']:.2f}x")
+            results["sweeps"].append(row)
+
+    if args.tiny:
+        # the smoke gate: sharding must not lose throughput on CPU.  The
+        # YCSB-B row is the headline (update-heavy A also reported).
+        rows_b = [r for r in results["sweeps"] if r["mix"] == "B"]
+        assert rows_b and all("s4_over_s1" in r for r in rows_b)
+        for r in rows_b:
+            assert r["s4_over_s1"] >= 1.0, (
+                f"S=4 slower than S=1 on YCSB-B: {r['s4_over_s1']:.2f}x")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.out}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,7 @@ from .ycsb import ALPHA_TO_THETA
 
 
 def run(n_keys: int = 1 << 16, n_ops: int = 1 << 15, batch: int = 4096,
-        alphas=(3, 10, 100, 1000)):
+        alphas=(3, 10, 100, 1000), engine: str = "fused", seed: int = 2):
     out = {}
     for system in ("F2", "FASTER"):
         out[system] = {}
@@ -18,12 +18,13 @@ def run(n_keys: int = 1 << 16, n_ops: int = 1 << 15, batch: int = 4096,
             for a in alphas:
                 zipf = Zipf(n_keys, ALPHA_TO_THETA[a])
                 if system == "F2":
-                    kv = KV(make_f2_config(n_keys, 0.10), mode="f2",
-                            compact_batch=batch)
+                    kv = KV(make_f2_config(n_keys, 0.10, engine=engine),
+                            mode="f2", compact_batch=batch)
                 else:
-                    kv = make_faster_kv(n_keys, 0.10, batch=batch)
+                    kv = make_faster_kv(n_keys, 0.10, batch=batch,
+                                        engine=engine)
                 load_store(kv, n_keys, batch)
-                r = run_workload(kv, wl, zipf, n_ops, batch,
+                r = run_workload(kv, wl, zipf, n_ops, batch, seed=seed,
                                  warmup_ops=n_keys)
                 kv.check_invariants()
                 row[a] = r.modeled_kops

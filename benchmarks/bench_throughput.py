@@ -11,22 +11,24 @@ from .harness import (RunResult, Zipf, load_store, make_f2_config,
 
 
 def run(n_keys: int = 1 << 16, n_ops: int = 1 << 16, mem_frac: float = 0.10,
-        theta: float = None, batch: int = 4096) -> Dict[str, Dict[str, RunResult]]:
+        theta: float = None, batch: int = 4096, engine: str = "fused",
+        seed: int = 2) -> Dict[str, Dict[str, RunResult]]:
     zipf = Zipf(n_keys, theta or 0.99)
     out: Dict[str, Dict[str, RunResult]] = {}
     for system in ("F2", "FASTER"):
         out[system] = {}
         for wl in ("A", "B", "C", "F"):
             if system == "F2":
-                kv = KV(make_f2_config(n_keys, mem_frac), mode="f2",
-                        compact_batch=batch)
+                kv = KV(make_f2_config(n_keys, mem_frac, engine=engine),
+                        mode="f2", compact_batch=batch)
             else:
-                kv = make_faster_kv(n_keys, mem_frac, batch=batch)
+                kv = make_faster_kv(n_keys, mem_frac, batch=batch,
+                                    engine=engine)
             load_store(kv, n_keys, batch)
             # steady state first: a full dataset pass of warmup so both
             # systems hit their disk budgets (the paper warms with 25M ops
             # then measures 300M — compaction churn included)
-            res = run_workload(kv, wl, zipf, n_ops, batch,
+            res = run_workload(kv, wl, zipf, n_ops, batch, seed=seed,
                                warmup_ops=n_keys)
             kv.check_invariants()
             out[system][wl] = res

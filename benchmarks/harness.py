@@ -21,6 +21,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core import KV, F2Config, OP_UPSERT
+from repro.core.sharded import ShardedKV
 from .ycsb import Zipf, make_ops
 
 N_DISKS = 4
@@ -39,10 +40,14 @@ def _p2(x: int) -> int:
 def make_f2_config(n_keys: int, mem_frac: float = 0.10,
                    value_width: int = 25, chunk_slots: int = 32,
                    rc_frac: float = 0.17, index_frac: float = 0.17,
-                   rc_enabled: bool = True) -> F2Config:
+                   rc_enabled: bool = True,
+                   engine: str = "fused") -> F2Config:
     """Split the memory budget like the paper's S8.1 F2 configuration:
     ~1/6 hot index, ~1/6 read cache, ~1/2 hot-log memory, small cold-log
-    and chunk-log windows; hot disk budget n/6, cold 7n/6."""
+    and chunk-log windows; hot disk budget n/6, cold 7n/6.
+
+    `engine` selects the probe/write backend (`jnp`, `fused`, `fused_ref`,
+    `fused_pallas`) so every fig benchmark can sweep fused vs unfused."""
     rec = 16 + 4 * value_width
     budget = int(n_keys * rec * mem_frac)
     hot_index = _p2(max(256, int(budget * index_frac / 8)))
@@ -64,11 +69,13 @@ def make_f2_config(n_keys: int, mem_frac: float = 0.10,
         rc_capacity=rc,
         value_width=value_width,
         chain_max=48,
+        engine=engine,
     )
 
 
 def make_faster_config(n_keys: int, mem_frac: float = 0.10,
-                       value_width: int = 25) -> F2Config:
+                       value_width: int = 25,
+                       engine: str = "fused") -> F2Config:
     """FASTER (paper S8.1): fixed index ~1/3 of budget, log memory ~2/3.
     The log DISK budget is ~1.33x the dataset (paper: 40 GiB for 30 GiB),
     so steady-state updates force regular single-log compactions — the
@@ -82,7 +89,7 @@ def make_faster_config(n_keys: int, mem_frac: float = 0.10,
         hot_mem=_p2(max(64, int(budget * 2 / 3 / rec))),
         cold_capacity=2, cold_mem=1, n_chunks=2, chunklog_capacity=2,
         chunklog_mem=1, rc_capacity=1,
-        value_width=value_width, chain_max=64,
+        value_width=value_width, chain_max=64, engine=engine,
     )
 
 
@@ -96,8 +103,9 @@ FASTER_DISK_BUDGET_FRAC = 1.2
 
 def make_faster_kv(n_keys: int, mem_frac: float = 0.10,
                    value_width: int = 25, batch: int = 4096,
-                   compaction: str = "lookup") -> KV:
-    cfg = make_faster_config(n_keys, mem_frac, value_width)
+                   compaction: str = "lookup",
+                   engine: str = "fused") -> KV:
+    cfg = make_faster_config(n_keys, mem_frac, value_width, engine=engine)
     kv = KV(cfg, mode="faster", faster_compaction=compaction,
             compact_batch=batch,
             # trigger as a fraction of the ring is scaled so the effective
@@ -105,6 +113,45 @@ def make_faster_kv(n_keys: int, mem_frac: float = 0.10,
             trigger=FASTER_DISK_BUDGET_FRAC * n_keys / cfg.hot_capacity,
             compact_frac=0.15)
     return kv
+
+
+def make_sharded_kv(n_keys: int, n_shards: int, mem_frac: float = 0.10,
+                    value_width: int = 25, engine: str = "fused",
+                    lanes: int = None, dispatch: str = "auto",
+                    rc_frac: float = 0.17, index_frac: float = 0.17,
+                    mode: str = "f2", **kw) -> ShardedKV:
+    """S hash-partitioned shards, each sized for its n_keys/S key slice
+    under the same S8.1 memory split.  `lanes` caps per-shard sub-batch
+    width (None = incoming batch width, single-round routing); ShardedKV
+    is API-compatible with KV, so `load_store`/`run_workload` drive it
+    unchanged."""
+    shard_keys = max(n_keys // n_shards, 256)
+    if mode == "faster":
+        # FASTER's single log needs 2x-dataset ring headroom (compaction
+        # appends live records before truncating) — use its own budgeting
+        cfg = make_faster_config(shard_keys, mem_frac, value_width,
+                                 engine=engine)
+    else:
+        cfg = make_f2_config(shard_keys, mem_frac, value_width,
+                             engine=engine, rc_frac=rc_frac,
+                             index_frac=index_frac)
+    if lanes:
+        # a shard must be able to absorb one full sub-batch of appends
+        # between scheduler passes: keep ring headroom well above `lanes`
+        min_cap = _p2(8 * lanes)
+        if cfg.hot_capacity < min_cap:
+            cfg = dataclasses.replace(cfg, hot_capacity=min_cap)
+    if mode == "faster":
+        # same effective-disk-budget trigger as make_faster_kv (computed
+        # from the FINAL ring capacity) so sharded-FASTER numbers stay
+        # comparable to the unsharded baseline
+        kw.setdefault("trigger",
+                      FASTER_DISK_BUDGET_FRAC * shard_keys
+                      / cfg.hot_capacity)
+        kw.setdefault("faster_compaction", "lookup")
+        kw.setdefault("compact_frac", 0.15)
+    return ShardedKV(cfg, n_shards, mode=mode, lanes=lanes,
+                     dispatch=dispatch, **kw)
 
 
 def load_store(kv: KV, n_keys: int, batch: int = 4096, seed: int = 1):

@@ -17,7 +17,13 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig7,fig10,fig11,fig12,fig13,fig14")
+    ap.add_argument("--engine", default="fused",
+                    choices=("jnp", "fused", "fused_ref", "fused_pallas"),
+                    help="probe/write engine backend swept by every section")
+    ap.add_argument("--seed", type=int, default=2,
+                    help="workload rng seed threaded through every section")
     args = ap.parse_args()
+    eng, seed = args.engine, args.seed
     scale = 2 if args.full else 1
     n_keys = (1 << 16) * scale
     n_ops = (1 << 15) * scale
@@ -31,7 +37,7 @@ def main() -> None:
     if section("fig10"):
         from . import bench_throughput
         t0 = time.time()
-        res = bench_throughput.run(n_keys=n_keys, n_ops=n_ops * 2)
+        res = bench_throughput.run(n_keys=n_keys, n_ops=n_ops * 2, engine=eng, seed=seed)
         print(bench_throughput.report(res))
         print("table2: I/O amplification (from fig10 runs)")
         for system in ("F2", "FASTER"):
@@ -48,7 +54,7 @@ def main() -> None:
     if section("fig7"):
         from . import bench_compaction
         t0 = time.time()
-        res = bench_compaction.run(n_keys=n_keys)
+        res = bench_compaction.run(n_keys=n_keys, engine=eng, seed=seed)
         print(bench_compaction.report(res))
         csv.append(("fig7_lookup_vs_scan", 0.0,
                     f"{res['scan']['modeled_s']/max(res['lookup']['modeled_s'],1e-12):.2f}x"))
@@ -57,7 +63,7 @@ def main() -> None:
     if section("fig2"):
         from . import bench_deathspiral
         t0 = time.time()
-        res = bench_deathspiral.run(n_keys=n_keys)
+        res = bench_deathspiral.run(n_keys=n_keys, engine=eng, seed=seed)
         print(bench_deathspiral.report(res))
         f = res["FASTER"]["kops_per_window"]
         f2 = res["F2"]["kops_per_window"]
@@ -69,7 +75,7 @@ def main() -> None:
     if section("fig11"):
         from . import bench_scaling
         t0 = time.time()
-        res = bench_scaling.run(n_keys=n_keys, n_ops=n_ops)
+        res = bench_scaling.run(n_keys=n_keys, n_ops=n_ops, engine=eng, seed=seed)
         print(bench_scaling.report(res))
         b = res["A"]
         ks = sorted(b)
@@ -80,7 +86,7 @@ def main() -> None:
     if section("fig12"):
         from . import bench_skew
         t0 = time.time()
-        res = bench_skew.run(n_keys=n_keys, n_ops=n_ops)
+        res = bench_skew.run(n_keys=n_keys, n_ops=n_ops, engine=eng, seed=seed)
         print(bench_skew.report(res))
         csv.append(("fig12_f2_a_alpha100", 0.0,
                     f"{res['F2']['A'][100]:.1f}kops"))
@@ -89,7 +95,7 @@ def main() -> None:
     if section("fig13"):
         from . import bench_memory
         t0 = time.time()
-        res = bench_memory.run(n_keys=n_keys, n_ops=n_ops)
+        res = bench_memory.run(n_keys=n_keys, n_ops=n_ops, engine=eng, seed=seed)
         print(bench_memory.report(res))
         csv.append(("fig13_f2_b_10pct", 0.0,
                     f"{res['F2']['B'][0.10]:.1f}kops"))
@@ -98,8 +104,8 @@ def main() -> None:
     if section("fig14"):
         from . import bench_sensitivity
         t0 = time.time()
-        chunks = bench_sensitivity.run_chunks(n_keys=n_keys, n_ops=n_ops)
-        rc = bench_sensitivity.run_rc(n_keys=n_keys, n_ops=n_ops)
+        chunks = bench_sensitivity.run_chunks(n_keys=n_keys, n_ops=n_ops, engine=eng, seed=seed)
+        rc = bench_sensitivity.run_rc(n_keys=n_keys, n_ops=n_ops, engine=eng, seed=seed)
         print(bench_sensitivity.report(chunks, rc))
         wa = chunks["A"]
         sizes = sorted(wa)

@@ -1,0 +1,120 @@
+"""Deterministic batch router for the sharded store (ShardedKV).
+
+One B-lane op batch becomes S fixed-width per-shard sub-batches:
+
+    lane i  --hash(key)-->  shard sid[i]  --stable sort-->  slab slot
+
+The route is a *pure function of the batch* — no CAS, no work stealing —
+so replaying a batch is bit-exact, which is what makes the sharded store
+testable against S independent single-shard stores.
+
+Mechanics (all jnp, jit/vmap friendly, static shapes):
+
+  1. shard id = top log2(S) bits of the murmur-style key hash.  The hot
+     index (`store.hot_slots`) and the cold index (`cold_index.slot_coords`)
+     consume the *low* bits of the same hash, so shard choice and in-shard
+     slot placement stay statistically independent.
+  2. lanes are stably argsorted by shard id; a segment-offset subtraction
+     gives each lane its position within its shard's sub-batch.  Stability
+     preserves original batch order *within* a shard — per-key op order is
+     therefore preserved (equal keys always share a shard), which is what
+     keeps the store's linearization semantics intact after routing.
+  3. each shard gets a fixed-width slab of `lanes` lanes.  Unfilled slab
+     lanes are padding (OP_NOOP / key 0) that the store ignores; `mask`
+     marks real lanes.  Active lanes beyond a shard's capacity are
+     *deferred* — reported back so the caller can re-route them in a
+     follow-up round (ShardedKV does this; with lanes >= B deferral is
+     impossible and a batch always routes in one round).
+  4. the inverse gather (`unroute`) restores per-lane statuses/values in
+     original batch order; unplaced lanes read ST_NONE / zeros.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import OP_NOOP, ST_NONE, hash32
+
+
+def shard_of(keys: jax.Array, n_shards: int) -> jax.Array:
+    """Deterministic key -> shard id in [0, n_shards).  n_shards must be a
+    power of two; uses the hash's top bits (the indexes use the low bits)."""
+    assert n_shards >= 1 and (n_shards & (n_shards - 1)) == 0, \
+        f"n_shards={n_shards} not a power of 2"
+    if n_shards == 1:
+        return jnp.zeros(keys.shape, jnp.int32)
+    bits = n_shards.bit_length() - 1
+    return (hash32(keys) >> jnp.uint32(32 - bits)).astype(jnp.int32)
+
+
+class Route(NamedTuple):
+    """Everything needed to invert a routing decision, per original lane."""
+
+    shard: jax.Array      # int32 [B] shard id (= n_shards for inactive lanes)
+    dest: jax.Array       # int32 [B] flat slab index (= S*W when unplaced)
+    placed: jax.Array     # bool  [B] lane landed in a slab this round
+    deferred: jax.Array   # bool  [B] active but over its shard's capacity
+    counts: jax.Array     # int32 [S] active lanes per shard (incl. deferred)
+    occupancy: jax.Array  # int32 [S] placed lanes per shard (= min(counts, W))
+    mask: jax.Array       # bool  [S, W] slab occupancy masks
+
+
+def route(
+    keys: jax.Array,  # int32 [B]
+    ops: jax.Array,   # int32 [B]
+    vals: jax.Array,  # int32 [B, V]
+    n_shards: int,
+    lanes: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, Route]:
+    """Returns (skeys [S, W], sops [S, W], svals [S, W, V], route).
+
+    Padding lanes carry OP_NOOP (which the store's op masks ignore), key 0
+    and value 0.  Lanes whose op is already OP_NOOP never occupy capacity.
+    """
+    B = keys.shape[0]
+    S, W = n_shards, lanes
+    active = ops != OP_NOOP
+    sid = jnp.where(active, shard_of(keys, S), jnp.int32(S))
+
+    order = jnp.argsort(sid, stable=True)          # inactive lanes sink last
+    sid_sorted = sid[order]
+    counts_full = jnp.zeros((S + 1,), jnp.int32).at[sid].add(1)
+    counts = counts_full[:S]
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts_full)[:-1]])
+    pos_sorted = jnp.arange(B, dtype=jnp.int32) - offsets[sid_sorted]
+    placed_sorted = (sid_sorted < S) & (pos_sorted < W)
+    dest_sorted = jnp.where(placed_sorted, sid_sorted * W + pos_sorted,
+                            jnp.int32(S * W))      # S*W -> dropped scatter
+
+    skeys = jnp.zeros((S * W,), jnp.int32).at[dest_sorted].set(
+        keys[order], mode="drop").reshape(S, W)
+    sops = jnp.full((S * W,), OP_NOOP, jnp.int32).at[dest_sorted].set(
+        ops[order], mode="drop").reshape(S, W)
+    svals = jnp.zeros((S * W, vals.shape[1]), jnp.int32).at[dest_sorted].set(
+        vals[order], mode="drop").reshape(S, W, vals.shape[1])
+
+    # scatter the per-sorted-lane facts back to original lane order
+    dest = jnp.zeros((B,), jnp.int32).at[order].set(dest_sorted)
+    placed = jnp.zeros((B,), jnp.bool_).at[order].set(placed_sorted)
+    occupancy = jnp.minimum(counts, jnp.int32(W))
+    mask = jnp.arange(W, dtype=jnp.int32)[None, :] < occupancy[:, None]
+    rt = Route(shard=sid, dest=dest, placed=placed,
+               deferred=active & ~placed, counts=counts,
+               occupancy=occupancy, mask=mask)
+    return skeys, sops, svals, rt
+
+
+def unroute(rt: Route, sstatus: jax.Array, svals: jax.Array
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Inverse gather: per-shard slab results back to original lane order.
+    sstatus [S, W], svals [S, W, V] -> (status [B], vals [B, V]); lanes not
+    placed this round read ST_NONE / zeros."""
+    flat_st = sstatus.reshape(-1)
+    flat_v = svals.reshape(-1, svals.shape[-1])
+    idx = jnp.minimum(rt.dest, flat_st.shape[0] - 1)
+    status = jnp.where(rt.placed, flat_st[idx], jnp.int32(ST_NONE))
+    vals = jnp.where(rt.placed[:, None], flat_v[idx], 0)
+    return status, vals

@@ -1,0 +1,480 @@
+"""ShardedKV: S independent F2 stores driven by one program (horizontal
+partitioning — the tensorized analogue of "more cores" in the paper's
+scaling story, ROADMAP north star).
+
+State model
+-----------
+`ShardedF2State` is structurally an `F2State` whose every leaf carries a
+leading shard axis: per-shard states stacked with `jax.vmap` of
+`store.create`.  Because `F2State` is a pure int32 pytree and every store
+entry point is pure jnp, lifting with `jax.vmap` is *bit-exact* with
+running S independent stores — the parity suite (tests/test_sharded.py)
+enforces exactly that.
+
+Batch flow
+----------
+`apply` routes one B-lane batch through `shard_router` into S fixed-width
+slabs, executes `vmap(store.apply)` over the stacked state, and inverse-
+gathers statuses/values back to original lane order.  With the default
+`lanes=None` every batch routes in one round (slab width = B) and the
+semantics are exactly one `store.apply` per shard.  A smaller `lanes`
+caps per-shard slab width: over-capacity lanes are deferred to follow-up
+rounds (rounds execute in order; per-key order is preserved because equal
+keys share a shard and routing is stable).
+
+Compaction scheduler
+--------------------
+The scalar trigger loop of `api.KV.maybe_compact` becomes a *vectorized
+pressure scheduler*: each tier's per-shard tail-occupancy fills are
+computed in a single device_get (re-read between tiers so compaction
+cascades fire in-pass, like KV), and hot->cold / cold->cold / chunk-GC
+steps run **masked** —
+one vmapped call advances every over-threshold shard while under-threshold
+shards pass through untouched (a per-shard `do` flag selects old vs new
+state, so an idle shard's counters, stats and truncation markers are
+byte-identical to never having compacted).
+
+Dispatch
+--------
+`dispatch="vmap"` (default on one device) runs the stacked state on a
+single device.  `dispatch="shard_map"` partitions the shard axis across a
+1-D device mesh via `jax.experimental.shard_map` (each device vmaps its
+local shards; there is no cross-shard communication, so the program is
+embarrassingly parallel).  `dispatch="auto"` picks shard_map when more
+than one device is visible and S divides across them, else vmap.  The
+shard_map path also runs on a single-device mesh, so CPU CI exercises the
+same code multi-device deployments use.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from . import compaction, shard_router, store
+from . import cold_index as _cold_index
+from .types import (BLOCK_BYTES, OP_DELETE, OP_NOOP, OP_READ, OP_RMW,
+                    OP_UPSERT, F2Config)
+
+DISPATCHES = ("auto", "vmap", "shard_map")
+SHARD_AXIS = "shards"
+
+
+def create(cfg: F2Config, n_shards: int) -> store.F2State:
+    """ShardedF2State: per-shard F2States stacked on a leading axis."""
+    return jax.vmap(lambda _: store.create(cfg))(jnp.arange(n_shards))
+
+
+def _select(do, new, old):
+    """Per-shard masked state update: `do` is a scalar bool under vmap."""
+    return jax.tree_util.tree_map(lambda a, b: jnp.where(do, a, b), new, old)
+
+
+# -- single-shard masked kernels (vmapped by ShardedKV) ----------------------
+
+def _masked_hc_step(cfg, B, state, start, until, do):
+    s2, n = compaction.hot_cold_step(cfg, state, start, until, B)
+    return _select(do, s2, state), jnp.where(do, n, 0)
+
+
+def _masked_cc_step(cfg, B, state, start, until, do):
+    s2, n = compaction.cold_cold_step(cfg, state, start, until, B)
+    return _select(do, s2, state), jnp.where(do, n, 0)
+
+
+def _masked_sl_step(cfg, B, charge_walk_io, state, start, until, do):
+    s2, n = compaction.single_log_lookup_step(
+        cfg, state, start, until, B, charge_walk_io=charge_walk_io)
+    return _select(do, s2, state), jnp.where(do, n, 0)
+
+
+def _masked_hot_trunc(cfg, state, until, do):
+    return _select(do, compaction.hot_truncate(cfg, state, until), state)
+
+
+def _masked_cold_trunc(cfg, state, until, do):
+    return _select(do, compaction.cold_truncate(cfg, state, until), state)
+
+
+def _masked_full_scan(cfg, state, do):
+    return _select(do, compaction.charge_full_scan(cfg, state), state)
+
+
+def _masked_chunk_gc(cfg, state, do):
+    ci, stats = _cold_index.compact_chunklog(state.cold_idx, cfg, state.stats)
+    return _select(do, state._replace(cold_idx=ci, stats=stats), state)
+
+
+def resolve_mesh(dispatch: str, n_shards: int) -> Optional[Mesh]:
+    """None -> plain vmap; a 1-D Mesh -> shard_map over the shard axis."""
+    assert dispatch in DISPATCHES, f"unknown dispatch {dispatch!r}"
+    devs = jax.devices()
+    if dispatch == "vmap" or (dispatch == "auto" and len(devs) == 1):
+        return None
+    # largest device count that divides S evenly (1 is always valid)
+    ndev = max(d for d in range(1, min(len(devs), n_shards) + 1)
+               if n_shards % d == 0)
+    return Mesh(np.asarray(devs[:ndev]), (SHARD_AXIS,))
+
+
+class ShardedKV:
+    """API-compatible with `api.KV` (apply/upsert/read/rmw/delete,
+    check_invariants, io_stats, memory_model_bytes, compact_*), holding S
+    hash-partitioned shards behind one deterministic batch router."""
+
+    def __init__(
+        self,
+        cfg: F2Config,
+        n_shards: int,
+        mode: str = "f2",
+        trigger: float = 0.8,
+        compact_frac: float = 0.1,
+        compact_batch: int = 2048,
+        faster_compaction: str = "scan",
+        donate: bool = True,
+        dispatch: str = "auto",
+        lanes: Optional[int] = None,
+    ):
+        assert mode in ("f2", "faster")
+        assert n_shards >= 1 and (n_shards & (n_shards - 1)) == 0, \
+            f"n_shards={n_shards} not a power of 2"
+        if mode == "faster":
+            assert cfg.rc_capacity >= 1
+        self.cfg = cfg
+        self.S = n_shards
+        self.mode = mode
+        self.trigger = trigger
+        self.compact_frac = compact_frac
+        self.compact_batch = compact_batch
+        self.faster_compaction = faster_compaction
+        self.lanes = lanes
+        self.mesh = resolve_mesh(dispatch, n_shards)
+        self.dispatch = "vmap" if self.mesh is None else "shard_map"
+        self.state = create(cfg, n_shards)
+        self.compactions = np.zeros(n_shards, np.int64)
+        self.temp_table_peak_bytes = np.zeros(n_shards, np.int64)
+        self.frontier_bytes = compact_batch * cfg.record_bytes
+        self.rounds = 0                 # routed rounds executed (telemetry)
+        self.last_occupancy = np.zeros(n_shards, np.int64)  # last round's
+
+        dn = dict(donate_argnums=0) if donate else {}
+        admit = (mode == "f2") and cfg.rc_capacity > 1
+        apply_lifted = self._lift(
+            functools.partial(store.apply, cfg, admit_rc=admit), n_in=4)
+
+        def routed_step(state, keys, ops, vals):
+            W = self.lanes or keys.shape[0]
+            skeys, sops, svals, rt = shard_router.route(
+                keys, ops, vals, self.S, W)
+            state, sstatus, srvals = apply_lifted(state, skeys, sops, svals)
+            status, rvals = shard_router.unroute(rt, sstatus, srvals)
+            return (state, status, rvals, rt.placed, rt.deferred,
+                    rt.occupancy)
+
+        self._step = jax.jit(routed_step, **dn)
+
+        # dedicated read path (like KV._read): no write engine, and the
+        # caller does not run the compaction scheduler afterwards
+        read_lifted = self._lift(
+            functools.partial(store.read_batch, cfg, admit_rc=admit),
+            n_in=3)
+
+        def routed_read(state, keys, ops):
+            W = self.lanes or keys.shape[0]
+            vals = jnp.zeros((keys.shape[0], cfg.value_width), jnp.int32)
+            skeys, sops, _, rt = shard_router.route(
+                keys, ops, vals, self.S, W)
+            state, sstatus, srvals = read_lifted(state, skeys,
+                                                 sops == OP_READ)
+            status, rvals = shard_router.unroute(rt, sstatus, srvals)
+            return state, status, rvals, rt.placed, rt.deferred
+
+        self._read_step = jax.jit(routed_read, **dn)
+        self._hc_step = jax.jit(self._lift(functools.partial(
+            _masked_hc_step, cfg, compact_batch), n_in=4), **dn)
+        self._cc_step = jax.jit(self._lift(functools.partial(
+            _masked_cc_step, cfg, compact_batch), n_in=4), **dn)
+        self._sl_step = jax.jit(self._lift(functools.partial(
+            _masked_sl_step, cfg, compact_batch,
+            faster_compaction == "lookup"), n_in=4), **dn)
+        self._hot_trunc = jax.jit(self._lift(functools.partial(
+            _masked_hot_trunc, cfg), n_in=3), **dn)
+        self._cold_trunc = jax.jit(self._lift(functools.partial(
+            _masked_cold_trunc, cfg), n_in=3), **dn)
+        self._full_scan = jax.jit(self._lift(functools.partial(
+            _masked_full_scan, cfg), n_in=2), **dn)
+        self._chunk_gc = jax.jit(self._lift(functools.partial(
+            _masked_chunk_gc, cfg), n_in=2), **dn)
+
+    def _lift(self, fn, n_in: int):
+        """vmap over the shard axis; under shard_map additionally partition
+        that axis across the device mesh (every in/out leaf is sharded on
+        its leading axis; shards never communicate)."""
+        vf = jax.vmap(fn)
+        if self.mesh is None:
+            return vf
+        return shard_map(vf, mesh=self.mesh,
+                         in_specs=(P(SHARD_AXIS),) * n_in,
+                         out_specs=P(SHARD_AXIS), check_rep=False)
+
+    # -- batched operations --------------------------------------------------
+    def apply(self, keys, ops, vals=None):
+        """Route, execute, inverse-gather.  With lanes=None this is one
+        round (bit-exact with one store.apply per shard); with a narrower
+        slab, over-capacity lanes defer to follow-up rounds, each followed
+        by a scheduler pass, until every lane has executed."""
+        keys = jnp.asarray(keys, jnp.int32)
+        ops = jnp.asarray(ops, jnp.int32)
+        if vals is None:
+            vals = jnp.zeros((keys.shape[0], self.cfg.value_width), jnp.int32)
+        else:
+            vals = jnp.asarray(vals, jnp.int32)
+        B = keys.shape[0]
+        if self.lanes is None or self.lanes >= B:
+            # single-round fast path: deferral is impossible, so no host
+            # round-trips of per-lane results (the serving hot path)
+            (self.state, status, rvals, _placed, _deferred,
+             occ) = self._step(self.state, keys, ops, vals)
+            self.last_occupancy = occ
+            self.rounds += 1
+            self.maybe_compact()
+            return status, rvals
+        status = np.zeros(B, np.int32)
+        rvals = np.zeros((B, self.cfg.value_width), np.int32)
+        cur_ops = ops
+        for _ in range(B + 1):          # each round places >= 1 lane
+            (self.state, st_r, rv_r, placed, deferred,
+             occ) = self._step(self.state, keys, cur_ops, vals)
+            placed_np = np.asarray(placed)
+            self.last_occupancy = occ
+            status = np.where(placed_np, np.asarray(st_r), status)
+            rvals = np.where(placed_np[:, None], np.asarray(rv_r), rvals)
+            self.rounds += 1
+            self.maybe_compact()
+            deferred_np = np.asarray(deferred)
+            if not deferred_np.any():
+                break
+            cur_ops = jnp.where(jnp.asarray(deferred_np), ops,
+                                jnp.int32(OP_NOOP))
+        return jnp.asarray(status), jnp.asarray(rvals)
+
+    def upsert(self, keys, vals):
+        ops = jnp.full((len(keys),), OP_UPSERT, jnp.int32)
+        return self.apply(keys, ops, vals)
+
+    def read(self, keys):
+        """Routed read-only batch on the read hot path: lifts
+        `store.read_batch` per shard (no write-engine pass, no scheduler
+        run — state still advances through read-cache admission, exactly
+        like KV.read)."""
+        keys = jnp.asarray(keys, jnp.int32)
+        B = keys.shape[0]
+        cur_ops = jnp.full((B,), OP_READ, jnp.int32)
+        if self.lanes is None or self.lanes >= B:
+            (self.state, status, rvals, _placed,
+             _deferred) = self._read_step(self.state, keys, cur_ops)
+            self.rounds += 1
+            return status, rvals
+        status = np.zeros(B, np.int32)
+        rvals = np.zeros((B, self.cfg.value_width), np.int32)
+        for _ in range(B + 1):
+            (self.state, st_r, rv_r, placed,
+             deferred) = self._read_step(self.state, keys, cur_ops)
+            placed_np = np.asarray(placed)
+            status = np.where(placed_np, np.asarray(st_r), status)
+            rvals = np.where(placed_np[:, None], np.asarray(rv_r), rvals)
+            self.rounds += 1
+            deferred_np = np.asarray(deferred)
+            if not deferred_np.any():
+                break
+            cur_ops = jnp.where(jnp.asarray(deferred_np),
+                                jnp.int32(OP_READ), jnp.int32(OP_NOOP))
+        return jnp.asarray(status), jnp.asarray(rvals)
+
+    def rmw(self, keys, deltas):
+        ops = jnp.full((len(keys),), OP_RMW, jnp.int32)
+        return self.apply(keys, ops, deltas)
+
+    def delete(self, keys):
+        ops = jnp.full((len(keys),), OP_DELETE, jnp.int32)
+        return self.apply(keys, ops)
+
+    # -- vectorized pressure scheduler ---------------------------------------
+    def _bounds(self):
+        s = self.state
+        return [np.asarray(x).astype(np.int64) for x in jax.device_get(
+            (s.hot.begin, s.hot.tail, s.cold.begin, s.cold.tail,
+             s.cold_idx.begin, s.cold_idx.tail))]
+
+    def hot_fills(self) -> np.ndarray:
+        hb, ht, *_ = self._bounds()
+        return (ht - hb) / self.cfg.hot_capacity
+
+    def cold_fills(self) -> np.ndarray:
+        _, _, cb, ct, *_ = self._bounds()
+        return (ct - cb) / self.cfg.cold_capacity
+
+    def chunklog_fills(self) -> np.ndarray:
+        *_, ib, it = self._bounds()
+        return (it - ib) / self.cfg.chunklog_capacity
+
+    def hot_fill(self) -> float:        # KV-facade scalar: the hottest shard
+        return float(self.hot_fills().max())
+
+    def cold_fill(self) -> float:
+        return float(self.cold_fills().max())
+
+    def chunklog_fill(self) -> float:
+        return float(self.chunklog_fills().max())
+
+    def maybe_compact(self):
+        """Vectorized pressure check: every shard's occupancy on all three
+        tiers in ONE device_get (the steady-state no-compaction path costs
+        a single host sync), then masked compaction passes over exactly the
+        shards above threshold.  Bounds are re-read only after a pass that
+        actually ran (like KV.maybe_compact, which reads fresh state per
+        tier) so a cascade — hot->cold pushing a cold log or the chunk log
+        over its own trigger — compacts in the same scheduler invocation."""
+        hb, ht, cb, ct, ib, it = self._bounds()
+        hot_over = (ht - hb) / self.cfg.hot_capacity > self.trigger
+        if self.mode == "faster":
+            if hot_over.any():
+                self.compact_single_log(shards=hot_over)
+            return
+        if hot_over.any():
+            self.compact_hot_cold(shards=hot_over)
+            # hot->cold appends cold records AND chunk-index versions
+            _, _, cb, ct, ib, it = self._bounds()
+        cold_over = (ct - cb) / self.cfg.cold_capacity > self.trigger
+        if cold_over.any():
+            self.compact_cold_cold(shards=cold_over)
+            *_, ib, it = self._bounds()
+        chunk_over = (it - ib) / self.cfg.chunklog_capacity > self.trigger
+        if chunk_over.any():
+            self.state = self._chunk_gc(self.state, jnp.asarray(chunk_over))
+
+    def _regions(self, begins, tails, n_records, shards):
+        """Per-shard compaction region sizes, mirroring KV._region exactly
+        (zero for unselected shards)."""
+        avail = np.maximum(tails - begins, 0)
+        if n_records is None:
+            n = np.maximum(np.minimum(
+                (avail * self.compact_frac).astype(np.int64), avail),
+                self.compact_batch)
+        else:
+            n = np.full(self.S, int(n_records), np.int64)
+        return np.where(shards, np.minimum(n, avail), 0)
+
+    def _masked_steps(self, step, begins, n, shards):
+        """Run ceil(max n / compact_batch) masked step calls (the copying
+        phase); shard j is live in call i iff begins[j] + i*cb is inside
+        its region.  Returns (until [S], per-shard live totals)."""
+        until = jnp.asarray(begins + n, jnp.int32)
+        cb = self.compact_batch
+        n_steps = int(-(-int(n.max()) // cb)) if n.max() > 0 else 0
+        live_total = np.zeros(self.S, np.int64)
+        for i in range(n_steps):
+            starts = begins + i * cb
+            do = shards & (starts < begins + n)
+            self.state, n_live = step(self.state,
+                                      jnp.asarray(starts, jnp.int32), until,
+                                      jnp.asarray(do))
+            live_total += np.asarray(n_live).astype(np.int64)
+        return until, live_total
+
+    def compact_hot_cold(self, n_records: Optional[int] = None,
+                         shards: Optional[np.ndarray] = None):
+        hb, ht, *_ = self._bounds()
+        shards = np.ones(self.S, bool) if shards is None else shards
+        n = self._regions(hb, ht, n_records, shards)
+        until, _ = self._masked_steps(self._hc_step, hb, n, shards)
+        self.state = self._hot_trunc(self.state, until, jnp.asarray(shards))
+        self.compactions += shards.astype(np.int64)
+
+    def compact_cold_cold(self, n_records: Optional[int] = None,
+                          shards: Optional[np.ndarray] = None):
+        _, _, cb, ct, *_ = self._bounds()
+        shards = np.ones(self.S, bool) if shards is None else shards
+        n = self._regions(cb, ct, n_records, shards)
+        until, _ = self._masked_steps(self._cc_step, cb, n, shards)
+        self.state = self._cold_trunc(self.state, until, jnp.asarray(shards))
+        self.compactions += shards.astype(np.int64)
+
+    def compact_single_log(self, n_records: Optional[int] = None,
+                           shards: Optional[np.ndarray] = None):
+        hb, ht, *_ = self._bounds()
+        shards = np.ones(self.S, bool) if shards is None else shards
+        n = self._regions(hb, ht, n_records, shards)
+        until, live_total = self._masked_steps(self._sl_step, hb, n, shards)
+        if self.faster_compaction == "scan":
+            self.state = self._full_scan(self.state, jnp.asarray(shards))
+            self.temp_table_peak_bytes = np.maximum(
+                self.temp_table_peak_bytes,
+                np.where(shards,
+                         live_total * (self.cfg.record_bytes + 16), 0))
+        self.state = self._hot_trunc(self.state, until, jnp.asarray(shards))
+        self.compactions += shards.astype(np.int64)
+
+    # -- reporting ------------------------------------------------------------
+    def io_stats(self) -> dict:
+        """KV-compatible totals over all shards."""
+        s = self.state.stats
+        rb, wb, ro, mh = jax.device_get(
+            (s.read_blocks, s.write_blocks, s.read_ops, s.mem_hits))
+        return dict(
+            read_bytes=int(np.sum(rb)) * BLOCK_BYTES,
+            write_bytes=int(np.sum(wb)) * BLOCK_BYTES,
+            read_ops=int(np.sum(ro)),
+            mem_hits=int(np.sum(mh)),
+        )
+
+    def io_stats_per_shard(self) -> dict:
+        s = self.state.stats
+        rb, wb, ro, mh = jax.device_get(
+            (s.read_blocks, s.write_blocks, s.read_ops, s.mem_hits))
+        return dict(
+            read_bytes=(np.asarray(rb) * BLOCK_BYTES).tolist(),
+            write_bytes=(np.asarray(wb) * BLOCK_BYTES).tolist(),
+            read_ops=np.asarray(ro).tolist(),
+            mem_hits=np.asarray(mh).tolist(),
+        )
+
+    def memory_model_bytes(self) -> dict:
+        c = self.cfg
+        per = dict(
+            hot_index=c.hot_index_size * 8,
+            hot_log_mem=c.hot_mem * c.record_bytes,
+            read_cache=(c.rc_capacity if self.mode == "f2" else 0)
+            * c.record_bytes,
+            cold_log_mem=(c.cold_mem if self.mode == "f2" else 0)
+            * c.record_bytes,
+            chunk_index=(c.n_chunks if self.mode == "f2" else 0) * 8,
+            chunklog_mem=(c.chunklog_mem if self.mode == "f2" else 0)
+            * c.chunk_bytes,
+        )
+        out = {k: v * self.S for k, v in per.items()}
+        out["total"] = sum(out.values())
+        return out
+
+    def check_invariants(self):
+        """Every invariant of api.KV.check_invariants, per shard."""
+        st = self.state
+        (h_of, c_of, i_of, wex, hb, ht, cb, ct) = jax.device_get(
+            (st.hot.overflowed, st.cold.overflowed, st.cold_idx.overflowed,
+             st.walk_exhausted, st.hot.begin, st.hot.tail, st.cold.begin,
+             st.cold.tail))
+        for s in range(self.S):
+            assert not bool(h_of[s]), f"shard {s}: hot log ring overflow"
+            assert not bool(c_of[s]), f"shard {s}: cold log ring overflow"
+            assert not bool(i_of[s]), \
+                f"shard {s}: chunk log overwrote live chunk"
+            assert not bool(wex[s]), \
+                f"shard {s}: hash chain exceeded chain_max"
+            assert int(hb[s]) <= int(ht[s]), f"shard {s}: hot begin > tail"
+            assert int(cb[s]) <= int(ct[s]), f"shard {s}: cold begin > tail"

@@ -1,10 +1,15 @@
 """Serving steps: prefill (full-sequence forward, no loss) and decode (one
-token against the KV cache).
+token against the KV cache), plus the sharded F2 KV service entry points
+for serving key-value traffic alongside the model.
 
 Cache sharding: batch over (pod, data); the cache sequence dim over `model`
 (flash-decode: GSPMD inserts the partial-softmax combine collectives) —
 this avoids replicating low-kv-head GQA caches (glm4 kv=2) across the
 16-way model axis.  SSM archs carry O(1) state sharded over heads.
+
+KV-service sharding: the F2 store partitions horizontally — S hash-routed
+shards stacked on a leading axis (`core.sharded.ShardedKV`), dispatched
+with vmap on one device or shard_map over a 1-D device mesh.
 """
 from __future__ import annotations
 
@@ -27,6 +32,30 @@ def prefill_step(cfg: ModelConfig, params, batch) -> jax.Array:
 
 def decode_step(cfg: ModelConfig, params, cache, tokens):
     return transformer.decode_step(cfg, params, cache, tokens)
+
+
+# ---------------------------------------------------------------------------
+# F2 KV service (key-value traffic served alongside the model)
+# ---------------------------------------------------------------------------
+
+def make_kv_service(kv_cfg, n_shards: int = 1, lanes: Optional[int] = None,
+                    dispatch: str = "auto", **kw):
+    """Backing store for a KV-serving deployment: `n_shards` hash-routed F2
+    shards behind one deterministic batch router (`core.shard_router`).
+
+    `dispatch="auto"` places the shard axis across every visible device
+    via shard_map when more than one is available, else vmaps on one —
+    the same code path either way.  `lanes` caps per-shard sub-batch
+    width (None routes any request batch in a single round)."""
+    from ..core.sharded import ShardedKV
+    return ShardedKV(kv_cfg, n_shards, lanes=lanes, dispatch=dispatch, **kw)
+
+
+def kv_service_step(kv, keys, ops, vals=None):
+    """One KV service step: route the request batch to the shards, execute,
+    and restore per-request order.  Runs the sharded pressure scheduler
+    after each routed round.  Returns (status [B], values [B, V])."""
+    return kv.apply(keys, ops, vals)
 
 
 def cache_specs(cfg: ModelConfig, mesh: Optional[jax.sharding.Mesh] = None

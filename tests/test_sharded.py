@@ -1,0 +1,388 @@
+"""Sharding subsystem tests: router properties, bit-exact parity of
+ShardedKV(S) with S independent single-shard stores, masked per-shard
+compaction, multi-round deferral, and the shard_map dispatch path."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (KV, OP_DELETE, OP_NOOP, OP_READ, OP_RMW, OP_UPSERT,
+                        ST_NONE, ST_OK, shard_router)
+from repro.core.sharded import ShardedKV
+from conftest import small_cfg
+
+V = 2
+
+
+def tiny_cfg(**kw):
+    base = dict(hot_index_size=1 << 8, hot_capacity=1 << 9, hot_mem=1 << 6,
+                cold_capacity=1 << 12, cold_mem=1 << 6, n_chunks=1 << 6,
+                chunklog_capacity=1 << 9, chunklog_mem=1 << 5,
+                rc_capacity=1 << 6, value_width=V, chain_max=48)
+    base.update(kw)
+    from repro.core import F2Config
+    return F2Config(**base)
+
+
+# ---------------------------------------------------------------------------
+# Router properties
+# ---------------------------------------------------------------------------
+
+def check_route_roundtrip(keys, ops, vals, S, W):
+    """The router's contract, checked exhaustively for one batch."""
+    B = len(keys)
+    sk, so, sv, rt = shard_router.route(
+        jnp.asarray(keys, jnp.int32), jnp.asarray(ops, jnp.int32),
+        jnp.asarray(vals, jnp.int32), S, W)
+    sk, so, sv = np.asarray(sk), np.asarray(so), np.asarray(sv)
+    r = {f: np.asarray(getattr(rt, f)) for f in rt._fields}
+    active = np.asarray(ops) != OP_NOOP
+
+    # every active lane appears exactly once: placed XOR deferred
+    assert np.array_equal(active, r["placed"] | r["deferred"])
+    assert not np.any(r["placed"] & r["deferred"])
+    # placed lanes occupy unique slab slots holding exactly their op
+    dests = r["dest"][r["placed"]]
+    assert len(set(dests.tolist())) == len(dests)
+    for i in np.flatnonzero(r["placed"]):
+        s, w = divmod(int(r["dest"][i]), W)
+        assert s == r["shard"][i] < S and w < W
+        assert sk[s, w] == keys[i] and so[s, w] == ops[i]
+        assert np.array_equal(sv[s, w], vals[i])
+        assert r["mask"][s, w]
+    # occupancy masks: per-shard mask sums equal min(count, W) and the
+    # total placed-lane count
+    assert np.array_equal(r["occupancy"], np.minimum(r["counts"], W))
+    assert np.array_equal(r["mask"].sum(1), r["occupancy"])
+    assert r["mask"].sum() == r["placed"].sum()
+    assert r["counts"].sum() == active.sum()
+    # with W >= B deferral is impossible and every active lane is placed
+    if W >= B:
+        assert not r["deferred"].any()
+    # within a shard, slab order preserves original batch order (stability)
+    for s in range(S):
+        lanes = [i for i in np.flatnonzero(r["placed"]) if r["shard"][i] == s]
+        pos = [int(r["dest"][i]) - s * W for i in lanes]
+        assert pos == sorted(pos) == list(range(len(pos)))
+    # inverse gather is a permutation restore: routing unique lane tags
+    # through the slabs and back reproduces them exactly
+    tags = jnp.arange(S * W, dtype=jnp.int32).reshape(S, W)
+    vtags = jnp.stack([tags, tags + 1], -1)
+    ost, ov = shard_router.unroute(rt, tags, vtags)
+    ost, ov = np.asarray(ost), np.asarray(ov)
+    assert np.array_equal(ost[r["placed"]], r["dest"][r["placed"]])
+    assert np.array_equal(ov[r["placed"], 0], r["dest"][r["placed"]])
+    assert np.all(ost[~r["placed"]] == ST_NONE)
+    assert np.all(ov[~r["placed"]] == 0)
+
+
+def test_router_roundtrip_seeded():
+    rng = np.random.default_rng(11)
+    for S in (1, 2, 4, 8):
+        for W in (4, 16, 64):
+            keys = rng.integers(-50, 200, 64).astype(np.int32)
+            ops = rng.choice([OP_NOOP, OP_READ, OP_UPSERT, OP_RMW,
+                              OP_DELETE], 64).astype(np.int32)
+            vals = rng.integers(0, 100, (64, V)).astype(np.int32)
+            check_route_roundtrip(keys, ops, vals, S, W)
+
+
+def test_router_determinism_and_key_affinity():
+    """Same batch -> same route; equal keys land on equal shards."""
+    rng = np.random.default_rng(5)
+    keys = rng.integers(0, 30, 48).astype(np.int32)   # many duplicates
+    ops = np.full(48, OP_UPSERT, np.int32)
+    vals = rng.integers(0, 9, (48, V)).astype(np.int32)
+    _, _, _, r1 = shard_router.route(jnp.asarray(keys), jnp.asarray(ops),
+                                     jnp.asarray(vals), 4, 48)
+    _, _, _, r2 = shard_router.route(jnp.asarray(keys), jnp.asarray(ops),
+                                     jnp.asarray(vals), 4, 48)
+    assert np.array_equal(np.asarray(r1.dest), np.asarray(r2.dest))
+    sid = np.asarray(shard_router.shard_of(jnp.asarray(keys), 4))
+    for k in np.unique(keys):
+        assert len(np.unique(sid[keys == k])) == 1
+
+
+# hypothesis property (skips where hypothesis is not installed, without
+# skipping the rest of this module — unlike tests/test_store_property.py,
+# the seeded tests above still run)
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    _OPS = st.sampled_from([OP_NOOP, OP_READ, OP_UPSERT, OP_RMW, OP_DELETE])
+
+    @settings(max_examples=30, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.lists(st.integers(-100, 1000), min_size=32, max_size=32),
+           st.lists(_OPS, min_size=32, max_size=32),
+           st.sampled_from([1, 2, 4, 8]),
+           st.sampled_from([2, 8, 32]))
+    def test_router_property(keys, ops, S, W):
+        """Every input lane appears exactly once post-route, occupancy
+        masks sum to the placed-lane count, the inverse gather is a
+        permutation."""
+        vals = np.stack([np.asarray(keys, np.int32)] * V, 1)
+        check_route_roundtrip(np.asarray(keys, np.int32),
+                              np.asarray(ops, np.int32), vals, S, W)
+else:
+    @pytest.mark.skip(
+        reason="hypothesis not installed (pip install '.[test]')")
+    def test_router_property():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# ShardedKV parity with S independent stores
+# ---------------------------------------------------------------------------
+
+def test_sharded_matches_independent_stores():
+    """ShardedKV(S=4) is bit-exact — statuses, values, every state leaf,
+    IoStats, compaction counters — with routing each sub-batch through four
+    independent single-shard KVs, on a YCSB-A-style mix that triggers
+    masked hot->cold and cold->cold compactions along the way (the small
+    cold ring makes hot->cold passes cascade into cold->cold within one
+    scheduler invocation, the same-pass re-read path)."""
+    cfg = tiny_cfg(cold_capacity=1 << 9)
+    S, B = 4, 128
+    kw = dict(mode="f2", trigger=0.6, compact_frac=0.3, compact_batch=64,
+              donate=False)
+    skv = ShardedKV(cfg, S, **kw)
+    refs = [KV(cfg, **kw) for _ in range(S)]
+
+    rng = np.random.default_rng(7)
+
+    def parity_step(keys, ops, vals, step):
+        st_s, rv_s = skv.apply(keys, ops, vals)
+        sk, so, sv, rt = shard_router.route(
+            jnp.asarray(keys), jnp.asarray(ops), jnp.asarray(vals), S, B)
+        st_ref, rv_ref = [], []
+        for s in range(S):
+            st_r, rv_r = refs[s].apply(sk[s], so[s], sv[s])
+            st_ref.append(st_r)
+            rv_ref.append(rv_r)
+        st_u, rv_u = shard_router.unroute(rt, jnp.stack(st_ref),
+                                          jnp.stack(rv_ref))
+        assert np.array_equal(np.asarray(st_s), np.asarray(st_u)), step
+        assert np.array_equal(np.asarray(rv_s), np.asarray(rv_u)), step
+
+    for step in range(40):
+        keys = rng.integers(0, 500, B).astype(np.int32)
+        ops = rng.choice([OP_READ, OP_UPSERT, OP_RMW, OP_DELETE], B,
+                         p=[.35, .45, .1, .1]).astype(np.int32)
+        vals = rng.integers(0, 100, (B, V)).astype(np.int32)
+        parity_step(keys, ops, vals, step)
+
+    # phase 2: flood fresh keys so all-live hot regions pump the cold log
+    # over its own trigger — the hot->cold => cold->cold cascade must fire
+    # inside a single scheduler pass on both sides
+    nxt = 1000
+    for step in range(40, 80):
+        keys = np.arange(nxt, nxt + B, dtype=np.int32)
+        nxt += B
+        ops = np.full(B, OP_UPSERT, np.int32)
+        vals = rng.integers(0, 100, (B, V)).astype(np.int32)
+        parity_step(keys, ops, vals, step)
+        if np.asarray(skv.state.cold_truncs).sum() > 0:
+            break
+
+    # dedicated routed read path (read_batch lift, no write engine):
+    # statuses, values and the RC-admission state effects must match
+    # driving each shard's read_batch directly with the slab active masks
+    rkeys = rng.integers(0, 1500, B).astype(np.int32)
+    st_s, rv_s = skv.read(rkeys)
+    rops = np.full(B, OP_READ, np.int32)
+    sk, so, _, rt = shard_router.route(
+        jnp.asarray(rkeys), jnp.asarray(rops),
+        jnp.zeros((B, V), jnp.int32), S, B)
+    st_ref, rv_ref = [], []
+    for s in range(S):
+        refs[s].state, st_r, rv_r = refs[s]._read(refs[s].state, sk[s],
+                                                  so[s] == OP_READ)
+        st_ref.append(st_r)
+        rv_ref.append(rv_r)
+    st_u, rv_u = shard_router.unroute(rt, jnp.stack(st_ref),
+                                      jnp.stack(rv_ref))
+    assert np.array_equal(np.asarray(st_s), np.asarray(st_u))
+    assert np.array_equal(np.asarray(rv_s), np.asarray(rv_u))
+
+    # the mix must actually have exercised the pressure scheduler, on both
+    # log tiers (cold truncations prove the in-pass cascade fired)
+    assert skv.compactions.sum() > 0
+    assert np.asarray(skv.state.cold_truncs).sum() > 0
+    assert np.array_equal(skv.compactions, [r.compactions for r in refs])
+    # force the remaining lifecycle steps on both sides and re-compare
+    skv.compact_hot_cold()
+    skv.compact_cold_cold()
+    for r in refs:
+        r.compact_hot_cold()
+        r.compact_cold_cold()
+
+    ref_state = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                       *[r.state for r in refs])
+    same = jax.tree_util.tree_map(lambda a, b: bool((a == b).all()),
+                                  skv.state, ref_state)
+    assert all(jax.tree_util.tree_leaves(same)), same
+    io_s = skv.io_stats()
+    assert io_s == {k: sum(r.io_stats()[k] for r in refs) for k in io_s}
+    skv.check_invariants()
+    for r in refs:
+        r.check_invariants()
+
+
+def test_masked_compaction_single_hot_shard():
+    """Pressure on one shard compacts only that shard; the others pass
+    through byte-identical, and invariants hold on every shard after the
+    masked pass."""
+    cfg = tiny_cfg()
+    S = 4
+    skv = ShardedKV(cfg, S, trigger=0.6, compact_frac=0.5, compact_batch=64,
+                    donate=False)
+    # keys that all route to one shard
+    sid = np.asarray(shard_router.shard_of(jnp.arange(20000, dtype=jnp.int32),
+                                           S))
+    hot_shard = int(sid[0])
+    hot_keys = np.flatnonzero(sid == hot_shard)[:400].astype(np.int32)
+    ref = {}
+    rng = np.random.default_rng(13)
+    for off in range(0, 400, 100):
+        ks = hot_keys[off:off + 100]
+        vs = rng.integers(0, 100, (100, V)).astype(np.int32)
+        skv.upsert(ks, vs)
+        for k, v in zip(ks, vs):
+            ref[int(k)] = v.copy()
+    truncs = np.asarray(skv.state.hot_truncs)
+    assert skv.compactions[hot_shard] > 0
+    assert truncs[hot_shard] > 0
+    others = [s for s in range(S) if s != hot_shard]
+    assert all(skv.compactions[s] == 0 for s in others)
+    assert all(truncs[s] == 0 for s in others)
+    # untouched shards are byte-identical to freshly created ones
+    from repro.core import sharded as sharded_mod
+    fresh = sharded_mod.create(cfg, S)
+    same = jax.tree_util.tree_map(
+        lambda a, b: np.asarray((a == b).reshape(S, -1).all(1)),
+        skv.state, fresh)
+    for leaf in jax.tree_util.tree_leaves(same):
+        assert all(leaf[s] for s in others)
+    skv.check_invariants()
+    # post-compaction read-back
+    st, rv = skv.read(hot_keys[:128])
+    assert np.all(np.asarray(st) == ST_OK)
+    for i, k in enumerate(hot_keys[:128]):
+        assert np.array_equal(np.asarray(rv)[i], ref[int(k)])
+
+
+def test_multi_round_deferral_oracle():
+    """lanes < B forces multi-round routing; final state still matches a
+    dict oracle (per-key order is preserved across rounds)."""
+    cfg = small_cfg()
+    skv = ShardedKV(cfg, 4, trigger=2.0, donate=False, lanes=16)
+    rng = np.random.default_rng(23)
+    ref = {}
+    B = 96
+    for _ in range(5):
+        keys = rng.integers(0, 120, B).astype(np.int32)
+        ops = rng.choice([OP_UPSERT, OP_RMW, OP_DELETE], B,
+                         p=[.6, .3, .1]).astype(np.int32)
+        vals = rng.integers(0, 100, (B, V)).astype(np.int32)
+        skv.apply(keys, ops, vals)
+        for i in range(B):
+            k, o = int(keys[i]), int(ops[i])
+            if o == OP_UPSERT:
+                ref[k] = vals[i].copy()
+            elif o == OP_DELETE:
+                ref.pop(k, None)
+            else:
+                ref[k] = (ref.get(k, np.zeros(V, np.int32))
+                          + vals[i]).astype(np.int32)
+    assert skv.rounds > 5                      # deferral actually happened
+    ks = np.asarray(sorted(ref), np.int32)
+    ks_pad = np.pad(ks, (0, (-len(ks)) % 32), mode="edge")
+    st, rv = skv.read(ks_pad)
+    st, rv = np.asarray(st), np.asarray(rv)
+    for i, k in enumerate(ks):
+        assert st[i] == ST_OK
+        assert np.array_equal(rv[i], ref[int(k)])
+    skv.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Dispatch paths
+# ---------------------------------------------------------------------------
+
+def _run_batches(dispatch):
+    cfg = tiny_cfg(hot_capacity=1 << 10, hot_mem=1 << 7)
+    kv = ShardedKV(cfg, 4, trigger=0.7, compact_batch=64, donate=False,
+                   dispatch=dispatch)
+    rng = np.random.default_rng(3)
+    outs = []
+    for _ in range(5):
+        keys = rng.integers(0, 300, 64).astype(np.int32)
+        ops = rng.choice([OP_READ, OP_UPSERT], 64).astype(np.int32)
+        vals = rng.integers(0, 50, (64, V)).astype(np.int32)
+        st, rv = kv.apply(keys, ops, vals)
+        outs.append((np.asarray(st), np.asarray(rv)))
+    kv.check_invariants()
+    leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(kv.state)]
+    return outs, leaves, kv.dispatch
+
+
+def test_shard_map_dispatch_matches_vmap():
+    """The shard_map path (single-device mesh on CPU CI) is bit-exact with
+    plain vmap — the same code multi-device deployments run."""
+    o_v, l_v, d_v = _run_batches("vmap")
+    o_s, l_s, d_s = _run_batches("shard_map")
+    assert d_v == "vmap" and d_s == "shard_map"
+    for (a, b), (c, d) in zip(o_v, o_s):
+        assert np.array_equal(a, c) and np.array_equal(b, d)
+    for a, b in zip(l_v, l_s):
+        assert np.array_equal(a, b)
+
+
+def test_multi_device_shard_map_subprocess():
+    """End-to-end on a forced 2-device host platform: dispatch='auto'
+    resolves to shard_map over a 2-device mesh and serves reads correctly."""
+    prog = textwrap.dedent("""
+        import jax, numpy as np
+        assert len(jax.devices()) == 2, jax.devices()
+        from repro.core import F2Config
+        from repro.core.sharded import ShardedKV
+        cfg = F2Config(hot_index_size=1 << 8, hot_capacity=1 << 10,
+                       hot_mem=1 << 7, cold_capacity=1 << 12,
+                       cold_mem=1 << 6, n_chunks=1 << 6,
+                       chunklog_capacity=1 << 9, chunklog_mem=1 << 5,
+                       rc_capacity=1 << 6, value_width=2, chain_max=48)
+        kv = ShardedKV(cfg, 4, donate=False, dispatch="auto")
+        assert kv.dispatch == "shard_map", kv.dispatch
+        assert kv.mesh.devices.shape == (2,), kv.mesh.devices.shape
+        keys = np.arange(256, dtype=np.int32)
+        vals = np.stack([keys, keys + 1], 1).astype(np.int32)
+        kv.upsert(keys, vals)
+        st, rv = kv.read(keys)
+        assert np.all(np.asarray(st) == 1)
+        assert np.array_equal(np.asarray(rv), vals)
+        kv.check_invariants()
+        print("MULTIDEV_OK", np.asarray(kv.state.hot.tail).tolist())
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
+                          + " --xla_force_host_platform_device_count=2"),
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src")]
+                   + os.environ.get("PYTHONPATH", "").split(os.pathsep)))
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "MULTIDEV_OK" in out.stdout, out.stdout
