@@ -36,17 +36,20 @@ import jax
 
 from benchmarks.bench_mixed import MIXES, mixed_batches, zipf_keys  # noqa: F401
 from benchmarks.harness import make_sharded_kv
-from repro.core import shard_router
+from repro.core.rebalance import imbalance_of
 from repro.core.sharded import ShardedKV
 
 
 def build_sharded(n_keys: int, S: int, W: int, value_width: int,
-                  engine: str) -> ShardedKV:
+                  engine: str, rebalance_cfg=None) -> ShardedKV:
+    """The shared bench-store recipe (bench_rebalance.py builds through it
+    too, so both benchmarks stay tuned identically)."""
     # bench-scale stores are small: spend more of the (tiny) budget on the
     # hot index so hash chains stay short at a few thousand keys/shard
     kv = make_sharded_kv(n_keys, S, mem_frac=0.25, value_width=value_width,
                          engine=engine, lanes=W, trigger=0.8,
-                         compact_batch=min(W, 1024), index_frac=0.7)
+                         compact_batch=min(W, 1024), index_frac=0.7,
+                         rebalance_cfg=rebalance_cfg)
     keys = np.arange(n_keys, dtype=np.int32)
     vals = np.stack([keys] * value_width, 1).astype(np.int32)
     B = S * W // 2
@@ -71,6 +74,7 @@ def run_config(kv: ShardedKV, batches, repeats: int) -> dict:
     n_batches, B = keys.shape
     rounds0 = kv.rounds
     kv.apply(keys[0], ops[0], vals[0])            # compile
+    lanes0 = kv.routed_lanes.copy()
     best = float("inf")
     for _ in range(repeats):
         t0 = time.perf_counter()
@@ -80,21 +84,24 @@ def run_config(kv: ShardedKV, batches, repeats: int) -> dict:
         best = min(best, time.perf_counter() - t0)
     n_ops = n_batches * B
     rounds = kv.rounds - rounds0
-    # router balance on the measured batches (counts are data, not timing)
-    sid = np.asarray(shard_router.shard_of(
-        jax.numpy.asarray(keys.reshape(-1)), kv.S)).reshape(n_batches, B)
-    counts = np.stack([np.bincount(s, minlength=kv.S) for s in sid])
-    imbalance = float((counts.max(1) / np.maximum(
-        counts.mean(1), 1e-9)).mean())
+    # router balance over the measured batches, straight from the stats
+    # struct the rebalancer consumes (kv.shard_stats() — no parallel
+    # recomputation of shard assignments).  NOTE: since PR 4 this is the
+    # aggregate max/mean of routed lanes over the whole measurement (the
+    # rebalancer's definition), not the per-batch-averaged hash-count
+    # ratio of earlier BENCH_shards.json artifacts.
+    stats = kv.shard_stats()
+    imbalance = imbalance_of(stats.routed_lanes - lanes0)
     return dict(
         ops_per_s=n_ops / best,
         seconds=best,
         n_ops=n_ops,
         rounds_per_batch=rounds / (1 + n_batches * repeats),
         imbalance_max_over_mean=imbalance,
-        shard_occupancy=kv.last_occupancy.tolist(),
-        hot_fill_per_shard=np.round(kv.hot_fills(), 4).tolist(),
+        shard_occupancy=stats.occupancy.tolist(),
+        hot_fill_per_shard=np.round(stats.hot_fill, 4).tolist(),
         compactions_per_shard=kv.compactions.tolist(),
+        shard_stats=stats.to_dict(),
     )
 
 

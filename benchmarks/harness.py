@@ -21,6 +21,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core import KV, F2Config, OP_UPSERT
+from repro.core.rebalance import RebalanceConfig
 from repro.core.sharded import ShardedKV
 from .ycsb import Zipf, make_ops
 
@@ -119,12 +120,16 @@ def make_sharded_kv(n_keys: int, n_shards: int, mem_frac: float = 0.10,
                     value_width: int = 25, engine: str = "fused",
                     lanes: int = None, dispatch: str = "auto",
                     rc_frac: float = 0.17, index_frac: float = 0.17,
-                    mode: str = "f2", **kw) -> ShardedKV:
+                    mode: str = "f2",
+                    rebalance_cfg: RebalanceConfig = None, **kw) -> ShardedKV:
     """S hash-partitioned shards, each sized for its n_keys/S key slice
     under the same S8.1 memory split.  `lanes` caps per-shard sub-batch
     width (None = incoming batch width, single-round routing); ShardedKV
     is API-compatible with KV, so `load_store`/`run_workload` drive it
-    unchanged."""
+    unchanged.  `rebalance_cfg` arms the live rebalancer
+    (`core.rebalance.RebalanceConfig`); per-shard occupancy/traffic stats
+    are always collected and surfaced via `kv.shard_stats()` — the one
+    struct both the rebalancer and the benchmarks consume."""
     shard_keys = max(n_keys // n_shards, 256)
     if mode == "faster":
         # FASTER's single log needs 2x-dataset ring headroom (compaction
@@ -151,7 +156,7 @@ def make_sharded_kv(n_keys: int, n_shards: int, mem_frac: float = 0.10,
         kw.setdefault("faster_compaction", "lookup")
         kw.setdefault("compact_frac", 0.15)
     return ShardedKV(cfg, n_shards, mode=mode, lanes=lanes,
-                     dispatch=dispatch, **kw)
+                     dispatch=dispatch, rebalance_cfg=rebalance_cfg, **kw)
 
 
 def load_store(kv: KV, n_keys: int, batch: int = 4096, seed: int = 1):

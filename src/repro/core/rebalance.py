@@ -1,0 +1,258 @@
+"""Live shard rebalancing: occupancy-driven resharding of a running
+ShardedKV (the follow-on the sharding subsystem unlocks, ROADMAP).
+
+Hash partitioning spreads *keys* uniformly, but skewed traffic (paper S1,
+S3: Zipf workloads concentrate accesses) can still pile onto one shard
+when the hot set clusters in hash space.  The fix is the classic
+data-placement knob: a **bucket -> shard indirection table** in front of
+the router (`shard_router.bucket_of` + `Route.bucket`), so load moves at
+bucket granularity — whole 1/n_buckets slices of the hash space — never
+key by key.
+
+Three pieces, all driven by `ShardedKV`:
+
+  stats   — per-bucket traffic is accumulated device-side in the routed
+            step (one scatter-add over placed lanes) and folded into a
+            host-side EWMA; `ShardStats` is the single struct both the
+            rebalancer and the benchmarks consume (occupancy, fills,
+            per-bucket traffic, max/mean imbalance).
+  plan    — `plan_moves`: when max/mean shard traffic exceeds the
+            threshold, a deterministic greedy pass moves the heaviest
+            helpful buckets from the most- to the least-loaded shard.
+            Pure numpy, pure function of the stats: replaying a workload
+            replays its rebalances.
+  migrate — for each moving bucket: (1) *drain* the source shard with
+            the compaction-style liveness walk (frontier scan + probe in
+            target mode over hot and cold logs: the newest log record
+            per key, exactly the ConditionalInsert verdict), (2) *purge*
+            every source-resident record of the bucket by setting
+            META_INVALID (chain walks in all engine backends skip
+            invalid records and continue via `prev`, so stale versions
+            can never resurface — even if the bucket later migrates
+            back), (3) flip the indirection entry, (4) *replay* the
+            drained records as ordinary routed writes, which the flipped
+            map now sends to the destination shard.  Cold-live values
+            replay before hot-live records (batch order linearizes
+            writes, so the hot version wins), and live hot tombstones
+            replay as Deletes so they keep shadowing older cold values.
+
+Drain and purge are masked vmapped steps like the pressure scheduler's
+compaction passes: a per-shard `do` flag tree-selects new-vs-old state,
+so every shard not involved in a migration stays byte-identical (the
+PR-3 invariant).  `tests/test_rebalance.py` holds the whole subsystem to
+a differential migration oracle against a flat KV replay.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import cold_index, compaction, hybrid_log, probe_engine, shard_router
+from .store import F2State, _merge_walk_io
+from .types import META_INVALID, META_TOMBSTONE, F2Config
+
+
+@dataclasses.dataclass(frozen=True)
+class RebalanceConfig:
+    """Knobs of the occupancy-driven rebalancer (see README).
+
+    `enabled=False` still builds the indirection table and the stats so
+    `rebalance()`/`migrate()` can be driven manually (tests, operators);
+    only the automatic trigger inside `apply` is off."""
+
+    enabled: bool = True
+    buckets_per_shard: int = 8     # n_buckets = S * this (power of 2)
+    threshold: float = 1.25        # trigger: max/mean shard traffic EWMA
+    check_every: int = 8           # scheduler cadence, in routed rounds
+    decay: float = 0.9             # per-round traffic EWMA decay
+    min_traffic: float = 64.0      # don't plan moves on noise-level totals
+    max_moves: int = 0             # bucket moves per pass (0 = n_buckets)
+    migrate_batch: int = 256       # drain frontier / replay batch width
+
+    def __post_init__(self):
+        b = self.buckets_per_shard
+        assert b >= 1 and (b & (b - 1)) == 0, \
+            f"buckets_per_shard={b} not a power of 2"
+        assert self.threshold >= 1.0
+        assert 0.0 <= self.decay < 1.0
+        assert self.check_every >= 1 and self.migrate_batch >= 1
+
+
+@dataclasses.dataclass
+class ShardStats:
+    """The one per-shard/per-bucket occupancy+traffic struct: produced by
+    `ShardedKV.shard_stats()`, consumed by `maybe_rebalance` and reported
+    by `bench_shards.py` / `bench_rebalance.py` (no parallel code paths)."""
+
+    hot_fill: np.ndarray        # float [S] hot-log occupancy fraction
+    cold_fill: np.ndarray       # float [S] cold-log occupancy fraction
+    chunklog_fill: np.ndarray   # float [S] chunk-log occupancy fraction
+    records: np.ndarray         # int64 [S] live-region records (hot+cold)
+    occupancy: np.ndarray       # int64 [S] placed lanes, last routed round
+    routed_lanes: np.ndarray    # int64 [S] placed lanes, cumulative
+    traffic_ewma: np.ndarray    # float [n_buckets] per-bucket traffic EWMA
+    shard_traffic: np.ndarray   # float [S] EWMA aggregated by current map
+    imbalance: float            # max/mean of shard_traffic (1.0 = balanced)
+    bucket_map: np.ndarray      # int32 [n_buckets] current indirection
+
+    def to_dict(self) -> dict:
+        """JSON-friendly view for the benchmark artifacts."""
+        return dict(
+            hot_fill=np.round(self.hot_fill, 4).tolist(),
+            cold_fill=np.round(self.cold_fill, 4).tolist(),
+            chunklog_fill=np.round(self.chunklog_fill, 4).tolist(),
+            records=self.records.tolist(),
+            occupancy=self.occupancy.tolist(),
+            routed_lanes=self.routed_lanes.tolist(),
+            shard_traffic=np.round(self.shard_traffic, 2).tolist(),
+            imbalance=round(float(self.imbalance), 4),
+            bucket_map=self.bucket_map.tolist(),
+        )
+
+
+def shard_loads(traffic: np.ndarray, bucket_map: np.ndarray,
+                n_shards: int) -> np.ndarray:
+    """Per-shard load under a map: bucket traffic summed by assignment."""
+    return np.bincount(np.asarray(bucket_map, np.int64),
+                       weights=np.asarray(traffic, np.float64),
+                       minlength=n_shards)
+
+
+def imbalance_of(loads: np.ndarray) -> float:
+    mean = float(np.mean(loads))
+    return float(np.max(loads)) / mean if mean > 0 else 1.0
+
+
+def plan_moves(
+    traffic: np.ndarray,      # float [n_buckets] per-bucket traffic EWMA
+    bucket_map: np.ndarray,   # int32 [n_buckets] current indirection
+    n_shards: int,
+    threshold: float = 1.25,
+    max_moves: int = 0,
+    min_traffic: float = 0.0,
+) -> Optional[np.ndarray]:
+    """Deterministic greedy resharding plan, or None when balanced.
+
+    While the most-loaded shard exceeds `threshold * mean`, move its
+    heaviest bucket that still helps (bucket load strictly below the
+    src-dst gap, so the pair max strictly decreases) to the least-loaded
+    shard.  Ties break on the lowest bucket index — the plan is a pure
+    function of (traffic, map), so replays are bit-exact."""
+    traffic = np.asarray(traffic, np.float64)
+    bucket_map = np.asarray(bucket_map, np.int32)
+    if traffic.sum() < max(min_traffic, 1e-12):
+        return None
+    load = shard_loads(traffic, bucket_map, n_shards)
+    mean = load.sum() / n_shards
+    new_map = bucket_map.copy()
+    cap = max_moves if max_moves > 0 else len(bucket_map)
+    moves = 0
+    while moves < cap:
+        src = int(np.argmax(load))
+        dst = int(np.argmin(load))
+        gap = load[src] - load[dst]
+        if load[src] <= threshold * mean or gap <= 0:
+            break
+        cand = np.flatnonzero(new_map == src)
+        w = traffic[cand]
+        ok = (w > 0) & (w < gap)
+        if not ok.any():
+            break
+        b = int(cand[int(np.argmax(np.where(ok, w, -1.0)))])
+        new_map[b] = dst
+        load[src] -= traffic[b]
+        load[dst] += traffic[b]
+        moves += 1
+    return new_map if moves else None
+
+
+# ---------------------------------------------------------------------------
+# Masked single-shard migration kernels (vmapped by ShardedKV, like the
+# pressure scheduler's compaction steps)
+# ---------------------------------------------------------------------------
+
+def _select(do, new, old):
+    """Per-shard masked state update: `do` is a scalar bool under vmap."""
+    return jax.tree_util.tree_map(lambda a, b: jnp.where(do, a, b), new, old)
+
+
+def drain_hot_step(cfg: F2Config, B: int, n_buckets: int, state: F2State,
+                   start: jax.Array, until: jax.Array, move: jax.Array,
+                   do: jax.Array):
+    """One drain frontier over the hot log: liveness-walk a B-record window
+    (the hot->cold compaction verdict: the chain's newest log record must
+    be this record) and emit the live records of moving buckets.
+
+    Returns (state, keys [B], vals [B, V], tomb [B], take [B]): `take`
+    marks collected lanes; live tombstones are collected too (they must
+    replay as Deletes to keep shadowing older cold values).  State changes
+    are I/O accounting only, masked by `do` so undrained shards stay
+    byte-identical."""
+    addrs, m, k, v, meta = compaction._frontier(state.hot, start, until, B)
+    stats = compaction._charge_sequential_read(
+        state.stats, jnp.sum(m.astype(jnp.int32)), cfg.record_bytes)
+    hot_head = hybrid_log.head_addr(state.hot, cfg.hot_mem)
+    res = probe_engine.probe(cfg, k, state.hot, addrs, hot_head, m,
+                             index=state.hot_index, rc=state.rc,
+                             rc_match=False, target=addrs)
+    stats = _merge_walk_io(stats, res)
+    live = m & res.found & (res.addr == addrs)
+    moving = move[shard_router.bucket_of(k, n_buckets)]
+    take = live & moving & do
+    new_state = state._replace(
+        stats=stats,
+        walk_exhausted=state.walk_exhausted | jnp.any(res.exhausted))
+    state = _select(do, new_state, state)
+    tomb = take & ((meta & META_TOMBSTONE) != 0)
+    return state, k, v, tomb, take
+
+
+def drain_cold_step(cfg: F2Config, B: int, n_buckets: int, state: F2State,
+                    start: jax.Array, until: jax.Array, move: jax.Array,
+                    do: jax.Array):
+    """Cold-log drain frontier (the cold->cold liveness verdict).  Live
+    cold tombstones are *not* collected: the destination shard holds
+    nothing for a migrating key, so absence already reads as deleted."""
+    addrs, m, k, v, meta = compaction._frontier(state.cold, start, until, B)
+    stats = compaction._charge_sequential_read(
+        state.stats, jnp.sum(m.astype(jnp.int32)), cfg.record_bytes)
+    entries, stats = cold_index.find_entries(state.cold_idx, cfg, k, m, stats)
+    cold_head = hybrid_log.head_addr(state.cold, cfg.cold_mem)
+    res = probe_engine.probe(cfg, k, state.cold, addrs, cold_head, m,
+                             heads=entries, rc=None, target=addrs)
+    stats = _merge_walk_io(stats, res)
+    live = m & res.found & (res.addr == addrs)
+    live = live & ((meta & META_TOMBSTONE) == 0)
+    moving = move[shard_router.bucket_of(k, n_buckets)]
+    take = live & moving & do
+    new_state = state._replace(
+        stats=stats,
+        walk_exhausted=state.walk_exhausted | jnp.any(res.exhausted))
+    state = _select(do, new_state, state)
+    return state, k, v, take
+
+
+def purge_step(cfg: F2Config, n_buckets: int, state: F2State,
+               move: jax.Array, do: jax.Array) -> F2State:
+    """Invalidate every source-resident record of the moving buckets: one
+    masked meta sweep over the hot log, cold log and read cache.  Chain
+    walks skip META_INVALID records and continue via `prev` (all engine
+    backends), compaction frontiers drop them, and appends rewrite slot
+    meta wholesale — so a purged version can never be observed again,
+    even if its bucket later migrates back to this shard."""
+    def purge_meta(keys, meta):
+        hit = move[shard_router.bucket_of(keys, n_buckets)]
+        return jnp.where(hit, meta | META_INVALID, meta)
+
+    new_state = state._replace(
+        hot=state.hot._replace(meta=purge_meta(state.hot.key,
+                                               state.hot.meta)),
+        cold=state.cold._replace(meta=purge_meta(state.cold.key,
+                                                 state.cold.meta)),
+        rc=state.rc._replace(meta=purge_meta(state.rc.key, state.rc.meta)),
+    )
+    return _select(do, new_state, state)

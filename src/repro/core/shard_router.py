@@ -2,18 +2,24 @@
 
 One B-lane op batch becomes S fixed-width per-shard sub-batches:
 
-    lane i  --hash(key)-->  shard sid[i]  --stable sort-->  slab slot
+    lane i  --hash(key)-->  bucket  --indirection-->  shard  --sort-->  slab
 
-The route is a *pure function of the batch* — no CAS, no work stealing —
-so replaying a batch is bit-exact, which is what makes the sharded store
-testable against S independent single-shard stores.
+The route is a *pure function of the batch and the bucket map* — no CAS,
+no work stealing — so replaying a batch is bit-exact, which is what makes
+the sharded store testable against S independent single-shard stores.
 
 Mechanics (all jnp, jit/vmap friendly, static shapes):
 
-  1. shard id = top log2(S) bits of the murmur-style key hash.  The hot
-     index (`store.hot_slots`) and the cold index (`cold_index.slot_coords`)
-     consume the *low* bits of the same hash, so shard choice and in-shard
-     slot placement stay statistically independent.
+  1. bucket id = top log2(n_buckets) bits of the murmur-style key hash;
+     shard id = `bucket_map[bucket]`, a small indirection table that the
+     live rebalancer (`core.rebalance`) rewrites one bucket at a time.
+     With the *default* map (`default_bucket_map`) the composition
+     collapses to the top log2(S) hash bits — byte-identical to routing
+     without any map (`shard_of`), so a never-rebalanced store routes
+     exactly like the pre-indirection design.  The hot index
+     (`store.hot_slots`) and the cold index (`cold_index.slot_coords`)
+     consume the *low* bits of the same hash, so bucket choice and
+     in-shard slot placement stay statistically independent.
   2. lanes are stably argsorted by shard id; a segment-offset subtraction
      gives each lane its position within its shard's sub-batch.  Stability
      preserves original batch order *within* a shard — per-key op order is
@@ -30,29 +36,52 @@ Mechanics (all jnp, jit/vmap friendly, static shapes):
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .types import OP_NOOP, ST_NONE, hash32
 
 
 def shard_of(keys: jax.Array, n_shards: int) -> jax.Array:
     """Deterministic key -> shard id in [0, n_shards).  n_shards must be a
-    power of two; uses the hash's top bits (the indexes use the low bits)."""
+    power of two; uses the hash's top bits (the indexes use the low bits).
+    Equals `bucket_map[bucket_of(keys, nb)]` under `default_bucket_map`."""
     assert n_shards >= 1 and (n_shards & (n_shards - 1)) == 0, \
         f"n_shards={n_shards} not a power of 2"
-    if n_shards == 1:
+    return bucket_of(keys, n_shards)
+
+
+def bucket_of(keys: jax.Array, n_buckets: int) -> jax.Array:
+    """Deterministic key -> bucket id in [0, n_buckets): the top
+    log2(n_buckets) hash bits.  Buckets refine shards — the first
+    log2(S) of those bits are the default shard choice — so migrating a
+    bucket moves a fixed 1/n_buckets slice of the hash space."""
+    assert n_buckets >= 1 and (n_buckets & (n_buckets - 1)) == 0, \
+        f"n_buckets={n_buckets} not a power of 2"
+    if n_buckets == 1:
         return jnp.zeros(keys.shape, jnp.int32)
-    bits = n_shards.bit_length() - 1
+    bits = n_buckets.bit_length() - 1
     return (hash32(keys) >> jnp.uint32(32 - bits)).astype(jnp.int32)
+
+
+def default_bucket_map(n_shards: int, n_buckets: int) -> np.ndarray:
+    """The identity indirection: bucket b -> shard (b's top log2(S) bits).
+    Routing through it is byte-identical to `shard_of` — the starting map
+    of every ShardedKV until a rebalance rewrites entries."""
+    assert n_buckets >= n_shards and n_buckets % n_shards == 0, \
+        (n_buckets, n_shards)
+    per = n_buckets // n_shards
+    return (np.arange(n_buckets, dtype=np.int32) // per).astype(np.int32)
 
 
 class Route(NamedTuple):
     """Everything needed to invert a routing decision, per original lane."""
 
     shard: jax.Array      # int32 [B] shard id (= n_shards for inactive lanes)
+    bucket: jax.Array     # int32 [B] bucket id (every lane; rebalancer stats)
     dest: jax.Array       # int32 [B] flat slab index (= S*W when unplaced)
     placed: jax.Array     # bool  [B] lane landed in a slab this round
     deferred: jax.Array   # bool  [B] active but over its shard's capacity
@@ -67,16 +96,26 @@ def route(
     vals: jax.Array,  # int32 [B, V]
     n_shards: int,
     lanes: int,
+    bucket_map: Optional[jax.Array] = None,  # int32 [n_buckets] -> shard
 ) -> Tuple[jax.Array, jax.Array, jax.Array, Route]:
     """Returns (skeys [S, W], sops [S, W], svals [S, W, V], route).
 
     Padding lanes carry OP_NOOP (which the store's op masks ignore), key 0
     and value 0.  Lanes whose op is already OP_NOOP never occupy capacity.
+    Shard choice with `bucket_map=None` equals the default map's; note
+    that `Route.bucket` is then at *shard* granularity (n_buckets = S),
+    so callers accumulating per-bucket traffic must pass their map.
     """
     B = keys.shape[0]
     S, W = n_shards, lanes
     active = ops != OP_NOOP
-    sid = jnp.where(active, shard_of(keys, S), jnp.int32(S))
+    if bucket_map is None:
+        bucket = bucket_of(keys, S)
+        sid_act = shard_of(keys, S)
+    else:
+        bucket = bucket_of(keys, bucket_map.shape[0])
+        sid_act = bucket_map[bucket].astype(jnp.int32)
+    sid = jnp.where(active, sid_act, jnp.int32(S))
 
     order = jnp.argsort(sid, stable=True)          # inactive lanes sink last
     sid_sorted = sid[order]
@@ -101,7 +140,7 @@ def route(
     placed = jnp.zeros((B,), jnp.bool_).at[order].set(placed_sorted)
     occupancy = jnp.minimum(counts, jnp.int32(W))
     mask = jnp.arange(W, dtype=jnp.int32)[None, :] < occupancy[:, None]
-    rt = Route(shard=sid, dest=dest, placed=placed,
+    rt = Route(shard=sid, bucket=bucket, dest=dest, placed=placed,
                deferred=active & ~placed, counts=counts,
                occupancy=occupancy, mask=mask)
     return skeys, sops, svals, rt

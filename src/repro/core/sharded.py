@@ -44,6 +44,20 @@ embarrassingly parallel).  `dispatch="auto"` picks shard_map when more
 than one device is visible and S divides across them, else vmap.  The
 shard_map path also runs on a single-device mesh, so CPU CI exercises the
 same code multi-device deployments use.
+
+Live rebalancing
+----------------
+Keys route through a bucket -> shard indirection table
+(`shard_router.bucket_of` + `self.bucket_map`; the default map is
+byte-identical to hash-top-bits routing).  The routed step accumulates
+per-bucket traffic device-side; `maybe_rebalance()` — run next to the
+pressure scheduler — folds it into an EWMA, and when the max/mean shard
+imbalance crosses the configured threshold, plans bucket moves and
+migrates them live: drain the source shard with the compaction-style
+liveness walk, purge the moved bucket's source records (META_INVALID),
+flip the indirection entry, and replay the drained records as ordinary
+routed writes.  All of it is masked vmapped steps, so shards not
+involved in a migration stay byte-identical (`core.rebalance`).
 """
 from __future__ import annotations
 
@@ -57,8 +71,9 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
-from . import compaction, shard_router, store
+from . import compaction, rebalance, shard_router, store
 from . import cold_index as _cold_index
+from .rebalance import RebalanceConfig
 from .types import (BLOCK_BYTES, OP_DELETE, OP_NOOP, OP_READ, OP_RMW,
                     OP_UPSERT, F2Config)
 
@@ -71,9 +86,7 @@ def create(cfg: F2Config, n_shards: int) -> store.F2State:
     return jax.vmap(lambda _: store.create(cfg))(jnp.arange(n_shards))
 
 
-def _select(do, new, old):
-    """Per-shard masked state update: `do` is a scalar bool under vmap."""
-    return jax.tree_util.tree_map(lambda a, b: jnp.where(do, a, b), new, old)
+_select = rebalance._select      # per-shard masked state update (one def)
 
 
 # -- single-shard masked kernels (vmapped by ShardedKV) ----------------------
@@ -140,6 +153,8 @@ class ShardedKV:
         donate: bool = True,
         dispatch: str = "auto",
         lanes: Optional[int] = None,
+        n_buckets: Optional[int] = None,
+        rebalance_cfg: Optional[RebalanceConfig] = None,
     ):
         assert mode in ("f2", "faster")
         assert n_shards >= 1 and (n_shards & (n_shards - 1)) == 0, \
@@ -163,19 +178,48 @@ class ShardedKV:
         self.rounds = 0                 # routed rounds executed (telemetry)
         self.last_occupancy = np.zeros(n_shards, np.int64)  # last round's
 
+        # -- rebalancer state (the indirection table always exists; with
+        #    the default map routing is byte-identical to hash top bits) --
+        self.rb = rebalance_cfg
+        bps = (rebalance_cfg.buckets_per_shard if rebalance_cfg is not None
+               else 8)
+        self.n_buckets = n_buckets or n_shards * bps
+        nb = self.n_buckets
+        assert nb >= n_shards and (nb & (nb - 1)) == 0, \
+            f"n_buckets={nb} not a power of 2 >= n_shards"
+        self.bucket_map = shard_router.default_bucket_map(n_shards, nb)
+        self._bucket_map_dev = jnp.asarray(self.bucket_map)  # flip-cached
+        self._traffic_ewma = np.zeros(nb, np.float64)
+        self._routed_lanes = np.zeros(n_shards, np.int64)   # cumulative
+        self._pending = []              # unfolded (occ, bcounts) rounds
+        self.migrations = 0             # migrate() passes that moved >= 1
+        self.migrated_buckets = 0
+        self.migrated_records = 0
+        self._migrating = False
+        self._last_rb_round = 0
+        self._decay = rebalance_cfg.decay if rebalance_cfg else 0.9
+        mig_batch = (rebalance_cfg.migrate_batch if rebalance_cfg
+                     else min(compact_batch, 256))
+
         dn = dict(donate_argnums=0) if donate else {}
         admit = (mode == "f2") and cfg.rc_capacity > 1
         apply_lifted = self._lift(
             functools.partial(store.apply, cfg, admit_rc=admit), n_in=4)
 
-        def routed_step(state, keys, ops, vals):
+        def bucket_counts(rt):
+            """Per-bucket placed-lane counts: the device-side half of the
+            rebalancer's traffic stats (shared by the write + read steps)."""
+            bidx = jnp.where(rt.placed, rt.bucket, jnp.int32(nb))
+            return jnp.zeros((nb,), jnp.int32).at[bidx].add(1, mode="drop")
+
+        def routed_step(state, keys, ops, vals, bmap):
             W = self.lanes or keys.shape[0]
             skeys, sops, svals, rt = shard_router.route(
-                keys, ops, vals, self.S, W)
+                keys, ops, vals, self.S, W, bucket_map=bmap)
             state, sstatus, srvals = apply_lifted(state, skeys, sops, svals)
             status, rvals = shard_router.unroute(rt, sstatus, srvals)
             return (state, status, rvals, rt.placed, rt.deferred,
-                    rt.occupancy)
+                    rt.occupancy, bucket_counts(rt))
 
         self._step = jax.jit(routed_step, **dn)
 
@@ -185,17 +229,25 @@ class ShardedKV:
             functools.partial(store.read_batch, cfg, admit_rc=admit),
             n_in=3)
 
-        def routed_read(state, keys, ops):
+        def routed_read(state, keys, ops, bmap):
             W = self.lanes or keys.shape[0]
             vals = jnp.zeros((keys.shape[0], cfg.value_width), jnp.int32)
             skeys, sops, _, rt = shard_router.route(
-                keys, ops, vals, self.S, W)
+                keys, ops, vals, self.S, W, bucket_map=bmap)
             state, sstatus, srvals = read_lifted(state, skeys,
                                                  sops == OP_READ)
             status, rvals = shard_router.unroute(rt, sstatus, srvals)
-            return state, status, rvals, rt.placed, rt.deferred
+            return (state, status, rvals, rt.placed, rt.deferred,
+                    rt.occupancy, bucket_counts(rt))
 
         self._read_step = jax.jit(routed_read, **dn)
+        self._drain_hot = jax.jit(self._lift(functools.partial(
+            rebalance.drain_hot_step, cfg, mig_batch, nb), n_in=5), **dn)
+        self._drain_cold = jax.jit(self._lift(functools.partial(
+            rebalance.drain_cold_step, cfg, mig_batch, nb), n_in=5), **dn)
+        self._purge = jax.jit(self._lift(functools.partial(
+            rebalance.purge_step, cfg, nb), n_in=3), **dn)
+        self._mig_batch = mig_batch
         self._hc_step = jax.jit(self._lift(functools.partial(
             _masked_hc_step, cfg, compact_batch), n_in=4), **dn)
         self._cc_step = jax.jit(self._lift(functools.partial(
@@ -223,6 +275,46 @@ class ShardedKV:
                          in_specs=(P(SHARD_AXIS),) * n_in,
                          out_specs=P(SHARD_AXIS), check_rep=False)
 
+    def _note_round(self, occ, bcounts):
+        """Record one routed round's traffic (the scatter-add ran
+        device-side inside the step).  The tiny count arrays are queued
+        and folded into the host EWMA lazily (`_fold_traffic`) so the
+        routed hot paths add no device->host sync.  Migration-replay
+        rounds DO count as executed rounds (`self.rounds` — replay is
+        real work and benchmarks must see its cost) but are excluded
+        from the *traffic signal* (EWMA / routed_lanes), so internal
+        replay lanes cannot tilt the planner or the measured client
+        imbalance."""
+        self.last_occupancy = occ
+        self.rounds += 1
+        if self._migrating:
+            return
+        self._pending.append((occ, bcounts))
+        if len(self._pending) >= 128:   # bound queue growth when stats
+            self._fold_traffic()        # are never read
+
+    def _fold_traffic(self):
+        """Drain queued rounds into the EWMA / lane totals (one host
+        transfer for the whole queue, in round order — values identical
+        to folding eagerly every round)."""
+        if not self._pending:
+            return
+        pending, self._pending = jax.device_get(self._pending), []
+        for occ_np, bc_np in pending:
+            self._routed_lanes += np.asarray(occ_np).astype(np.int64)
+            self._traffic_ewma = (self._decay * self._traffic_ewma
+                                  + np.asarray(bc_np))
+
+    @property
+    def traffic_ewma(self) -> np.ndarray:
+        self._fold_traffic()
+        return self._traffic_ewma.copy()    # folding mutates the internal
+
+    @property
+    def routed_lanes(self) -> np.ndarray:
+        self._fold_traffic()
+        return self._routed_lanes.copy()    # folding mutates the internal
+
     # -- batched operations --------------------------------------------------
     def apply(self, keys, ops, vals=None):
         """Route, execute, inverse-gather.  With lanes=None this is one
@@ -236,32 +328,37 @@ class ShardedKV:
         else:
             vals = jnp.asarray(vals, jnp.int32)
         B = keys.shape[0]
+        bmap = self._bucket_map_dev     # re-uploaded only at a map flip
         if self.lanes is None or self.lanes >= B:
             # single-round fast path: deferral is impossible, so no host
             # round-trips of per-lane results (the serving hot path)
             (self.state, status, rvals, _placed, _deferred,
-             occ) = self._step(self.state, keys, ops, vals)
-            self.last_occupancy = occ
-            self.rounds += 1
+             occ, bc) = self._step(self.state, keys, ops, vals, bmap)
+            self._note_round(occ, bc)
             self.maybe_compact()
+            self.maybe_rebalance()
             return status, rvals
         status = np.zeros(B, np.int32)
         rvals = np.zeros((B, self.cfg.value_width), np.int32)
         cur_ops = ops
         for _ in range(B + 1):          # each round places >= 1 lane
             (self.state, st_r, rv_r, placed, deferred,
-             occ) = self._step(self.state, keys, cur_ops, vals)
+             occ, bc) = self._step(self.state, keys, cur_ops, vals, bmap)
             placed_np = np.asarray(placed)
-            self.last_occupancy = occ
+            self._note_round(occ, bc)
             status = np.where(placed_np, np.asarray(st_r), status)
             rvals = np.where(placed_np[:, None], np.asarray(rv_r), rvals)
-            self.rounds += 1
             self.maybe_compact()
             deferred_np = np.asarray(deferred)
             if not deferred_np.any():
                 break
             cur_ops = jnp.where(jnp.asarray(deferred_np), ops,
                                 jnp.int32(OP_NOOP))
+        # the rebalance check runs once per batch, after every routed
+        # round has executed (a mid-batch map flip would re-route lanes
+        # that were already deferred under the old map — harmless, but
+        # one check per batch keeps migrations at batch boundaries)
+        self.maybe_rebalance()
         return jnp.asarray(status), jnp.asarray(rvals)
 
     def upsert(self, keys, vals):
@@ -275,21 +372,22 @@ class ShardedKV:
         like KV.read)."""
         keys = jnp.asarray(keys, jnp.int32)
         B = keys.shape[0]
+        bmap = self._bucket_map_dev     # re-uploaded only at a map flip
         cur_ops = jnp.full((B,), OP_READ, jnp.int32)
         if self.lanes is None or self.lanes >= B:
-            (self.state, status, rvals, _placed,
-             _deferred) = self._read_step(self.state, keys, cur_ops)
-            self.rounds += 1
+            (self.state, status, rvals, _placed, _deferred,
+             occ, bc) = self._read_step(self.state, keys, cur_ops, bmap)
+            self._note_round(occ, bc)
             return status, rvals
         status = np.zeros(B, np.int32)
         rvals = np.zeros((B, self.cfg.value_width), np.int32)
         for _ in range(B + 1):
-            (self.state, st_r, rv_r, placed,
-             deferred) = self._read_step(self.state, keys, cur_ops)
+            (self.state, st_r, rv_r, placed, deferred,
+             occ, bc) = self._read_step(self.state, keys, cur_ops, bmap)
             placed_np = np.asarray(placed)
+            self._note_round(occ, bc)
             status = np.where(placed_np, np.asarray(st_r), status)
             rvals = np.where(placed_np[:, None], np.asarray(rv_r), rvals)
-            self.rounds += 1
             deferred_np = np.asarray(deferred)
             if not deferred_np.any():
                 break
@@ -420,6 +518,156 @@ class ShardedKV:
                          live_total * (self.cfg.record_bytes + 16), 0))
         self.state = self._hot_trunc(self.state, until, jnp.asarray(shards))
         self.compactions += shards.astype(np.int64)
+
+    # -- live rebalancing (core.rebalance) -----------------------------------
+    def shard_stats(self) -> rebalance.ShardStats:
+        """The one occupancy/traffic struct: per-shard fills and record
+        counts, per-bucket traffic EWMA, and the max/mean imbalance under
+        the current bucket map.  `maybe_rebalance` plans from it and the
+        benchmarks report from it."""
+        hb, ht, cb, ct, ib, it = self._bounds()
+        load = rebalance.shard_loads(self.traffic_ewma, self.bucket_map,
+                                     self.S)
+        return rebalance.ShardStats(
+            hot_fill=(ht - hb) / self.cfg.hot_capacity,
+            cold_fill=(ct - cb) / self.cfg.cold_capacity,
+            chunklog_fill=(it - ib) / self.cfg.chunklog_capacity,
+            records=(ht - hb) + (ct - cb),
+            occupancy=np.asarray(self.last_occupancy).astype(np.int64),
+            routed_lanes=self.routed_lanes,      # properties return copies
+            traffic_ewma=self.traffic_ewma,
+            shard_traffic=load,
+            imbalance=rebalance.imbalance_of(load),
+            bucket_map=self.bucket_map.copy(),
+        )
+
+    def maybe_rebalance(self) -> bool:
+        """Occupancy-driven trigger, run next to the pressure scheduler:
+        every `check_every` routed rounds, plan bucket moves from the
+        traffic EWMA and migrate them if the imbalance crossed the
+        threshold.  A balanced store plans no moves and is left
+        byte-identical (the idempotence half of the migration oracle)."""
+        rb = self.rb
+        if (rb is None or not rb.enabled or self._migrating
+                or self.S == 1):
+            return False
+        if self.rounds - self._last_rb_round < rb.check_every:
+            return False
+        self._last_rb_round = self.rounds
+        new_map = rebalance.plan_moves(
+            self.traffic_ewma, self.bucket_map, self.S,
+            threshold=rb.threshold, max_moves=rb.max_moves,
+            min_traffic=rb.min_traffic)
+        if new_map is None:
+            return False
+        self.migrate(new_map)
+        return True
+
+    def rebalance(self, new_map: Optional[np.ndarray] = None,
+                  threshold: Optional[float] = None) -> int:
+        """Operator-driven rebalance: migrate to an explicit map, or plan
+        one from the current traffic stats.  Returns records moved (0 when
+        already balanced — and then the store is byte-identical)."""
+        if new_map is None:
+            rb = self.rb
+            new_map = rebalance.plan_moves(
+                self.traffic_ewma, self.bucket_map, self.S,
+                threshold=(threshold if threshold is not None
+                           else rb.threshold if rb else 1.25),
+                max_moves=rb.max_moves if rb else 0,
+                min_traffic=rb.min_traffic if rb else 0.0)
+            if new_map is None:
+                return 0
+        return self.migrate(new_map)
+
+    def migrate(self, new_map: np.ndarray) -> int:
+        """Live bucket migration: drain -> (scheduler pass) -> purge ->
+        flip -> replay.  See `core.rebalance` for the protocol; shards
+        with no moving bucket stay byte-identical through every step.
+        Returns the number of records replayed into their new shards."""
+        new_map = np.asarray(new_map, np.int32)
+        assert new_map.shape == (self.n_buckets,), new_map.shape
+        assert ((new_map >= 0) & (new_map < self.S)).all(), new_map
+        changed = np.flatnonzero(new_map != self.bucket_map)
+        if changed.size == 0:
+            return 0
+        move = np.zeros((self.S, self.n_buckets), bool)
+        move[self.bucket_map[changed], changed] = True
+        do = move.any(axis=1)
+        move_dev = jnp.asarray(move)
+        Bm = self._mig_batch
+        V = self.cfg.value_width
+        self._migrating = True
+        try:
+            # --- drain: compaction-style liveness frontiers over the
+            #     source shards' cold then hot logs (cold first so the
+            #     replay linearizes hot versions over cold ones) ----------
+            hb, ht, cb, ct, *_ = self._bounds()
+            parts = []              # (keys, vals, ops) np fragments
+            for tier, begins, tails in (("cold", cb, ct), ("hot", hb, ht)):
+                n = np.where(do, tails - begins, 0)
+                until = jnp.asarray(tails, jnp.int32)
+                n_steps = int(-(-int(n.max()) // Bm)) if n.max() > 0 else 0
+                for i in range(n_steps):
+                    starts = begins + i * Bm
+                    sdo = jnp.asarray(do & (starts < begins + n))
+                    sj = jnp.asarray(starts, jnp.int32)
+                    if tier == "cold":
+                        (self.state, k, v,
+                         take) = self._drain_cold(self.state, sj, until,
+                                                  move_dev, sdo)
+                        tomb = None
+                    else:
+                        (self.state, k, v, tomb,
+                         take) = self._drain_hot(self.state, sj, until,
+                                                 move_dev, sdo)
+                    take_np = np.asarray(take)
+                    if not take_np.any():
+                        continue
+                    k_np = np.asarray(k)[take_np]
+                    v_np = np.asarray(v)[take_np]
+                    if tomb is None:
+                        ops_np = np.full(len(k_np), OP_UPSERT, np.int32)
+                    else:
+                        ops_np = np.where(np.asarray(tomb)[take_np],
+                                          OP_DELETE, OP_UPSERT
+                                          ).astype(np.int32)
+                    parts.append((k_np, v_np, ops_np))
+            # --- let a pending pressure pass interleave (the "racing"
+            #     compaction of the oracle): the drained snapshot stays
+            #     valid — compaction only copies live records and
+            #     truncates — and the purge below is by bucket over the
+            #     whole arrays, so records that moved hot->cold meanwhile
+            #     are still caught ----------------------------------------
+            self.maybe_compact()
+            # --- purge source copies, then flip the indirection ----------
+            self.state = self._purge(self.state, move_dev, jnp.asarray(do))
+            self.bucket_map = new_map.copy()
+            self._bucket_map_dev = jnp.asarray(self.bucket_map)
+            # --- replay as ordinary routed writes (now land on dst) ------
+            if parts:
+                keys_all = np.concatenate([p[0] for p in parts])
+                vals_all = np.concatenate([p[1] for p in parts])
+                ops_all = np.concatenate([p[2] for p in parts])
+            else:
+                keys_all = np.zeros(0, np.int32)
+                vals_all = np.zeros((0, V), np.int32)
+                ops_all = np.zeros(0, np.int32)
+            n_moved = len(keys_all)
+            for off in range(0, n_moved, Bm):
+                ks = keys_all[off:off + Bm]
+                pad = Bm - len(ks)
+                ks = np.pad(ks, (0, pad))
+                os_ = np.pad(ops_all[off:off + Bm], (0, pad),
+                             constant_values=OP_NOOP)
+                vs = np.pad(vals_all[off:off + Bm], ((0, pad), (0, 0)))
+                self.apply(ks, os_, vs)
+        finally:
+            self._migrating = False
+        self.migrations += 1
+        self.migrated_buckets += int(changed.size)
+        self.migrated_records += n_moved
+        return n_moved
 
     # -- reporting ------------------------------------------------------------
     def io_stats(self) -> dict:

@@ -9,7 +9,10 @@ this avoids replicating low-kv-head GQA caches (glm4 kv=2) across the
 
 KV-service sharding: the F2 store partitions horizontally — S hash-routed
 shards stacked on a leading axis (`core.sharded.ShardedKV`), dispatched
-with vmap on one device or shard_map over a 1-D device mesh.
+with vmap on one device or shard_map over a 1-D device mesh.  Requests
+route through a bucket -> shard indirection table, so the live rebalancer
+(`core.rebalance`) can migrate hot buckets off a saturated shard while
+the service keeps taking traffic.
 """
 from __future__ import annotations
 
@@ -39,23 +42,44 @@ def decode_step(cfg: ModelConfig, params, cache, tokens):
 # ---------------------------------------------------------------------------
 
 def make_kv_service(kv_cfg, n_shards: int = 1, lanes: Optional[int] = None,
-                    dispatch: str = "auto", **kw):
+                    dispatch: str = "auto", rebalance_cfg=None, **kw):
     """Backing store for a KV-serving deployment: `n_shards` hash-routed F2
     shards behind one deterministic batch router (`core.shard_router`).
 
     `dispatch="auto"` places the shard axis across every visible device
     via shard_map when more than one is available, else vmaps on one —
     the same code path either way.  `lanes` caps per-shard sub-batch
-    width (None routes any request batch in a single round)."""
+    width (None routes any request batch in a single round).
+
+    `rebalance_cfg` (a `core.rebalance.RebalanceConfig`) arms the live
+    rebalancer: when skewed traffic clusters in hash space and one shard's
+    occupancy drifts past the threshold, the service migrates whole
+    buckets to idle shards between request batches — no downtime, requests
+    keep routing through the (flipped) indirection table."""
     from ..core.sharded import ShardedKV
-    return ShardedKV(kv_cfg, n_shards, lanes=lanes, dispatch=dispatch, **kw)
+    return ShardedKV(kv_cfg, n_shards, lanes=lanes, dispatch=dispatch,
+                     rebalance_cfg=rebalance_cfg, **kw)
 
 
 def kv_service_step(kv, keys, ops, vals=None):
     """One KV service step: route the request batch to the shards, execute,
-    and restore per-request order.  Runs the sharded pressure scheduler
-    after each routed round.  Returns (status [B], values [B, V])."""
+    and restore per-request order.  Runs the sharded pressure scheduler —
+    and, when armed, the occupancy-driven rebalance check — after each
+    routed batch.  Returns (status [B], values [B, V])."""
     return kv.apply(keys, ops, vals)
+
+
+def kv_service_stats(kv) -> dict:
+    """Serving telemetry: the per-shard occupancy/traffic struct
+    (`ShardedKV.shard_stats()`) as a JSON-friendly dict, plus migration
+    counters — what an operator dashboard polls to watch skew and the
+    rebalancer's response."""
+    out = kv.shard_stats().to_dict()
+    out.update(migrations=kv.migrations,
+               migrated_records=kv.migrated_records,
+               migrated_buckets=kv.migrated_buckets,
+               rounds=kv.rounds)
+    return out
 
 
 def cache_specs(cfg: ModelConfig, mesh: Optional[jax.sharding.Mesh] = None

@@ -1,0 +1,422 @@
+"""Differential migration oracle for live shard rebalancing.
+
+The contract under test (core/rebalance.py + ShardedKV.migrate): resharding
+a *running* store is observably transparent.  After any sequence of ops and
+rebalances — including rebalances that overlap a masked pressure compaction
+on the source shard, and buckets that migrate away and later return — the
+ShardedKV must be bit-exact on statuses and values with a single flat KV
+replaying the same op stream (and with a dict oracle).  Rebalancing a
+balanced store must be a byte-identical no-op, shards not involved in a
+migration must stay byte-identical through it, and the traffic stats the
+rebalancer consumes must be observation-only: an armed-but-never-triggered
+rebalancer leaves every state leaf and IoStats bit-exact with a store that
+has no rebalancer at all (the IoStats clause of the oracle — a migration
+itself does real modeled I/O, so IoStats equality is asserted on the
+paths that promise zero perturbation).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (KV, OP_DELETE, OP_NOOP, OP_READ, OP_RMW, OP_UPSERT,
+                        RebalanceConfig, ST_NOT_FOUND, ST_OK, F2Config,
+                        rebalance, shard_router)
+from repro.core.sharded import ShardedKV
+
+V = 2
+
+
+def tiny_cfg(**kw):
+    base = dict(hot_index_size=1 << 8, hot_capacity=1 << 9, hot_mem=1 << 6,
+                cold_capacity=1 << 11, cold_mem=1 << 6, n_chunks=1 << 6,
+                chunklog_capacity=1 << 9, chunklog_mem=1 << 5,
+                rc_capacity=1 << 6, value_width=V, chain_max=48)
+    base.update(kw)
+    return F2Config(**base)
+
+
+def make_pair(cfg, S=4, trigger=0.6, rb=None, **kw):
+    """A ShardedKV and the flat-KV replay reference for the same stream."""
+    common = dict(mode="f2", trigger=trigger, compact_frac=0.3,
+                  compact_batch=64, donate=False)
+    common.update(kw)
+    skv = ShardedKV(cfg, S, rebalance_cfg=rb, **common)
+    kv = KV(cfg, **common)
+    return skv, kv
+
+
+def parity_step(skv, kv, ref, keys, ops, vals, tag):
+    """One batch on both stores: statuses and values must be bit-exact,
+    and reads must match the dict oracle; then fold writes into it."""
+    st_s, rv_s = skv.apply(keys, ops, vals)
+    st_f, rv_f = kv.apply(keys, ops, vals)
+    st_s, rv_s = np.asarray(st_s), np.asarray(rv_s)
+    assert np.array_equal(st_s, np.asarray(st_f)), tag
+    assert np.array_equal(rv_s, np.asarray(rv_f)), tag
+    for i in range(len(keys)):
+        k, o = int(keys[i]), int(ops[i])
+        if o == OP_READ:
+            if k in ref:
+                assert st_s[i] == ST_OK and np.array_equal(rv_s[i], ref[k]), \
+                    (tag, k)
+            else:
+                assert st_s[i] == ST_NOT_FOUND, (tag, k)
+    for i in range(len(keys)):
+        k, o = int(keys[i]), int(ops[i])
+        if o == OP_UPSERT:
+            ref[k] = vals[i].copy()
+        elif o == OP_DELETE:
+            ref.pop(k, None)
+        elif o == OP_RMW:
+            ref[k] = (ref.get(k, np.zeros(V, np.int32))
+                      + vals[i]).astype(np.int32)
+
+
+def readback_parity(skv, kv, ref, n_keys, tag="readback"):
+    ks = np.arange(n_keys, dtype=np.int32)
+    st_s, rv_s = skv.read(ks)
+    st_f, rv_f = kv.read(ks)
+    st_s, rv_s = np.asarray(st_s), np.asarray(rv_s)
+    assert np.array_equal(st_s, np.asarray(st_f)), tag
+    assert np.array_equal(rv_s, np.asarray(rv_f)), tag
+    for k in range(n_keys):
+        if k in ref:
+            assert st_s[k] == ST_OK and np.array_equal(rv_s[k], ref[k]), \
+                (tag, k)
+        else:
+            assert st_s[k] == ST_NOT_FOUND, (tag, k)
+
+
+def keys_on_shard(skv, shard, n=4096):
+    """Keys whose *current* route lands on `shard` (map-aware)."""
+    cand = np.arange(n, dtype=np.int32)
+    b = np.asarray(shard_router.bucket_of(jnp.asarray(cand), skv.n_buckets))
+    return cand[skv.bucket_map[b] == shard]
+
+
+# ---------------------------------------------------------------------------
+# The migration oracle
+# ---------------------------------------------------------------------------
+
+def test_migration_oracle_flat_replay():
+    """>= 2 forced rebalances inside a mixed op stream — the second one
+    overlapping a masked pressure compaction on the source shard — and the
+    ShardedKV stays bit-exact (statuses, values) with a flat KV replaying
+    the same stream, and with a dict oracle; one migrated bucket later
+    returns to its original shard, proving purged source copies can never
+    resurrect."""
+    cfg = tiny_cfg()
+    rb = RebalanceConfig(enabled=False, buckets_per_shard=8, migrate_batch=64)
+    skv, kv = make_pair(cfg, S=4, trigger=0.6, rb=rb)
+    rng = np.random.default_rng(19)
+    N, B = 500, 128
+    ref = {}
+
+    def mixed_batch():
+        keys = rng.integers(0, N, B).astype(np.int32)
+        ops = rng.choice([OP_READ, OP_UPSERT, OP_RMW, OP_DELETE], B,
+                         p=[.3, .4, .15, .15]).astype(np.int32)
+        vals = rng.integers(0, 100, (B, V)).astype(np.int32)
+        return keys, ops, vals
+
+    for step in range(8):
+        parity_step(skv, kv, ref, *mixed_batch(), tag=("warm", step))
+
+    # --- rebalance #1: planner-driven off the measured traffic EWMA -------
+    stats = skv.shard_stats()
+    new_map = rebalance.plan_moves(stats.traffic_ewma, stats.bucket_map, 4,
+                                   threshold=1.0)  # force: any imbalance
+    assert new_map is not None
+    moved_b = int(np.flatnonzero(new_map != skv.bucket_map)[0])
+    home_shard = int(skv.bucket_map[moved_b])
+    n1 = skv.migrate(new_map)
+    assert skv.migrations == 1 and n1 > 0
+    skv.check_invariants()
+    for step in range(6):
+        parity_step(skv, kv, ref, *mixed_batch(), tag=("mid", step))
+
+    # --- rebalance #2: overlapping a masked compaction on the source ------
+    # Build pressure on one source shard with the scheduler disarmed, then
+    # re-arm it and migrate: `migrate` runs a scheduler pass between drain
+    # and purge, so the hot->cold compaction fires masked on the source
+    # shard in the middle of the migration.
+    skv.trigger = 2.0
+    kv.trigger = 2.0
+    src = int(np.argmax(skv.hot_fills()))
+    hot_keys = keys_on_shard(skv, src)
+    for _ in range(8):
+        if skv.hot_fills()[src] > 0.55:
+            break
+        ks = hot_keys[rng.integers(0, len(hot_keys), B)].astype(np.int32)
+        vs = rng.integers(0, 100, (B, V)).astype(np.int32)
+        parity_step(skv, kv, ref, ks,
+                    np.full(B, OP_UPSERT, np.int32), vs, "flood")
+    assert skv.hot_fills()[src] > 0.5
+    skv.trigger = 0.5
+    kv.trigger = 0.5
+    pre = skv.compactions.copy()
+    nm2 = skv.bucket_map.copy()
+    src_buckets = np.flatnonzero(nm2 == src)[:3]
+    nm2[src_buckets] = (src + 1) % 4
+    n2 = skv.migrate(nm2)
+    assert n2 > 0 and skv.migrations == 2
+    assert skv.compactions[src] > pre[src], \
+        "the masked compaction did not overlap the migration on the source"
+    skv.check_invariants()
+    for step in range(6):
+        parity_step(skv, kv, ref, *mixed_batch(), tag=("post", step))
+
+    # --- rebalance #3: a bucket returns to its original shard -------------
+    nm3 = skv.bucket_map.copy()
+    assert nm3[moved_b] != home_shard
+    nm3[moved_b] = home_shard
+    skv.migrate(nm3)
+    assert skv.migrations == 3
+    for step in range(4):
+        parity_step(skv, kv, ref, *mixed_batch(), tag=("return", step))
+
+    readback_parity(skv, kv, ref, N + 12)
+    skv.check_invariants()
+    kv.check_invariants()
+    assert skv.compactions.sum() > 0 and kv.compactions > 0
+
+
+def test_rebalance_of_balanced_store_is_byte_identical_noop():
+    """Idempotence: on a balanced store, maybe_rebalance plans nothing,
+    rebalance() moves nothing, and migrating to the current map is an
+    early-out — every state leaf, IoStats and every host-side counter is
+    byte-identical afterwards."""
+    cfg = tiny_cfg()
+    rb = RebalanceConfig(enabled=True, buckets_per_shard=8,
+                         threshold=1e9,       # automatic path never fires
+                         migrate_batch=64)
+    skv = ShardedKV(cfg, 4, trigger=2.0, donate=False, rebalance_cfg=rb)
+    rng = np.random.default_rng(3)
+    for _ in range(6):
+        keys = rng.integers(0, 400, 64).astype(np.int32)
+        vals = rng.integers(0, 100, (64, V)).astype(np.int32)
+        skv.upsert(keys, vals)
+    before = jax.device_get(skv.state)
+    io_before = skv.io_stats()
+    counters = (skv.migrations, skv.migrated_records, skv.rounds,
+                skv.compactions.copy(), skv.bucket_map.copy())
+
+    assert skv.maybe_rebalance() is False
+    assert skv.rebalance(threshold=1e9) == 0
+    assert skv.migrate(skv.bucket_map) == 0
+
+    after = jax.device_get(skv.state)
+    same = jax.tree_util.tree_map(
+        lambda a, b: bool(np.array_equal(a, b)), before, after)
+    assert all(jax.tree_util.tree_leaves(same)), same
+    assert skv.io_stats() == io_before
+    assert (skv.migrations, skv.migrated_records) == counters[:2]
+    assert skv.rounds == counters[2]
+    assert np.array_equal(skv.compactions, counters[3])
+    assert np.array_equal(skv.bucket_map, counters[4])
+
+
+def test_traffic_stats_are_observation_only():
+    """The IoStats clause of the oracle: a ShardedKV with the rebalancer
+    armed (but never triggered) is bit-exact — every state leaf AND
+    IoStats — with one that has no rebalancer, over the same stream.
+    Collecting the stats the rebalancer consumes perturbs nothing."""
+    cfg = tiny_cfg()
+    outs = []
+    for rb in (None, RebalanceConfig(enabled=True, threshold=1e9,
+                                     check_every=1)):
+        skv = ShardedKV(cfg, 4, trigger=0.6, compact_batch=64, donate=False,
+                        rebalance_cfg=rb)
+        rng = np.random.default_rng(11)
+        res = []
+        for _ in range(10):
+            keys = rng.integers(0, 400, 96).astype(np.int32)
+            ops = rng.choice([OP_READ, OP_UPSERT, OP_RMW, OP_DELETE], 96,
+                             p=[.35, .45, .1, .1]).astype(np.int32)
+            vals = rng.integers(0, 100, (96, V)).astype(np.int32)
+            st, rv = skv.apply(keys, ops, vals)
+            res.append((np.asarray(st), np.asarray(rv)))
+        outs.append((res, jax.device_get(skv.state), skv.io_stats()))
+    (res_a, state_a, io_a), (res_b, state_b, io_b) = outs
+    for (sa, va), (sb, vb) in zip(res_a, res_b):
+        assert np.array_equal(sa, sb) and np.array_equal(va, vb)
+    same = jax.tree_util.tree_map(
+        lambda a, b: bool(np.array_equal(a, b)), state_a, state_b)
+    assert all(jax.tree_util.tree_leaves(same)), same
+    assert io_a == io_b
+
+
+def test_untouched_shards_byte_identical_through_migration():
+    """The PR-3 masking invariant extended to migration: shards that are
+    neither source nor destination of any moving bucket pass through
+    `migrate` byte-identical on every state leaf."""
+    cfg = tiny_cfg()
+    rb = RebalanceConfig(enabled=False, migrate_batch=64)
+    skv = ShardedKV(cfg, 4, trigger=2.0, donate=False, rebalance_cfg=rb)
+    rng = np.random.default_rng(7)
+    for _ in range(5):
+        keys = rng.integers(0, 600, 128).astype(np.int32)
+        vals = rng.integers(0, 100, (128, V)).astype(np.int32)
+        skv.upsert(keys, vals)
+    src, dst = 1, 2
+    before = jax.device_get(skv.state)
+    nm = skv.bucket_map.copy()
+    nm[np.flatnonzero(nm == src)[:2]] = dst
+    moved = skv.migrate(nm)
+    assert moved > 0
+    after = jax.device_get(skv.state)
+    untouched = [s for s in range(4) if s not in (src, dst)]
+    diff = jax.tree_util.tree_map(
+        lambda a, b: np.asarray(
+            (np.asarray(a) == np.asarray(b)).reshape(4, -1).all(1)),
+        before, after)
+    for leaf in jax.tree_util.tree_leaves(diff):
+        for s in untouched:
+            assert leaf[s], (s, "untouched shard changed during migration")
+    # and keys now routed to the destination shard still answer
+    moved_keys = keys_on_shard(skv, dst, 600)[:64]
+    skv.read(moved_keys)
+    skv.check_invariants()
+
+
+def test_occupancy_driven_rebalance_fires_and_reduces_imbalance():
+    """End-to-end automatic path: concentrated traffic on one shard's
+    buckets drives the EWMA imbalance over the threshold inside `apply`;
+    the rebalancer migrates buckets away, the measured imbalance drops,
+    and every key still reads back correctly."""
+    cfg = tiny_cfg(hot_capacity=1 << 10, hot_mem=1 << 7)
+    rb = RebalanceConfig(enabled=True, buckets_per_shard=8, threshold=1.3,
+                         check_every=2, decay=0.8, min_traffic=32.0,
+                         migrate_batch=64)
+    skv = ShardedKV(cfg, 4, trigger=2.0, donate=False, rebalance_cfg=rb)
+    rng = np.random.default_rng(5)
+    ref = {}
+    hot = keys_on_shard(skv, 0, 4096)[:64]     # all of shard 0's traffic
+    cold_pool = np.arange(4096, 4096 + 256, dtype=np.int32)
+    B = 64
+    for step in range(14):
+        hot_part = hot[rng.integers(0, len(hot), (3 * B) // 4)]
+        uni_part = cold_pool[rng.integers(0, len(cold_pool), B - len(hot_part))]
+        keys = np.concatenate([hot_part, uni_part]).astype(np.int32)
+        vals = rng.integers(0, 100, (B, V)).astype(np.int32)
+        st, _ = skv.upsert(keys, vals)
+        for k, v in zip(keys, vals):
+            ref[int(k)] = v.copy()
+    assert skv.migrations >= 1, "rebalancer never fired"
+    stats = skv.shard_stats()
+    # hot buckets are now spread: the map diverged from the identity
+    moved = np.flatnonzero(
+        stats.bucket_map != shard_router.default_bucket_map(4, skv.n_buckets))
+    assert moved.size >= 1
+    assert stats.imbalance < 4.0 * 0.999  # strictly below all-on-one-shard
+    ks = np.asarray(sorted(ref), np.int32)
+    ks = np.pad(ks, (0, (-len(ks)) % 64), mode="edge")
+    st, rv = skv.read(ks)
+    st, rv = np.asarray(st), np.asarray(rv)
+    for i, k in enumerate(ks):
+        assert st[i] == ST_OK and np.array_equal(rv[i], ref[int(k)]), int(k)
+    skv.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Planner unit properties (pure numpy — no store)
+# ---------------------------------------------------------------------------
+
+def test_plan_moves_is_deterministic_and_balancing():
+    rng = np.random.default_rng(2)
+    for _ in range(50):
+        S = int(rng.choice([2, 4, 8]))
+        nb = S * int(rng.choice([2, 4, 8]))
+        traffic = rng.random(nb) * rng.choice([0, 1, 10], nb)
+        m0 = shard_router.default_bucket_map(S, nb)
+        p1 = rebalance.plan_moves(traffic, m0, S, threshold=1.2)
+        p2 = rebalance.plan_moves(traffic, m0, S, threshold=1.2)
+        if p1 is None:
+            assert p2 is None
+            continue
+        assert np.array_equal(p1, p2)                      # deterministic
+        before = rebalance.imbalance_of(
+            rebalance.shard_loads(traffic, m0, S))
+        after = rebalance.imbalance_of(
+            rebalance.shard_loads(traffic, p1, S))
+        assert after < before                              # strictly helps
+        # planning from the new map with the same traffic converges: the
+        # second pass never undoes the first into a worse map
+        p3 = rebalance.plan_moves(traffic, p1, S, threshold=1.2)
+        if p3 is not None:
+            assert rebalance.imbalance_of(
+                rebalance.shard_loads(traffic, p3, S)) <= after
+
+
+def test_plan_moves_balanced_returns_none():
+    S, nb = 4, 32
+    m0 = shard_router.default_bucket_map(S, nb)
+    assert rebalance.plan_moves(np.ones(nb), m0, S, threshold=1.25) is None
+    assert rebalance.plan_moves(np.zeros(nb), m0, S, threshold=1.25) is None
+    # min_traffic gate: heavy imbalance but negligible totals
+    t = np.zeros(nb)
+    t[0] = 0.5
+    assert rebalance.plan_moves(t, m0, S, threshold=1.1,
+                                min_traffic=64.0) is None
+
+
+# ---------------------------------------------------------------------------
+# Random op/migration interleavings (seeded core + hypothesis wrapper)
+# ---------------------------------------------------------------------------
+
+def check_interleaving(seed: int, mig_steps, n_keys: int = 200,
+                       n_steps: int = 6, B: int = 32, S: int = 2):
+    """The property: any interleaving of random mixed batches and forced
+    random migrations keeps the ShardedKV bit-exact with the flat replay
+    and the dict oracle."""
+    cfg = tiny_cfg()
+    rb = RebalanceConfig(enabled=False, buckets_per_shard=4, migrate_batch=32)
+    skv, kv = make_pair(cfg, S=S, trigger=0.6, rb=rb)
+    rng = np.random.default_rng(seed)
+    ref = {}
+    for step in range(n_steps):
+        keys = rng.integers(0, n_keys, B).astype(np.int32)
+        ops = rng.choice([OP_READ, OP_UPSERT, OP_RMW, OP_DELETE], B,
+                         p=[.3, .4, .15, .15]).astype(np.int32)
+        vals = rng.integers(0, 50, (B, V)).astype(np.int32)
+        parity_step(skv, kv, ref, keys, ops, vals, (seed, step))
+        if step in mig_steps:
+            nm = rng.integers(0, S, skv.n_buckets).astype(np.int32)
+            skv.migrate(nm)
+            skv.check_invariants()
+    readback_parity(skv, kv, ref, n_keys, tag=("final", seed))
+    skv.check_invariants()
+    kv.check_invariants()
+
+
+def test_interleaving_seeded():
+    """Seeded instances of the interleaving property (always runs, also
+    where hypothesis is unavailable): migrations at the start, back to
+    back, at the end, and none at all."""
+    check_interleaving(101, {0, 3})
+    check_interleaving(202, {1, 2})
+    check_interleaving(303, {5})
+    check_interleaving(404, set())
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=6, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.integers(0, 2**31 - 1),
+           st.sets(st.integers(0, 5), max_size=3))
+    def test_interleaving_property(seed, mig_steps):
+        check_interleaving(seed, mig_steps)
+else:
+    @pytest.mark.skip(
+        reason="hypothesis not installed (pip install '.[test]')")
+    def test_interleaving_property():
+        pass

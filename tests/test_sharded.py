@@ -119,6 +119,73 @@ try:
 except ImportError:
     _HAVE_HYPOTHESIS = False
 
+def check_deferral_rounds(keys, ops, S, W):
+    """The deferral contract, simulated at the router level: re-routing
+    deferred lanes round after round (exactly what ShardedKV.apply does)
+    places every active lane exactly once, completes within B rounds, and
+    the per-shard arrival order across rounds — (round, slab position) —
+    restores the original batch order, so per-key op order survives
+    multi-round routing."""
+    B = len(keys)
+    keys = jnp.asarray(keys, jnp.int32)
+    vals = jnp.zeros((B, V), jnp.int32)
+    ops = np.asarray(ops, np.int32)
+    active = ops != OP_NOOP
+    placed_round = np.full(B, -1)
+    placed_pos = np.full(B, -1)
+    shard = np.full(B, -1)
+    cur_ops = ops.copy()
+    rounds = 0
+    for rnd in range(B + 1):
+        _, _, _, rt = shard_router.route(keys, jnp.asarray(cur_ops), vals,
+                                         S, W)
+        placed = np.asarray(rt.placed)
+        deferred = np.asarray(rt.deferred)
+        rounds += 1
+        # a lane never places twice, and placed/deferred partition active
+        assert not np.any(placed & (placed_round >= 0))
+        assert np.array_equal(cur_ops != OP_NOOP, placed | deferred)
+        placed_round[placed] = rnd
+        placed_pos[placed] = np.asarray(rt.dest)[placed] % W
+        shard[placed] = np.asarray(rt.shard)[placed]
+        # lane-order restoration each round: unroute returns exactly the
+        # placed lanes' slab cells, ST_NONE elsewhere
+        tags = jnp.arange(S * W, dtype=jnp.int32).reshape(S, W)
+        ost, _ = shard_router.unroute(rt, tags,
+                                      jnp.stack([tags, tags], -1))
+        ost = np.asarray(ost)
+        assert np.array_equal(ost[placed], np.asarray(rt.dest)[placed])
+        assert np.all(ost[~placed] == ST_NONE)
+        if not deferred.any():
+            break
+        cur_ops = np.where(deferred, ops, OP_NOOP).astype(np.int32)
+    # multi-round completion: every active lane placed, inactive never
+    assert (placed_round[active] >= 0).all()
+    assert (placed_round[~active] == -1).all()
+    # over-capacity batches really took > 1 round; and never more than
+    # ceil(max per-shard active count / W)
+    per_shard = np.bincount(shard[active], minlength=S) if active.any() \
+        else np.zeros(S, np.int64)
+    want_rounds = int(max(1, -(-per_shard.max() // W))) if active.any() else 1
+    assert rounds == want_rounds
+    # per-shard (round, slab pos) order == original batch order
+    for s in range(S):
+        lanes = np.flatnonzero(active & (shard == s))
+        order = lanes[np.lexsort((placed_pos[lanes], placed_round[lanes]))]
+        assert np.array_equal(order, np.sort(order))
+
+
+def test_router_deferral_seeded():
+    """Seeded over-capacity batches (W far below the per-shard demand) —
+    always runs, also where hypothesis is unavailable."""
+    rng = np.random.default_rng(31)
+    for S, W in [(1, 2), (2, 4), (4, 2), (8, 4)]:
+        keys = rng.integers(-50, 120, 64).astype(np.int32)
+        ops = rng.choice([OP_NOOP, OP_READ, OP_UPSERT, OP_RMW, OP_DELETE],
+                         64).astype(np.int32)
+        check_deferral_rounds(keys, ops, S, W)
+
+
 if _HAVE_HYPOTHESIS:
     _OPS = st.sampled_from([OP_NOOP, OP_READ, OP_UPSERT, OP_RMW, OP_DELETE])
 
@@ -135,10 +202,29 @@ if _HAVE_HYPOTHESIS:
         vals = np.stack([np.asarray(keys, np.int32)] * V, 1)
         check_route_roundtrip(np.asarray(keys, np.int32),
                               np.asarray(ops, np.int32), vals, S, W)
+
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.lists(st.integers(-100, 1000), min_size=48, max_size=48),
+           st.lists(_OPS, min_size=48, max_size=48),
+           st.sampled_from([1, 2, 4]),
+           st.sampled_from([1, 2, 4, 8]))
+    def test_router_deferral_property(keys, ops, S, W):
+        """Random over-capacity batches: multi-round completion in exactly
+        ceil(max shard demand / W) rounds, no double placement, and
+        per-shard lane order restored across rounds (previously only the
+        seeded oracle covered the deferral path)."""
+        check_deferral_rounds(np.asarray(keys, np.int32),
+                              np.asarray(ops, np.int32), S, W)
 else:
     @pytest.mark.skip(
         reason="hypothesis not installed (pip install '.[test]')")
     def test_router_property():
+        pass
+
+    @pytest.mark.skip(
+        reason="hypothesis not installed (pip install '.[test]')")
+    def test_router_deferral_property():
         pass
 
 
@@ -315,6 +401,50 @@ def test_multi_round_deferral_oracle():
         assert st[i] == ST_OK
         assert np.array_equal(rv[i], ref[int(k)])
     skv.check_invariants()
+
+
+def test_sharded_cross_engine_parity():
+    """The engine knob x sharding interaction (untested in the PR-3 suite,
+    which pins one engine): the same op stream — including a masked
+    compaction and a live bucket migration — produces bit-exact statuses,
+    values, state leaves and IoStats under engine=jnp and engine=fused_ref
+    (the backend `fused` resolves to off-TPU)."""
+    import dataclasses as _dc
+
+    from repro.core import RebalanceConfig
+
+    outs = {}
+    for engine in ("jnp", "fused_ref"):
+        cfg = _dc.replace(tiny_cfg(hot_capacity=1 << 8, hot_mem=1 << 5,
+                                   cold_capacity=1 << 11), engine=engine)
+        kv = ShardedKV(cfg, 4, trigger=0.5, compact_batch=64, donate=False,
+                       rebalance_cfg=RebalanceConfig(enabled=False,
+                                                     migrate_batch=64))
+        rng = np.random.default_rng(29)
+        res = []
+        for step in range(10):
+            keys = rng.integers(0, 400, 96).astype(np.int32)
+            ops = rng.choice([OP_READ, OP_UPSERT, OP_RMW, OP_DELETE], 96,
+                             p=[.35, .45, .1, .1]).astype(np.int32)
+            vals = rng.integers(0, 100, (96, V)).astype(np.int32)
+            st, rv = kv.apply(keys, ops, vals)
+            res.append((np.asarray(st), np.asarray(rv)))
+            if step == 5:           # migration under each engine backend
+                nm = kv.bucket_map.copy()
+                nm[np.flatnonzero(nm == 0)[:3]] = 2
+                assert kv.migrate(nm) > 0
+        kv.check_invariants()
+        assert kv.compactions.sum() > 0
+        outs[engine] = (res, [np.asarray(x) for x in
+                              jax.tree_util.tree_leaves(kv.state)],
+                        kv.io_stats(), kv.migrated_records)
+    (res_a, leaves_a, io_a, mig_a) = outs["jnp"]
+    (res_b, leaves_b, io_b, mig_b) = outs["fused_ref"]
+    for (sa, va), (sb, vb) in zip(res_a, res_b):
+        assert np.array_equal(sa, sb) and np.array_equal(va, vb)
+    for a, b in zip(leaves_a, leaves_b):
+        assert np.array_equal(a, b)
+    assert io_a == io_b and mig_a == mig_b
 
 
 # ---------------------------------------------------------------------------
