@@ -1,0 +1,192 @@
+"""Replication benchmark: read-hot YCSB-B across replica counts R ∈ {1,2,4}.
+
+The adversarial case for a sharded store under read-heavy skew is a hot
+set clustered in one shard's buckets (the bench_rebalance setup): with
+per-shard slab width `lanes`, that shard's read demand forces deferral
+rounds — real serialized dispatches.  Replication attacks exactly this:
+fan-out reads split the hot shard's demand across R convergent copies, so
+the round count per batch drops by up to R while writes (5% of YCSB-B)
+fan in to keep every replica bit-identical.
+
+Strong scaling on the read path: every R serves the IDENTICAL op stream
+(same batches, same seed) — R=2 must serve it no slower than R=1.  Each
+run reports wall-clock kops on the read-hot phase, routed rounds/batch,
+per-replica read-load EWMA, and modeled I/O; after the run the replicas
+are checked byte-identical (the fan-in invariant) and a drop→resync cycle
+is exercised with a read-back assert.
+
+    PYTHONPATH=src python benchmarks/bench_replication.py [--tiny] [--out f.json]
+
+`--tiny` is the CI smoke mode (`BENCH_replication.json` artifact):
+minimal sizes plus the gate — R=2 read throughput >= R=1 on the read-hot
+phase, and bit-exact cross-replica state at the end of every run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import jax
+
+from benchmarks.bench_mixed import zipf_keys
+from benchmarks.bench_rebalance import shard_keyset
+from benchmarks.harness import make_replicated_kv
+from repro.core import OP_UPSERT, ST_OK
+from repro.core.replication import ReplicatedKV, replicas_byte_identical
+
+
+def build(n_keys: int, S: int, R: int, W: int, vw: int, engine: str,
+          selector: str) -> ReplicatedKV:
+    """The bench_shards store recipe with a replica axis on top (same
+    per-shard tuning for every R, so throughput differences are the
+    replica axis and nothing else)."""
+    kv = make_replicated_kv(n_keys, S, n_replicas=R, read_selector=selector,
+                            mem_frac=0.25, value_width=vw, engine=engine,
+                            lanes=W, trigger=0.8,
+                            compact_batch=min(W, 1024), index_frac=0.7)
+    keys = np.arange(n_keys, dtype=np.int32)
+    vals = np.stack([keys] * vw, 1).astype(np.int32)
+    B = 2 * S * W
+    for off in range(0, n_keys, B):
+        ks = keys[off:off + B]
+        if len(ks) < B:
+            ks = np.pad(ks, (0, B - len(ks)), mode="edge")
+            vs = np.pad(vals[off:off + B], ((0, B - len(vals[off:off + B])),
+                                            (0, 0)), mode="edge")
+        else:
+            vs = vals[off:off + B]
+        kv.upsert(ks, vs)
+    kv.check_invariants()
+    return kv
+
+
+def read_hot_batches(rng, n_keys: int, hot_keys: np.ndarray, hot_frac: float,
+                     theta: float, B: int, n_batches: int) -> np.ndarray:
+    """Read-lane key batches: `hot_frac` Zipf-drawn from the (one-shard)
+    hot set, the rest uniform — the YCSB-B read side."""
+    n_hot = int(B * hot_frac)
+    hot = hot_keys[zipf_keys(rng, len(hot_keys), theta, (n_batches, n_hot))]
+    uni = rng.integers(0, n_keys, (n_batches, B - n_hot))
+    keys = np.concatenate([hot, uni], axis=1).astype(np.int32)
+    perm = rng.permutation(B)
+    return keys[:, perm]
+
+
+def run_config(kv: ReplicatedKV, read_batches: np.ndarray,
+               write_batches, repeats: int) -> dict:
+    """Interleave the 5% write fan-in (replica convergence is part of the
+    serving loop), then time the read-hot fan-out phase best-of-repeats."""
+    wk, wv = write_batches
+    for j in range(wk.shape[0]):
+        kv.apply(wk[j], np.full(wk.shape[1], OP_UPSERT, np.int32), wv[j])
+    n_batches, B = read_batches.shape
+    st, _ = kv.read(read_batches[0])                    # compile
+    assert (np.asarray(st) == ST_OK).all()
+    rounds0 = kv.rounds
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for j in range(n_batches):
+            kv.read(read_batches[j])
+        jax.block_until_ready(kv.state.hot.tail)
+        best = min(best, time.perf_counter() - t0)
+    n_ops = n_batches * B
+    return dict(
+        read_ops_per_s=n_ops / best,
+        seconds=best,
+        n_ops=n_ops,
+        rounds_per_batch=(kv.rounds - rounds0) / (n_batches * repeats),
+        replica_load=np.round(kv.replica_load, 1).tolist(),
+        io=kv.io_stats(),
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke mode: minimal sizes + R2>=R1 gate")
+    ap.add_argument("--out", default=None, help="write results JSON here")
+    ap.add_argument("--engine", default="fused",
+                    choices=("jnp", "fused", "fused_ref", "fused_pallas"))
+    ap.add_argument("--selector", default="round_robin",
+                    choices=("round_robin", "least_loaded"))
+    ap.add_argument("--repeats", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    S = 4
+    if args.tiny:
+        n_keys, W, B, vw = 4096, 64, 1024, 2
+        n_batches, n_wbatches, repeats = 4, 2, 8
+        theta, hot_frac = 0.99, 0.9
+        replica_counts = [1, 2, 4]
+    else:
+        n_keys, W, B, vw = 1 << 15, 512, 4096, 8
+        n_batches, n_wbatches, repeats = 8, 4, 4
+        theta, hot_frac = 0.99, 0.9
+        replica_counts = [1, 2, 4]
+    if args.repeats:
+        repeats = args.repeats
+
+    results = dict(backend=jax.default_backend(),
+                   n_devices=len(jax.devices()), n_keys=n_keys, n_shards=S,
+                   lanes=W, batch=B, tiny=bool(args.tiny),
+                   engine=args.engine, selector=args.selector,
+                   hot_frac=hot_frac, theta=theta, replicas=[])
+    hot_keys = shard_keyset(n_keys, 0, S)   # read demand piles on shard 0
+    for R in replica_counts:
+        kv = build(n_keys, S, R, W, vw, args.engine, args.selector)
+        rng = np.random.default_rng(29)     # identical stream for every R
+        rb = read_hot_batches(rng, n_keys, hot_keys, hot_frac, theta, B,
+                              n_batches)
+        wk = rng.integers(0, n_keys, (n_wbatches, B)).astype(np.int32)
+        wv = rng.integers(0, 100, (n_wbatches, B, vw)).astype(np.int32)
+        r = run_config(kv, rb, (wk, wv), repeats)
+        r["n_replicas"] = R
+        r["dispatch"] = kv.dispatch
+        r["replicas_identical"] = replicas_byte_identical(kv)
+        # drop -> resync cycle with a spot read-back (liveness of the
+        # lifecycle path is part of the benchmark's serving story)
+        if R > 1:
+            kv.drop_replica(R - 1)
+            kv.apply(wk[0], np.full(B, OP_UPSERT, np.int32), wv[0])
+            r["resynced_records"] = kv.resync(R - 1)
+            st, rv = kv.read(rb[0][:256], replica=R - 1)
+            assert (np.asarray(st) == ST_OK).all(), "post-resync read failed"
+        kv.check_invariants()
+        results["replicas"].append(r)
+        print(f"R={R} B={B} W={W} "
+              f"{r['read_ops_per_s'] / 1e3:9.1f} read kops/s "
+              f"rounds/batch={r['rounds_per_batch']:.2f} "
+              f"identical={r['replicas_identical']} "
+              f"load={r['replica_load']}")
+
+    per = {r["n_replicas"]: r for r in results["replicas"]}
+    if 1 in per and 2 in per:
+        results["r2_over_r1"] = (per[2]["read_ops_per_s"]
+                                 / per[1]["read_ops_per_s"])
+        print(f"    R=2/R=1 read throughput: {results['r2_over_r1']:.2f}x")
+    if args.tiny:
+        # the smoke gate: fan-out must not lose read throughput, and
+        # fan-in must have kept every replica bit-identical
+        assert all(r["replicas_identical"] for r in results["replicas"]), \
+            "replicas diverged"
+        assert results["r2_over_r1"] >= 1.0, (
+            f"R=2 slower than R=1 on the read-hot phase: "
+            f"{results['r2_over_r1']:.2f}x")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.out}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core import KV, F2Config, OP_UPSERT
 from repro.core.rebalance import RebalanceConfig
+from repro.core.replication import ReplicatedKV
 from repro.core.sharded import ShardedKV
 from .ycsb import Zipf, make_ops
 
@@ -116,6 +117,31 @@ def make_faster_kv(n_keys: int, mem_frac: float = 0.10,
     return kv
 
 
+def _shard_cfg(n_keys: int, n_shards: int, mem_frac: float,
+               value_width: int, engine: str, rc_frac: float,
+               index_frac: float, lanes, mode: str) -> F2Config:
+    """One per-shard config recipe for every multi-store facade (sharded
+    AND replicated bench stores build through it, so they stay tuned
+    identically): size each shard for its n_keys/S key slice, then keep
+    hot-ring headroom well above `lanes` — a shard must absorb one full
+    sub-batch of appends between scheduler passes."""
+    shard_keys = max(n_keys // n_shards, 256)
+    if mode == "faster":
+        # FASTER's single log needs 2x-dataset ring headroom (compaction
+        # appends live records before truncating) — use its own budgeting
+        cfg = make_faster_config(shard_keys, mem_frac, value_width,
+                                 engine=engine)
+    else:
+        cfg = make_f2_config(shard_keys, mem_frac, value_width,
+                             engine=engine, rc_frac=rc_frac,
+                             index_frac=index_frac)
+    if lanes:
+        min_cap = _p2(8 * lanes)
+        if cfg.hot_capacity < min_cap:
+            cfg = dataclasses.replace(cfg, hot_capacity=min_cap)
+    return cfg
+
+
 def make_sharded_kv(n_keys: int, n_shards: int, mem_frac: float = 0.10,
                     value_width: int = 25, engine: str = "fused",
                     lanes: int = None, dispatch: str = "auto",
@@ -131,21 +157,8 @@ def make_sharded_kv(n_keys: int, n_shards: int, mem_frac: float = 0.10,
     are always collected and surfaced via `kv.shard_stats()` — the one
     struct both the rebalancer and the benchmarks consume."""
     shard_keys = max(n_keys // n_shards, 256)
-    if mode == "faster":
-        # FASTER's single log needs 2x-dataset ring headroom (compaction
-        # appends live records before truncating) — use its own budgeting
-        cfg = make_faster_config(shard_keys, mem_frac, value_width,
-                                 engine=engine)
-    else:
-        cfg = make_f2_config(shard_keys, mem_frac, value_width,
-                             engine=engine, rc_frac=rc_frac,
-                             index_frac=index_frac)
-    if lanes:
-        # a shard must be able to absorb one full sub-batch of appends
-        # between scheduler passes: keep ring headroom well above `lanes`
-        min_cap = _p2(8 * lanes)
-        if cfg.hot_capacity < min_cap:
-            cfg = dataclasses.replace(cfg, hot_capacity=min_cap)
+    cfg = _shard_cfg(n_keys, n_shards, mem_frac, value_width, engine,
+                     rc_frac, index_frac, lanes, mode)
     if mode == "faster":
         # same effective-disk-budget trigger as make_faster_kv (computed
         # from the FINAL ring capacity) so sharded-FASTER numbers stay
@@ -157,6 +170,24 @@ def make_sharded_kv(n_keys: int, n_shards: int, mem_frac: float = 0.10,
         kw.setdefault("compact_frac", 0.15)
     return ShardedKV(cfg, n_shards, mode=mode, lanes=lanes,
                      dispatch=dispatch, rebalance_cfg=rebalance_cfg, **kw)
+
+
+def make_replicated_kv(n_keys: int, n_shards: int, n_replicas: int = 2,
+                       read_selector: str = "round_robin",
+                       mem_frac: float = 0.10, value_width: int = 25,
+                       engine: str = "fused", lanes: int = None,
+                       dispatch: str = "auto", rc_frac: float = 0.17,
+                       index_frac: float = 0.17, **kw) -> ReplicatedKV:
+    """R replica copies of the `make_sharded_kv` store (each replica holds
+    a full copy of every shard — the paper's read-cache idea at cluster
+    scale).  Builds through the same `_shard_cfg` recipe, so replicated
+    and sharded bench stores stay tuned identically; `read_selector`
+    picks the fan-out policy."""
+    cfg = _shard_cfg(n_keys, n_shards, mem_frac, value_width, engine,
+                     rc_frac, index_frac, lanes, mode="f2")
+    return ReplicatedKV(cfg, n_shards, n_replicas=n_replicas,
+                        read_selector=read_selector, lanes=lanes,
+                        dispatch=dispatch, **kw)
 
 
 def load_store(kv: KV, n_keys: int, batch: int = 4096, seed: int = 1):

@@ -1,4 +1,4 @@
-"""Two demos in one:
+"""Three demos in one:
 
 1. The paper's Fig 2 in miniature: FASTER's single-log death spiral vs
    F2's tiered logs, on a skewed RMW workload under a tight disk budget.
@@ -6,6 +6,9 @@
    through `serve_step.make_kv_service` — load, mixed ops, a
    pressure-triggered masked compaction on one deliberately-hot shard,
    and a post-compaction read-back check.
+3. The replica axis end-to-end: an R=2 `ReplicatedKV` — fan-out reads
+   under a hot key set (deferral rounds drop vs R=1), a drop→resync
+   cycle, and a read-back assert pinned to the resynced replica.
 
     PYTHONPATH=src python examples/kv_store_demo.py
 """
@@ -77,6 +80,59 @@ def sharded_demo():
     print("post-compaction reads OK on every shard; io:", kv.io_stats())
 
 
+def replicated_demo():
+    import jax.numpy as jnp
+
+    from repro.core import F2Config, ST_OK
+    from repro.core import shard_router
+    from repro.core.replication import replicas_byte_identical
+    from repro.serve.serve_step import kv_service_read, make_kv_service
+
+    cfg = F2Config(hot_index_size=1 << 10, hot_capacity=1 << 12,
+                   hot_mem=1 << 8, cold_capacity=1 << 14, cold_mem=1 << 7,
+                   n_chunks=1 << 8, chunklog_capacity=1 << 11,
+                   chunklog_mem=1 << 6, rc_capacity=1 << 8, value_width=4)
+    S, R, W = 4, 2, 64
+    kv = make_kv_service(cfg, n_shards=S, n_replicas=R, lanes=W,
+                         trigger=0.8, compact_batch=256, donate=False)
+    print(f"\n=== replicated store: R={R}, S={S}, lanes={W}, "
+          f"dispatch={kv.dispatch} ===")
+
+    # load fans in: every replica applies the identical routed slabs
+    keys = np.arange(2048, dtype=np.int32)
+    vals = np.stack([keys, keys * 2, keys * 3, keys * 4], 1).astype(np.int32)
+    for off in range(0, 2048, 512):
+        kv.upsert(keys[off:off + 512], vals[off:off + 512])
+    assert replicas_byte_identical(kv)
+    print("loaded 2048 keys; replicas byte-identical:", True)
+
+    # read fan-out under a hot key set clustered on ONE shard: each lane
+    # is served by exactly one replica, so the hot shard's read demand
+    # splits R ways and the deferral round count drops
+    sid = np.asarray(shard_router.shard_of(jnp.asarray(keys), S))
+    hot = keys[sid == int(sid[0])]
+    batch = np.tile(hot, 4)[:512].astype(np.int32)
+    r0 = kv.rounds
+    status, out = kv_service_read(kv, batch)
+    assert np.all(np.asarray(status) == ST_OK)
+    rounds_r2 = kv.rounds - r0
+    print(f"hot-shard read batch of {len(batch)}: {rounds_r2} routed "
+          f"rounds at R=2 (R=1 would need {-(-len(batch) // W)}); "
+          f"per-replica load EWMA: {np.round(kv.replica_load, 1).tolist()}")
+
+    # drop replica 1, keep serving (its state freezes), then resync it
+    # live from the healthy replica and read back THROUGH it
+    kv.drop_replica(1)
+    kv.upsert(keys[:512], vals[:512] + 7)
+    n = kv.resync(1)
+    status, out = kv.read(keys[:512], replica=1)
+    assert np.all(np.asarray(status) == ST_OK)
+    assert np.array_equal(np.asarray(out), vals[:512] + 7)
+    kv.check_invariants()
+    print(f"drop -> write-through -> resync replayed {n} records; "
+          f"read-back pinned to the resynced replica OK")
+
+
 def main():
     res = run(n_keys=1 << 14, windows=10, win_ops=1 << 13, batch=1024)
     print(report(res))
@@ -85,6 +141,7 @@ def main():
           "set from memory, over and over); F2's hot-log tail is never "
           "touched by compaction, so it stays flat.")
     sharded_demo()
+    replicated_demo()
 
 
 if __name__ == "__main__":

@@ -2,8 +2,9 @@
 
 Public API:
     F2Config, KV (facade), ShardedKV (S hash-routed shards behind one
-    deterministic batch router), plus the functional layers for power
-    users:
+    deterministic batch router), ReplicatedKV (R replica copies of the
+    sharded store: fan-out reads, fan-in writes, live replica resync),
+    plus the functional layers for power users:
     store.{create,apply,read_batch,write_batch,read_begin,read_finish},
     compaction.{hot_cold_step,cold_cold_step,conditional_insert_hot,...},
     shard_router.{shard_of,bucket_of,route,unroute}, sharded.create,
@@ -11,20 +12,21 @@ Public API:
 """
 from .api import KV
 from .rebalance import RebalanceConfig, ShardStats
+from .replication import ReplicatedKV
 from .sharded import ShardedKV
 from .types import (BLOCK_BYTES, OP_DELETE, OP_NOOP, OP_READ, OP_RMW,
                     OP_UPSERT, ST_CREATED, ST_NONE, ST_NOT_FOUND, ST_OK,
                     F2Config, IoStats)
 from . import (chain, cold_index, compaction, groups, hybrid_log,
-               probe_engine, read_cache, rebalance, shard_router, sharded,
-               store, write_engine)
+               probe_engine, read_cache, rebalance, replication,
+               shard_router, sharded, store, write_engine)
 
 __all__ = [
-    "KV", "ShardedKV", "F2Config", "IoStats", "BLOCK_BYTES",
+    "KV", "ShardedKV", "ReplicatedKV", "F2Config", "IoStats", "BLOCK_BYTES",
     "RebalanceConfig", "ShardStats",
     "OP_NOOP", "OP_READ", "OP_UPSERT", "OP_RMW", "OP_DELETE",
     "ST_NONE", "ST_OK", "ST_NOT_FOUND", "ST_CREATED",
     "chain", "cold_index", "compaction", "groups", "hybrid_log",
-    "probe_engine", "read_cache", "rebalance", "shard_router", "sharded",
-    "store", "write_engine",
+    "probe_engine", "read_cache", "rebalance", "replication",
+    "shard_router", "sharded", "store", "write_engine",
 ]

@@ -72,6 +72,9 @@ class RebalanceConfig:
     min_traffic: float = 64.0      # don't plan moves on noise-level totals
     max_moves: int = 0             # bucket moves per pass (0 = n_buckets)
     migrate_batch: int = 256       # drain frontier / replay batch width
+    fill_weight: float = 0.0       # blend of log occupancy into the load
+    #                                signal (0 = traffic only, bit-exact
+    #                                with the pre-fill-aware planner)
 
     def __post_init__(self):
         b = self.buckets_per_shard
@@ -80,6 +83,7 @@ class RebalanceConfig:
         assert self.threshold >= 1.0
         assert 0.0 <= self.decay < 1.0
         assert self.check_every >= 1 and self.migrate_batch >= 1
+        assert 0.0 <= self.fill_weight <= 1.0
 
 
 @dataclasses.dataclass
@@ -127,6 +131,41 @@ def imbalance_of(loads: np.ndarray) -> float:
     return float(np.max(loads)) / mean if mean > 0 else 1.0
 
 
+def blend_fill_signal(
+    traffic: np.ndarray,      # float [n_buckets] per-bucket traffic EWMA
+    bucket_map: np.ndarray,   # int32 [n_buckets] current indirection
+    fill: np.ndarray,         # float [S] per-shard log occupancy signal
+    weight: float,            # 0..1 blend (0 returns `traffic` unchanged)
+) -> np.ndarray:
+    """Fold per-shard log occupancy into the per-bucket load signal.
+
+    The fill signal (live-region record counts, from `ShardStats`) is
+    rescaled so it sums to the traffic total, distributed over each
+    shard's buckets proportionally to their traffic (uniformly when the
+    shard saw none), and blended:  t' = (1-w)*t + w*fill_implied.  Both
+    components sum to sum(t), so the planner's `min_traffic` gate is
+    unaffected.  weight=0 returns the traffic array unchanged —
+    byte-identical plans with the traffic-only planner."""
+    traffic = np.asarray(traffic, np.float64)
+    if weight <= 0.0:
+        return traffic
+    bucket_map = np.asarray(bucket_map, np.int64)
+    fill = np.asarray(fill, np.float64)
+    S = fill.shape[0]
+    total = traffic.sum()
+    if total <= 0 or fill.sum() <= 0:
+        return traffic
+    load = shard_loads(traffic, bucket_map, S)
+    n_of = np.bincount(bucket_map, minlength=S)            # buckets per shard
+    # per-bucket share of its shard's fill: traffic-proportional, or
+    # uniform across the shard's buckets when the shard saw no traffic
+    share = np.where(load[bucket_map] > 0,
+                     traffic / np.maximum(load[bucket_map], 1e-300),
+                     1.0 / np.maximum(n_of[bucket_map], 1))
+    fill_scaled = fill / fill.sum() * total                # [S], sums to total
+    return (1.0 - weight) * traffic + weight * fill_scaled[bucket_map] * share
+
+
 def plan_moves(
     traffic: np.ndarray,      # float [n_buckets] per-bucket traffic EWMA
     bucket_map: np.ndarray,   # int32 [n_buckets] current indirection
@@ -134,6 +173,8 @@ def plan_moves(
     threshold: float = 1.25,
     max_moves: int = 0,
     min_traffic: float = 0.0,
+    fill: Optional[np.ndarray] = None,   # [S] occupancy (fill-aware planning)
+    fill_weight: float = 0.0,
 ) -> Optional[np.ndarray]:
     """Deterministic greedy resharding plan, or None when balanced.
 
@@ -141,9 +182,17 @@ def plan_moves(
     heaviest bucket that still helps (bucket load strictly below the
     src-dst gap, so the pair max strictly decreases) to the least-loaded
     shard.  Ties break on the lowest bucket index — the plan is a pure
-    function of (traffic, map), so replays are bit-exact."""
+    function of (traffic, map), so replays are bit-exact.
+
+    With `fill_weight > 0` and a per-shard `fill` signal, the load is the
+    `blend_fill_signal` mix of traffic and log occupancy — so a shard can
+    shed buckets for being *full*, not just for being *hot*.  The default
+    weight 0 never touches the blend path: plans are byte-identical to
+    the traffic-only planner."""
     traffic = np.asarray(traffic, np.float64)
     bucket_map = np.asarray(bucket_map, np.int32)
+    if fill is not None and fill_weight > 0.0:
+        traffic = blend_fill_signal(traffic, bucket_map, fill, fill_weight)
     if traffic.sum() < max(min_traffic, 1e-12):
         return None
     load = shard_loads(traffic, bucket_map, n_shards)

@@ -146,6 +146,46 @@ def route(
     return skeys, sops, svals, rt
 
 
+REPLICA_POLICIES = ("round_robin", "least_loaded")
+
+
+def assign_replicas(
+    n_lanes: int,
+    alive: np.ndarray,          # bool [R] serving replicas
+    counter: int = 0,           # per-batch rotation (read-batch counter)
+    policy: str = "round_robin",
+    loads: Optional[np.ndarray] = None,   # float [R] replica load EWMA
+) -> np.ndarray:
+    """Deterministic per-lane replica assignment for fan-out reads: every
+    lane goes to exactly one *alive* replica.
+
+    `round_robin` stripes lanes across the alive replicas (rotated by the
+    batch counter so remainders don't always land on the same replica) —
+    consecutive lanes of one hot key therefore spread across replicas,
+    which is what divides a hot shard's read demand by R.  `least_loaded`
+    is weighted round-robin on the inverse of the per-replica load EWMA:
+    lane quotas by largest remainder, interleaved by virtual finish time.
+    Pure numpy, pure function of its inputs — replays are bit-exact."""
+    assert policy in REPLICA_POLICIES, policy
+    alive_ids = np.flatnonzero(np.asarray(alive, bool))
+    assert alive_ids.size >= 1, "no alive replica to serve reads"
+    n = alive_ids.size
+    lane = np.arange(n_lanes)
+    if policy == "round_robin" or loads is None or n == 1:
+        return alive_ids[(lane + counter) % n].astype(np.int32)
+    w = 1.0 / (np.maximum(np.asarray(loads, np.float64)[alive_ids], 0) + 1.0)
+    share = w / w.sum()
+    quota = np.floor(share * n_lanes).astype(np.int64)
+    frac = share * n_lanes - quota
+    order = np.argsort(-frac, kind="stable")       # ties -> lowest id first
+    quota[order[:n_lanes - int(quota.sum())]] += 1
+    reps = np.repeat(alive_ids, quota)
+    # virtual finish time interleave: k-th of a replica's q lanes at (k+1)/q
+    vt = np.concatenate([(np.arange(q) + 1) / q for q in quota if q > 0]
+                        ) if n_lanes else np.zeros(0)
+    return reps[np.argsort(vt, kind="stable")].astype(np.int32)
+
+
 def unroute(rt: Route, sstatus: jax.Array, svals: jax.Array
             ) -> Tuple[jax.Array, jax.Array]:
     """Inverse gather: per-shard slab results back to original lane order.

@@ -124,6 +124,13 @@ def _masked_chunk_gc(cfg, state, do):
     return _select(do, state._replace(cold_idx=ci, stats=stats), state)
 
 
+def bucket_counts(rt: shard_router.Route, n_buckets: int) -> jax.Array:
+    """Per-bucket placed-lane counts: the device-side half of the
+    rebalancer's traffic stats (shared by the write + read steps)."""
+    bidx = jnp.where(rt.placed, rt.bucket, jnp.int32(n_buckets))
+    return jnp.zeros((n_buckets,), jnp.int32).at[bidx].add(1, mode="drop")
+
+
 def resolve_mesh(dispatch: str, n_shards: int) -> Optional[Mesh]:
     """None -> plain vmap; a 1-D Mesh -> shard_map over the shard axis."""
     assert dispatch in DISPATCHES, f"unknown dispatch {dispatch!r}"
@@ -169,11 +176,11 @@ class ShardedKV:
         self.compact_batch = compact_batch
         self.faster_compaction = faster_compaction
         self.lanes = lanes
-        self.mesh = resolve_mesh(dispatch, n_shards)
+        self.mesh = self._resolve_mesh(dispatch)
         self.dispatch = "vmap" if self.mesh is None else "shard_map"
-        self.state = create(cfg, n_shards)
-        self.compactions = np.zeros(n_shards, np.int64)
-        self.temp_table_peak_bytes = np.zeros(n_shards, np.int64)
+        self.state = self._create_state()
+        self.compactions = np.zeros(self._lead_shape, np.int64)
+        self.temp_table_peak_bytes = np.zeros(self._lead_shape, np.int64)
         self.frontier_bytes = compact_batch * cfg.record_bytes
         self.rounds = 0                 # routed rounds executed (telemetry)
         self.last_occupancy = np.zeros(n_shards, np.int64)  # last round's
@@ -203,44 +210,7 @@ class ShardedKV:
 
         dn = dict(donate_argnums=0) if donate else {}
         admit = (mode == "f2") and cfg.rc_capacity > 1
-        apply_lifted = self._lift(
-            functools.partial(store.apply, cfg, admit_rc=admit), n_in=4)
-
-        def bucket_counts(rt):
-            """Per-bucket placed-lane counts: the device-side half of the
-            rebalancer's traffic stats (shared by the write + read steps)."""
-            bidx = jnp.where(rt.placed, rt.bucket, jnp.int32(nb))
-            return jnp.zeros((nb,), jnp.int32).at[bidx].add(1, mode="drop")
-
-        def routed_step(state, keys, ops, vals, bmap):
-            W = self.lanes or keys.shape[0]
-            skeys, sops, svals, rt = shard_router.route(
-                keys, ops, vals, self.S, W, bucket_map=bmap)
-            state, sstatus, srvals = apply_lifted(state, skeys, sops, svals)
-            status, rvals = shard_router.unroute(rt, sstatus, srvals)
-            return (state, status, rvals, rt.placed, rt.deferred,
-                    rt.occupancy, bucket_counts(rt))
-
-        self._step = jax.jit(routed_step, **dn)
-
-        # dedicated read path (like KV._read): no write engine, and the
-        # caller does not run the compaction scheduler afterwards
-        read_lifted = self._lift(
-            functools.partial(store.read_batch, cfg, admit_rc=admit),
-            n_in=3)
-
-        def routed_read(state, keys, ops, bmap):
-            W = self.lanes or keys.shape[0]
-            vals = jnp.zeros((keys.shape[0], cfg.value_width), jnp.int32)
-            skeys, sops, _, rt = shard_router.route(
-                keys, ops, vals, self.S, W, bucket_map=bmap)
-            state, sstatus, srvals = read_lifted(state, skeys,
-                                                 sops == OP_READ)
-            status, rvals = shard_router.unroute(rt, sstatus, srvals)
-            return (state, status, rvals, rt.placed, rt.deferred,
-                    rt.occupancy, bucket_counts(rt))
-
-        self._read_step = jax.jit(routed_read, **dn)
+        self._build_router_steps(dn, admit)
         self._drain_hot = jax.jit(self._lift(functools.partial(
             rebalance.drain_hot_step, cfg, mig_batch, nb), n_in=5), **dn)
         self._drain_cold = jax.jit(self._lift(functools.partial(
@@ -263,6 +233,77 @@ class ShardedKV:
             _masked_full_scan, cfg), n_in=2), **dn)
         self._chunk_gc = jax.jit(self._lift(functools.partial(
             _masked_chunk_gc, cfg), n_in=2), **dn)
+
+    # -- subclass hooks (the replica axis lives in core.replication) ----------
+    @property
+    def _lead_shape(self) -> tuple:
+        """Leading axes of the stacked state / per-store host counters:
+        (S,) here, (R, S) for the replicated subclass."""
+        return (self.S,)
+
+    def _resolve_mesh(self, dispatch: str) -> Optional[Mesh]:
+        return resolve_mesh(dispatch, self.S)
+
+    def _create_state(self) -> store.F2State:
+        return create(self.cfg, self.S)
+
+    def _sched_mask(self, shards: np.ndarray) -> np.ndarray:
+        """Restrict scheduler/compaction passes (replication masks dead or
+        resyncing replicas here); identity for the plain sharded store."""
+        return shards
+
+    def _rep_shard(self, m: np.ndarray) -> np.ndarray:
+        """Broadcast a client-level per-shard mask/array to the lifted
+        leading shape (replication prepends the replica axis)."""
+        return m
+
+    def _rep_move(self, move: np.ndarray) -> jax.Array:
+        """Lift a [S, n_buckets] bucket-move mask to device, shaped for the
+        lifted migration kernels."""
+        return jnp.asarray(move)
+
+    def _host_view(self, x) -> np.ndarray:
+        """Collapse a lifted per-store output to client level (replication
+        returns the primary replica's rows)."""
+        return np.asarray(x)
+
+    def _build_router_steps(self, dn: dict, admit: bool):
+        """Build the jitted routed write/read steps (`self._step`,
+        `self._read_step`).  The replicated subclass overrides this with
+        fan-in/fan-out variants over the replica axis."""
+        cfg, nb = self.cfg, self.n_buckets
+        apply_lifted = self._lift(
+            functools.partial(store.apply, cfg, admit_rc=admit), n_in=4)
+
+        def routed_step(state, keys, ops, vals, bmap):
+            W = self.lanes or keys.shape[0]
+            skeys, sops, svals, rt = shard_router.route(
+                keys, ops, vals, self.S, W, bucket_map=bmap)
+            state, sstatus, srvals = apply_lifted(state, skeys, sops, svals)
+            status, rvals = shard_router.unroute(rt, sstatus, srvals)
+            return (state, status, rvals, rt.placed, rt.deferred,
+                    rt.occupancy, bucket_counts(rt, nb))
+
+        self._step = jax.jit(routed_step, **dn)
+
+        # dedicated read path (like KV._read): no write engine, and the
+        # caller does not run the compaction scheduler afterwards
+        read_lifted = self._lift(
+            functools.partial(store.read_batch, cfg, admit_rc=admit),
+            n_in=3)
+
+        def routed_read(state, keys, ops, bmap):
+            W = self.lanes or keys.shape[0]
+            vals = jnp.zeros((keys.shape[0], cfg.value_width), jnp.int32)
+            skeys, sops, _, rt = shard_router.route(
+                keys, ops, vals, self.S, W, bucket_map=bmap)
+            state, sstatus, srvals = read_lifted(state, skeys,
+                                                 sops == OP_READ)
+            status, rvals = shard_router.unroute(rt, sstatus, srvals)
+            return (state, status, rvals, rt.placed, rt.deferred,
+                    rt.occupancy, bucket_counts(rt, nb))
+
+        self._read_step = jax.jit(routed_read, **dn)
 
     def _lift(self, fn, n_in: int):
         """vmap over the shard axis; under shard_map additionally partition
@@ -453,7 +494,8 @@ class ShardedKV:
         if cold_over.any():
             self.compact_cold_cold(shards=cold_over)
             *_, ib, it = self._bounds()
-        chunk_over = (it - ib) / self.cfg.chunklog_capacity > self.trigger
+        chunk_over = self._sched_mask(
+            (it - ib) / self.cfg.chunklog_capacity > self.trigger)
         if chunk_over.any():
             self.state = self._chunk_gc(self.state, jnp.asarray(chunk_over))
 
@@ -466,7 +508,7 @@ class ShardedKV:
                 (avail * self.compact_frac).astype(np.int64), avail),
                 self.compact_batch)
         else:
-            n = np.full(self.S, int(n_records), np.int64)
+            n = np.full(begins.shape, int(n_records), np.int64)
         return np.where(shards, np.minimum(n, avail), 0)
 
     def _masked_steps(self, step, begins, n, shards):
@@ -476,7 +518,7 @@ class ShardedKV:
         until = jnp.asarray(begins + n, jnp.int32)
         cb = self.compact_batch
         n_steps = int(-(-int(n.max()) // cb)) if n.max() > 0 else 0
-        live_total = np.zeros(self.S, np.int64)
+        live_total = np.zeros(shards.shape, np.int64)
         for i in range(n_steps):
             starts = begins + i * cb
             do = shards & (starts < begins + n)
@@ -489,7 +531,8 @@ class ShardedKV:
     def compact_hot_cold(self, n_records: Optional[int] = None,
                          shards: Optional[np.ndarray] = None):
         hb, ht, *_ = self._bounds()
-        shards = np.ones(self.S, bool) if shards is None else shards
+        shards = np.ones(hb.shape, bool) if shards is None else shards
+        shards = self._sched_mask(np.asarray(shards, bool))
         n = self._regions(hb, ht, n_records, shards)
         until, _ = self._masked_steps(self._hc_step, hb, n, shards)
         self.state = self._hot_trunc(self.state, until, jnp.asarray(shards))
@@ -498,7 +541,8 @@ class ShardedKV:
     def compact_cold_cold(self, n_records: Optional[int] = None,
                           shards: Optional[np.ndarray] = None):
         _, _, cb, ct, *_ = self._bounds()
-        shards = np.ones(self.S, bool) if shards is None else shards
+        shards = np.ones(cb.shape, bool) if shards is None else shards
+        shards = self._sched_mask(np.asarray(shards, bool))
         n = self._regions(cb, ct, n_records, shards)
         until, _ = self._masked_steps(self._cc_step, cb, n, shards)
         self.state = self._cold_trunc(self.state, until, jnp.asarray(shards))
@@ -507,7 +551,8 @@ class ShardedKV:
     def compact_single_log(self, n_records: Optional[int] = None,
                            shards: Optional[np.ndarray] = None):
         hb, ht, *_ = self._bounds()
-        shards = np.ones(self.S, bool) if shards is None else shards
+        shards = np.ones(hb.shape, bool) if shards is None else shards
+        shards = self._sched_mask(np.asarray(shards, bool))
         n = self._regions(hb, ht, n_records, shards)
         until, live_total = self._masked_steps(self._sl_step, hb, n, shards)
         if self.faster_compaction == "scan":
@@ -524,15 +569,17 @@ class ShardedKV:
         """The one occupancy/traffic struct: per-shard fills and record
         counts, per-bucket traffic EWMA, and the max/mean imbalance under
         the current bucket map.  `maybe_rebalance` plans from it and the
-        benchmarks report from it."""
+        benchmarks report from it.  Fills/records go through `_host_view`
+        so the struct stays client-level ([S]) under replication."""
         hb, ht, cb, ct, ib, it = self._bounds()
         load = rebalance.shard_loads(self.traffic_ewma, self.bucket_map,
                                      self.S)
         return rebalance.ShardStats(
-            hot_fill=(ht - hb) / self.cfg.hot_capacity,
-            cold_fill=(ct - cb) / self.cfg.cold_capacity,
-            chunklog_fill=(it - ib) / self.cfg.chunklog_capacity,
-            records=(ht - hb) + (ct - cb),
+            hot_fill=self._host_view((ht - hb) / self.cfg.hot_capacity),
+            cold_fill=self._host_view((ct - cb) / self.cfg.cold_capacity),
+            chunklog_fill=self._host_view(
+                (it - ib) / self.cfg.chunklog_capacity),
+            records=self._host_view((ht - hb) + (ct - cb)),
             occupancy=np.asarray(self.last_occupancy).astype(np.int64),
             routed_lanes=self.routed_lanes,      # properties return copies
             traffic_ewma=self.traffic_ewma,
@@ -557,11 +604,20 @@ class ShardedKV:
         new_map = rebalance.plan_moves(
             self.traffic_ewma, self.bucket_map, self.S,
             threshold=rb.threshold, max_moves=rb.max_moves,
-            min_traffic=rb.min_traffic)
+            min_traffic=rb.min_traffic,
+            fill=self._fill_signal() if rb.fill_weight > 0 else None,
+            fill_weight=rb.fill_weight)
         if new_map is None:
             return False
         self.migrate(new_map)
         return True
+
+    def _fill_signal(self) -> np.ndarray:
+        """Per-shard live-region record counts [S] — the occupancy half of
+        the fill-aware planner's blended load signal (weight 0 by default,
+        in which case this is never computed)."""
+        hb, ht, cb, ct, *_ = self._bounds()
+        return self._host_view((ht - hb) + (ct - cb)).astype(np.float64)
 
     def rebalance(self, new_map: Optional[np.ndarray] = None,
                   threshold: Optional[float] = None) -> int:
@@ -570,12 +626,15 @@ class ShardedKV:
         already balanced — and then the store is byte-identical)."""
         if new_map is None:
             rb = self.rb
+            fw = rb.fill_weight if rb else 0.0
             new_map = rebalance.plan_moves(
                 self.traffic_ewma, self.bucket_map, self.S,
                 threshold=(threshold if threshold is not None
                            else rb.threshold if rb else 1.25),
                 max_moves=rb.max_moves if rb else 0,
-                min_traffic=rb.min_traffic if rb else 0.0)
+                min_traffic=rb.min_traffic if rb else 0.0,
+                fill=self._fill_signal() if fw > 0 else None,
+                fill_weight=fw)
             if new_map is None:
                 return 0
         return self.migrate(new_map)
@@ -593,8 +652,8 @@ class ShardedKV:
             return 0
         move = np.zeros((self.S, self.n_buckets), bool)
         move[self.bucket_map[changed], changed] = True
-        do = move.any(axis=1)
-        move_dev = jnp.asarray(move)
+        do = self._rep_shard(move.any(axis=1))
+        move_dev = self._rep_move(move)
         Bm = self._mig_batch
         V = self.cfg.value_width
         self._migrating = True
@@ -621,15 +680,15 @@ class ShardedKV:
                         (self.state, k, v, tomb,
                          take) = self._drain_hot(self.state, sj, until,
                                                  move_dev, sdo)
-                    take_np = np.asarray(take)
+                    take_np = self._host_view(take)
                     if not take_np.any():
                         continue
-                    k_np = np.asarray(k)[take_np]
-                    v_np = np.asarray(v)[take_np]
+                    k_np = self._host_view(k)[take_np]
+                    v_np = self._host_view(v)[take_np]
                     if tomb is None:
                         ops_np = np.full(len(k_np), OP_UPSERT, np.int32)
                     else:
-                        ops_np = np.where(np.asarray(tomb)[take_np],
+                        ops_np = np.where(self._host_view(tomb)[take_np],
                                           OP_DELETE, OP_UPSERT
                                           ).astype(np.int32)
                     parts.append((k_np, v_np, ops_np))

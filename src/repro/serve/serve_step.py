@@ -12,7 +12,10 @@ shards stacked on a leading axis (`core.sharded.ShardedKV`), dispatched
 with vmap on one device or shard_map over a 1-D device mesh.  Requests
 route through a bucket -> shard indirection table, so the live rebalancer
 (`core.rebalance`) can migrate hot buckets off a saturated shard while
-the service keeps taking traffic.
+the service keeps taking traffic.  `n_replicas > 1` adds the replica axis
+(`core.replication.ReplicatedKV`): reads fan out across R convergent
+copies of each shard, writes fan in, and replicas can be dropped and
+live-resynced without stopping the service.
 """
 from __future__ import annotations
 
@@ -42,20 +45,37 @@ def decode_step(cfg: ModelConfig, params, cache, tokens):
 # ---------------------------------------------------------------------------
 
 def make_kv_service(kv_cfg, n_shards: int = 1, lanes: Optional[int] = None,
-                    dispatch: str = "auto", rebalance_cfg=None, **kw):
+                    dispatch: str = "auto", rebalance_cfg=None,
+                    n_replicas: int = 1, read_selector: str = "round_robin",
+                    **kw):
     """Backing store for a KV-serving deployment: `n_shards` hash-routed F2
-    shards behind one deterministic batch router (`core.shard_router`).
+    shards behind one deterministic batch router (`core.shard_router`),
+    optionally replicated `n_replicas` ways (`core.replication`).
 
-    `dispatch="auto"` places the shard axis across every visible device
-    via shard_map when more than one is available, else vmaps on one —
-    the same code path either way.  `lanes` caps per-shard sub-batch
-    width (None routes any request batch in a single round).
+    `dispatch="auto"` places the shard axis — and, when replicated, the
+    2-D (replica, shard) grid — across every visible device via shard_map
+    when more than one is available, else vmaps on one — the same code
+    path either way.  `lanes` caps per-shard sub-batch width (None routes
+    any request batch in a single round).
 
     `rebalance_cfg` (a `core.rebalance.RebalanceConfig`) arms the live
     rebalancer: when skewed traffic clusters in hash space and one shard's
     occupancy drifts past the threshold, the service migrates whole
     buckets to idle shards between request batches — no downtime, requests
-    keep routing through the (flipped) indirection table."""
+    keep routing through the (flipped) indirection table.
+
+    With `n_replicas > 1` the service keeps R convergent copies of every
+    shard: writes fan in to all alive replicas, dedicated reads
+    (`kv_service_read`) fan out — each request lane served by exactly one
+    replica per `read_selector` ("round_robin" | "least_loaded") — and
+    `kv.drop_replica(r)` / `kv.resync(r)` rotate a replica out of and
+    back into serving without downtime."""
+    if n_replicas > 1:
+        from ..core.replication import ReplicatedKV
+        return ReplicatedKV(kv_cfg, n_shards, n_replicas=n_replicas,
+                            read_selector=read_selector, lanes=lanes,
+                            dispatch=dispatch, rebalance_cfg=rebalance_cfg,
+                            **kw)
     from ..core.sharded import ShardedKV
     return ShardedKV(kv_cfg, n_shards, lanes=lanes, dispatch=dispatch,
                      rebalance_cfg=rebalance_cfg, **kw)
@@ -65,20 +85,32 @@ def kv_service_step(kv, keys, ops, vals=None):
     """One KV service step: route the request batch to the shards, execute,
     and restore per-request order.  Runs the sharded pressure scheduler —
     and, when armed, the occupancy-driven rebalance check — after each
-    routed batch.  Returns (status [B], values [B, V])."""
+    routed batch.  Under replication this is the fan-in path: every alive
+    replica applies the identical routed batch.  Returns (status [B],
+    values [B, V])."""
     return kv.apply(keys, ops, vals)
+
+
+def kv_service_read(kv, keys):
+    """The read hot path: `ShardedKV.read` (routed, no write-engine pass);
+    under replication the fan-out path — each lane served by exactly one
+    alive replica, spreading read-hot shards across the replica axis."""
+    return kv.read(keys)
 
 
 def kv_service_stats(kv) -> dict:
     """Serving telemetry: the per-shard occupancy/traffic struct
     (`ShardedKV.shard_stats()`) as a JSON-friendly dict, plus migration
     counters — what an operator dashboard polls to watch skew and the
-    rebalancer's response."""
+    rebalancer's response.  Replicated services add the per-replica view
+    (liveness, read-load EWMA, drop/resync counters)."""
     out = kv.shard_stats().to_dict()
     out.update(migrations=kv.migrations,
                migrated_records=kv.migrated_records,
                migrated_buckets=kv.migrated_buckets,
                rounds=kv.rounds)
+    if hasattr(kv, "replica_stats"):
+        out["replicas"] = kv.replica_stats()
     return out
 
 

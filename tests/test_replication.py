@@ -1,0 +1,543 @@
+"""Differential replication oracle for the replica axis (core/replication).
+
+The contract under test: replication is observably transparent and
+bit-exact by construction.  A `ReplicatedKV(R, S)` driven through mixed
+ops, masked pressure compactions, a forced rebalance and a drop→resync
+cycle must (a) return statuses/values bit-exact with an unreplicated
+`ShardedKV(S)` replaying the same stream (and with a dict oracle),
+(b) keep replica 0's state leaves bit-exact with the ShardedKV's leaves
+through every fan-in phase, and (c) keep alive, never-dropped replicas
+byte-identical to each other after every phase.  Fan-out reads must be
+*pure* — serving a batch from the replicas changes no state leaf — and a
+resynced replica must be logically convergent: pinned read-back of the
+whole key space from it matches the oracle.
+
+Per project convention, every hypothesis property here has a seeded
+fallback that always runs (hypothesis is a CI-only dependency).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (KV, OP_DELETE, OP_NOOP, OP_READ, OP_RMW, OP_UPSERT,
+                        RebalanceConfig, ST_NOT_FOUND, ST_OK, F2Config,
+                        rebalance, shard_router)
+from repro.core.replication import ReplicatedKV, replicas_byte_identical
+from repro.core.sharded import ShardedKV
+
+V = 2
+
+
+def tiny_cfg(**kw):
+    base = dict(hot_index_size=1 << 8, hot_capacity=1 << 9, hot_mem=1 << 6,
+                cold_capacity=1 << 11, cold_mem=1 << 6, n_chunks=1 << 6,
+                chunklog_capacity=1 << 9, chunklog_mem=1 << 5,
+                rc_capacity=1 << 6, value_width=V, chain_max=48)
+    base.update(kw)
+    return F2Config(**base)
+
+
+def make_pair(cfg, S=4, R=2, trigger=0.6, rb=None, **kw):
+    """A ReplicatedKV and the unreplicated ShardedKV replay reference."""
+    common = dict(mode="f2", trigger=trigger, compact_frac=0.3,
+                  compact_batch=64, donate=False)
+    common.update(kw)
+    rkv = ReplicatedKV(cfg, S, n_replicas=R, rebalance_cfg=rb, **common)
+    skv = ShardedKV(cfg, S, rebalance_cfg=rb, **common)
+    return rkv, skv
+
+
+def fold_ref(ref, keys, ops, vals):
+    for i in range(len(keys)):
+        k, o = int(keys[i]), int(ops[i])
+        if o == OP_UPSERT:
+            ref[k] = vals[i].copy()
+        elif o == OP_DELETE:
+            ref.pop(k, None)
+        elif o == OP_RMW:
+            ref[k] = (ref.get(k, np.zeros(V, np.int32))
+                      + vals[i]).astype(np.int32)
+
+
+def parity_step(rkv, skv, ref, keys, ops, vals, tag):
+    """One fan-in batch on both stores: statuses/values bit-exact, reads
+    match the dict oracle; then fold writes into it."""
+    st_r, rv_r = rkv.apply(keys, ops, vals)
+    st_s, rv_s = skv.apply(keys, ops, vals)
+    st_r, rv_r = np.asarray(st_r), np.asarray(rv_r)
+    assert np.array_equal(st_r, np.asarray(st_s)), tag
+    assert np.array_equal(rv_r, np.asarray(rv_s)), tag
+    for i in range(len(keys)):
+        k, o = int(keys[i]), int(ops[i])
+        if o == OP_READ:
+            if k in ref:
+                assert st_r[i] == ST_OK and np.array_equal(rv_r[i], ref[k]), \
+                    (tag, k)
+            else:
+                assert st_r[i] == ST_NOT_FOUND, (tag, k)
+    fold_ref(ref, keys, ops, vals)
+
+
+def assert_primary_matches_sharded(rkv, skv, tag, replica=0):
+    """Replica `replica`'s state leaves bit-exact with the ShardedKV's."""
+    a, b = jax.device_get((rkv.state, skv.state))
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        assert np.array_equal(np.asarray(la)[replica], np.asarray(lb)), tag
+
+
+def readback_oracle(rkv, ref, n_keys, tag, replica=None):
+    """Fan-out read of the whole key space (optionally pinned to one
+    replica) against the dict oracle."""
+    ks = np.arange(n_keys, dtype=np.int32)
+    st, rv = rkv.read(ks, replica=replica)
+    st, rv = np.asarray(st), np.asarray(rv)
+    for k in range(n_keys):
+        if k in ref:
+            assert st[k] == ST_OK and np.array_equal(rv[k], ref[k]), (tag, k)
+        else:
+            assert st[k] == ST_NOT_FOUND, (tag, k)
+
+
+def mixed_batch(rng, n_keys=500, B=128):
+    keys = rng.integers(0, n_keys, B).astype(np.int32)
+    ops = rng.choice([OP_READ, OP_UPSERT, OP_RMW, OP_DELETE], B,
+                     p=[.25, .45, .15, .15]).astype(np.int32)
+    vals = rng.integers(0, 100, (B, V)).astype(np.int32)
+    return keys, ops, vals
+
+
+# ---------------------------------------------------------------------------
+# The replication oracle (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_replication_oracle_differential():
+    """ReplicatedKV(R=2, S=4) vs ShardedKV(S=4) vs a dict oracle through
+    mixed ops, a masked pressure compaction, a forced rebalance, and a
+    drop_replica→resync cycle: statuses/values bit-exact throughout,
+    replica 0's state leaves bit-exact with the ShardedKV's after every
+    phase, alive replicas byte-identical to each other after every phase,
+    and the resynced replica logically convergent on pinned read-back."""
+    cfg = tiny_cfg()
+    rb = RebalanceConfig(enabled=False, buckets_per_shard=8, migrate_batch=64)
+    rkv, skv = make_pair(cfg, S=4, R=2, trigger=0.5, rb=rb)
+    rng = np.random.default_rng(41)
+    ref = {}
+    N = 500
+
+    # --- phase 1: mixed ops until the masked pressure compaction fires ----
+    for step in range(26):
+        parity_step(rkv, skv, ref, *mixed_batch(rng, N), tag=("warm", step))
+    assert skv.compactions.sum() > 0, "pressure compaction never fired"
+    for r in range(2):
+        assert np.array_equal(rkv.compactions[r], skv.compactions), \
+            "masked compactions diverged across the replica axis"
+    assert_primary_matches_sharded(rkv, skv, "post-compaction")
+    assert replicas_byte_identical(rkv)
+
+    # --- phase 2: forced rebalance — ONE shared map flips atomically ------
+    stats = rkv.shard_stats()
+    nm = rkv.bucket_map.copy()
+    src = int(np.argmax(rebalance.shard_loads(stats.traffic_ewma, nm, 4)))
+    nm[np.flatnonzero(nm == src)[:3]] = (src + 1) % 4
+    n_r = rkv.migrate(nm.copy())
+    n_s = skv.migrate(nm.copy())
+    assert n_r == n_s and n_r > 0
+    assert np.array_equal(rkv.bucket_map, skv.bucket_map)
+    for step in range(6):
+        parity_step(rkv, skv, ref, *mixed_batch(rng, N), tag=("mig", step))
+    assert_primary_matches_sharded(rkv, skv, "post-migration")
+    assert replicas_byte_identical(rkv)
+
+    # --- phase 3: drop replica 1, keep serving (deliberate desync) --------
+    rkv.drop_replica(1)
+    for step in range(6):
+        parity_step(rkv, skv, ref, *mixed_batch(rng, N), tag=("drop", step))
+    assert_primary_matches_sharded(rkv, skv, "dropped-phase")
+    assert not replicas_byte_identical(rkv, replicas=[0, 1])  # it desynced
+
+    # --- phase 4: live resync from the healthy replica --------------------
+    before = jax.device_get(rkv.state)
+    n_moved = rkv.resync(1)
+    assert n_moved > 0 and rkv.resyncs == 1
+    after = jax.device_get(rkv.state)
+    for la, lb in zip(jax.tree_util.tree_leaves(before),
+                      jax.tree_util.tree_leaves(after)):
+        assert np.array_equal(np.asarray(la)[0], np.asarray(lb)[0]), \
+            "resync touched the healthy replica"
+    assert_primary_matches_sharded(rkv, skv, "post-resync")
+    rkv.check_invariants()
+    readback_oracle(rkv, ref, N + 12, "resynced-replica", replica=1)
+    readback_oracle(rkv, ref, N + 12, "healthy-replica", replica=0)
+
+    # --- phase 5: converged serving after the full cycle -------------------
+    for step in range(4):
+        parity_step(rkv, skv, ref, *mixed_batch(rng, N), tag=("post", step))
+    assert_primary_matches_sharded(rkv, skv, "final")
+    readback_oracle(rkv, ref, N + 12, "final-fanout")
+    rkv.check_invariants()
+    skv.check_invariants()
+
+
+def test_fanout_reads_are_pure():
+    """Serving a fan-out read batch changes NO state leaf on any replica —
+    the property that lets reads go to one replica without desyncing it —
+    while the host-side per-replica I/O accounting still advances."""
+    cfg = tiny_cfg()
+    rkv = ReplicatedKV(cfg, 4, n_replicas=2, trigger=2.0, donate=False)
+    rng = np.random.default_rng(9)
+    keys = rng.integers(0, 300, 128).astype(np.int32)
+    vals = rng.integers(0, 100, (128, V)).astype(np.int32)
+    rkv.upsert(keys, vals)
+    before = jax.device_get(rkv.state)
+    io0 = rkv.io_stats()
+    st, _ = rkv.read(np.arange(128, dtype=np.int32))
+    after = jax.device_get(rkv.state)
+    same = jax.tree_util.tree_map(
+        lambda a, b: bool(np.array_equal(a, b)), before, after)
+    assert all(jax.tree_util.tree_leaves(same)), "fan-out read wrote state"
+    io1 = rkv.io_stats()
+    assert io1["mem_hits"] + io1["read_ops"] > io0["mem_hits"] + io0["read_ops"]
+    assert (np.asarray(st) != 0).any()
+
+
+def test_r1_fan_in_matches_sharded_exactly():
+    """ReplicatedKV(R=1) is the degenerate case: its single replica's
+    fan-in path is leaf-for-leaf the ShardedKV — statuses, values, state,
+    IoStats and compaction counters."""
+    cfg = tiny_cfg()
+    rkv, skv = make_pair(cfg, S=4, R=1, trigger=0.5)
+    rng = np.random.default_rng(13)
+    ref = {}
+    for step in range(20):
+        parity_step(rkv, skv, ref, *mixed_batch(rng, 400, 96), tag=step)
+    assert_primary_matches_sharded(rkv, skv, "r1-final")
+    assert rkv.io_stats() == skv.io_stats()
+    assert np.array_equal(rkv.compactions[0], skv.compactions)
+
+
+def test_healthy_replicas_byte_identical_through_drop_resync():
+    """R=3: dropping and resyncing replica 2 leaves replicas 0 and 1
+    byte-identical to each other at every step (the masked-progress
+    clause), and the resynced replica serves the oracle correctly."""
+    cfg = tiny_cfg()
+    rkv = ReplicatedKV(cfg, 2, n_replicas=3, trigger=0.6,
+                       compact_batch=64, donate=False)
+    rng = np.random.default_rng(17)
+    ref = {}
+    for _ in range(6):
+        keys, ops, vals = mixed_batch(rng, 300, 96)
+        rkv.apply(keys, ops, vals)
+        fold_ref(ref, keys, ops, vals)
+    rkv.drop_replica(2)
+    for _ in range(4):
+        keys, ops, vals = mixed_batch(rng, 300, 96)
+        rkv.apply(keys, ops, vals)
+        fold_ref(ref, keys, ops, vals)
+        assert replicas_byte_identical(rkv, replicas=[0, 1])
+    rkv.resync(2)
+    assert replicas_byte_identical(rkv, replicas=[0, 1])
+    for r in range(3):
+        readback_oracle(rkv, ref, 312, ("post-resync", r), replica=r)
+    # the full cycle keeps serving fan-in identically afterwards
+    for _ in range(3):
+        keys, ops, vals = mixed_batch(rng, 300, 96)
+        rkv.apply(keys, ops, vals)
+        fold_ref(ref, keys, ops, vals)
+        assert replicas_byte_identical(rkv, replicas=[0, 1])
+    readback_oracle(rkv, ref, 312, "final")
+    rkv.check_invariants()
+
+
+def test_untouched_shards_byte_identical_through_replicated_migration():
+    """The PR-3/PR-4 masking invariant on the 2-D grid: shards that are
+    neither source nor destination of a moving bucket pass through
+    `migrate` byte-identical on every replica."""
+    cfg = tiny_cfg()
+    rb = RebalanceConfig(enabled=False, migrate_batch=64)
+    rkv = ReplicatedKV(cfg, 4, n_replicas=2, trigger=2.0, donate=False,
+                       rebalance_cfg=rb)
+    rng = np.random.default_rng(23)
+    for _ in range(5):
+        keys = rng.integers(0, 600, 128).astype(np.int32)
+        vals = rng.integers(0, 100, (128, V)).astype(np.int32)
+        rkv.upsert(keys, vals)
+    src, dst = 1, 2
+    before = jax.device_get(rkv.state)
+    nm = rkv.bucket_map.copy()
+    nm[np.flatnonzero(nm == src)[:2]] = dst
+    assert rkv.migrate(nm) > 0
+    after = jax.device_get(rkv.state)
+    untouched = [s for s in range(4) if s not in (src, dst)]
+    diff = jax.tree_util.tree_map(
+        lambda a, b: np.asarray(
+            (np.asarray(a) == np.asarray(b)).reshape(2, 4, -1).all(2)),
+        before, after)
+    for leaf in jax.tree_util.tree_leaves(diff):
+        for r in range(2):
+            for s in untouched:
+                assert leaf[r, s], (r, s, "untouched shard changed")
+    assert replicas_byte_identical(rkv)
+    rkv.check_invariants()
+
+
+def test_replicated_shard_map_dispatch_matches_vmap():
+    """The 2-D (replica, shard) shard_map path — a (1, 1) mesh on CPU CI —
+    is bit-exact with nested vmap: statuses, values and every state leaf,
+    through fan-in writes and fan-out reads."""
+    cfg = tiny_cfg()
+    outs = []
+    for disp in ("vmap", "shard_map"):
+        kv = ReplicatedKV(cfg, 4, n_replicas=2, dispatch=disp, trigger=0.6,
+                          compact_batch=64, donate=False)
+        rng = np.random.default_rng(3)
+        res = []
+        for _ in range(6):
+            keys, ops, vals = mixed_batch(rng, 300, 64)
+            st, rv = kv.apply(keys, ops, vals)
+            res += [np.asarray(st), np.asarray(rv)]
+        st, rv = kv.read(np.arange(128, dtype=np.int32))
+        res += [np.asarray(st), np.asarray(rv)]
+        outs.append((res, jax.device_get(kv.state), kv.dispatch))
+    (ra, sa, da), (rb_, sb, db) = outs
+    assert da == "vmap" and db == "shard_map"
+    for x, y in zip(ra, rb_):
+        assert np.array_equal(x, y)
+    same = jax.tree_util.tree_map(
+        lambda a, b: bool(np.array_equal(a, b)), sa, sb)
+    assert all(jax.tree_util.tree_leaves(same))
+
+
+# ---------------------------------------------------------------------------
+# Replica selector properties (pure numpy — no store)
+# ---------------------------------------------------------------------------
+
+def check_selector(B, alive, counter, policy, loads=None):
+    """The property: every lane lands on an alive replica; round_robin is
+    balanced to within one lane; the assignment is deterministic."""
+    rep = shard_router.assign_replicas(B, alive, counter, policy, loads)
+    rep2 = shard_router.assign_replicas(B, alive, counter, policy, loads)
+    assert np.array_equal(rep, rep2)                       # deterministic
+    assert rep.shape == (B,)
+    alive_ids = np.flatnonzero(alive)
+    assert np.isin(rep, alive_ids).all()                   # alive only
+    counts = np.bincount(rep, minlength=len(alive))
+    assert (counts[~np.asarray(alive, bool)] == 0).all()
+    if policy == "round_robin" and B > 0:
+        c = counts[alive_ids]
+        assert c.max() - c.min() <= 1                      # balanced
+    assert counts.sum() == B
+    return rep
+
+
+def test_selector_seeded():
+    rng = np.random.default_rng(2)
+    for trial in range(40):
+        R = int(rng.choice([1, 2, 3, 4, 8]))
+        alive = np.zeros(R, bool)
+        alive[rng.choice(R, rng.integers(1, R + 1), replace=False)] = True
+        B = int(rng.integers(0, 200))
+        loads = rng.random(R) * 100
+        for policy in shard_router.REPLICA_POLICIES:
+            check_selector(B, alive, int(rng.integers(0, 1000)), policy,
+                           loads)
+
+
+def test_selector_round_robin_rotates():
+    """Consecutive batches rotate the stripe so remainder lanes spread."""
+    alive = np.ones(3, bool)
+    r0 = shard_router.assign_replicas(4, alive, 0, "round_robin")
+    r1 = shard_router.assign_replicas(4, alive, 1, "round_robin")
+    assert np.array_equal(r0, [0, 1, 2, 0])
+    assert np.array_equal(r1, [1, 2, 0, 1])
+
+
+def test_selector_least_loaded_biases_to_light_replica():
+    loads = np.array([1000.0, 0.0])
+    rep = shard_router.assign_replicas(100, np.ones(2, bool), 0,
+                                       "least_loaded", loads)
+    counts = np.bincount(rep, minlength=2)
+    assert counts[1] > counts[0]       # the idle replica takes more lanes
+    # and a dead heavy replica is simply skipped
+    rep = shard_router.assign_replicas(10, np.array([False, True]), 0,
+                                       "least_loaded", loads)
+    assert (rep == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# Fill-aware rebalance planning (the satellite knob, default-off)
+# ---------------------------------------------------------------------------
+
+def check_fill_weight_zero_unchanged(seed):
+    """The property: with fill_weight=0 the fill signal is never consulted
+    — plans are byte-identical to the traffic-only planner, and
+    blend_fill_signal returns the traffic array unchanged."""
+    rng = np.random.default_rng(seed)
+    S = int(rng.choice([2, 4, 8]))
+    nb = S * int(rng.choice([2, 4, 8]))
+    traffic = rng.random(nb) * rng.choice([0, 1, 10], nb)
+    fill = rng.random(S) * 1000
+    m0 = shard_router.default_bucket_map(S, nb)
+    base = rebalance.plan_moves(traffic, m0, S, threshold=1.2)
+    with_fill = rebalance.plan_moves(traffic, m0, S, threshold=1.2,
+                                     fill=fill, fill_weight=0.0)
+    if base is None:
+        assert with_fill is None
+    else:
+        assert np.array_equal(base, with_fill)
+    blended = rebalance.blend_fill_signal(traffic, m0, fill, 0.0)
+    assert np.array_equal(blended, np.asarray(traffic, np.float64))
+
+
+def test_fill_weight_zero_unchanged_seeded():
+    for seed in (5, 55, 555, 5555, 55555):
+        check_fill_weight_zero_unchanged(seed)
+
+
+def test_fill_aware_planning_relieves_full_shard():
+    """With weight > 0 a shard can shed buckets for being FULL, not just
+    hot: traffic points at shard 0, occupancy at shard 1 — the blended
+    planner moves shard 1's buckets, the traffic-only planner shard 0's."""
+    S, nb = 2, 8
+    m0 = shard_router.default_bucket_map(S, nb)
+    traffic = np.array([40.0, 30.0, 20.0, 10.0, 4.0, 3.0, 2.0, 1.0])
+    fill = np.array([10.0, 1000.0])           # shard 1 is nearly full
+    p_traffic = rebalance.plan_moves(traffic, m0, S, threshold=1.1)
+    assert p_traffic is not None
+    moved_t = np.flatnonzero(p_traffic != m0)
+    assert (m0[moved_t] == 0).all()           # hot shard sheds
+    p_fill = rebalance.plan_moves(traffic, m0, S, threshold=1.1,
+                                  fill=fill, fill_weight=1.0)
+    assert p_fill is not None
+    moved_f = np.flatnonzero(p_fill != m0)
+    assert (m0[moved_f] == 1).all()           # full shard sheds
+    # blend preserves the total signal (min_traffic gate unaffected)
+    blended = rebalance.blend_fill_signal(traffic, m0, fill, 0.5)
+    assert np.isclose(blended.sum(), traffic.sum())
+
+
+def test_fill_weight_threads_through_sharded_kv():
+    """ShardedKV.rebalance() consults the blended signal when the knob is
+    set: a cold-but-full shard sheds buckets."""
+    cfg = tiny_cfg()
+    rb = RebalanceConfig(enabled=False, buckets_per_shard=8, migrate_batch=64,
+                         fill_weight=0.9, min_traffic=1.0)
+    skv = ShardedKV(cfg, 2, trigger=2.0, donate=False, rebalance_cfg=rb)
+    rng = np.random.default_rng(31)
+    # fill shard 1's buckets heavily while routing most *traffic* there
+    # too, then read-hammer shard 0 so traffic says "shard 0 is fine" but
+    # occupancy says shard 1 must shed
+    cand = np.arange(4096, dtype=np.int32)
+    sid = np.asarray(shard_router.shard_of(jnp.asarray(cand), 2))
+    k1 = cand[sid == 1]
+    for _ in range(6):
+        ks = k1[rng.integers(0, len(k1), 128)].astype(np.int32)
+        skv.upsert(ks, rng.integers(0, 99, (128, V)).astype(np.int32))
+    # balance the traffic signal so only fill distinguishes the shards
+    skv._pending.clear()
+    skv._traffic_ewma[:] = 1.0
+    moved = skv.rebalance(threshold=1.05)
+    assert moved > 0, "fill-aware planner did not fire"
+    assert (shard_router.default_bucket_map(2, skv.n_buckets)[
+        np.flatnonzero(skv.bucket_map
+                       != shard_router.default_bucket_map(
+                           2, skv.n_buckets))] == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# Random op / drop / resync / migration interleavings
+# ---------------------------------------------------------------------------
+
+def check_replicated_interleaving(seed, drop_steps, mig_steps, n_keys=200,
+                                  n_steps=6, B=32, S=2, R=2):
+    """The property: any interleaving of mixed fan-in batches, fan-out
+    reads, forced migrations, and drop→resync cycles keeps the
+    ReplicatedKV bit-exact with the unreplicated replay and the dict
+    oracle, with alive replicas byte-identical between lifecycle events."""
+    cfg = tiny_cfg()
+    rb = RebalanceConfig(enabled=False, buckets_per_shard=4, migrate_batch=32)
+    rkv, skv = make_pair(cfg, S=S, R=R, trigger=0.6, rb=rb)
+    rng = np.random.default_rng(seed)
+    ref = {}
+    dropped = None
+    for step in range(n_steps):
+        keys, ops, vals = mixed_batch(rng, n_keys, B)
+        parity_step(rkv, skv, ref, keys, ops, vals, (seed, step))
+        if step in mig_steps:
+            nm = rng.integers(0, S, rkv.n_buckets).astype(np.int32)
+            rkv.migrate(nm.copy())
+            skv.migrate(nm.copy())
+            rkv.check_invariants()
+        if step in drop_steps and dropped is None and R > 1:
+            dropped = int(rng.integers(0, R))
+            if dropped == 0:
+                dropped = R - 1     # keep replica 0 the primary reference
+            rkv.drop_replica(dropped)
+        elif dropped is not None and rng.random() < 0.5:
+            rkv.resync(dropped)
+            dropped = None
+    if dropped is not None:
+        rkv.resync(dropped)
+    # final parity: fan-in state, fan-out values, dict oracle
+    assert_primary_matches_sharded(rkv, skv, ("final", seed))
+    readback_oracle(rkv, ref, n_keys, ("final", seed))
+    rkv.check_invariants()
+    skv.check_invariants()
+
+
+def test_replicated_interleaving_seeded():
+    """Seeded instances of the interleaving property (always runs, also
+    where hypothesis is unavailable): drops at the start, drop+migration
+    overlap, lifecycle at the end, and no events at all."""
+    check_replicated_interleaving(101, {0}, {3})
+    check_replicated_interleaving(202, {1}, {1})
+    check_replicated_interleaving(303, {5}, set())
+    check_replicated_interleaving(404, set(), set())
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=6, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.integers(0, 2**31 - 1),
+           st.sets(st.integers(0, 5), max_size=2),
+           st.sets(st.integers(0, 5), max_size=2))
+    def test_replicated_interleaving_property(seed, drop_steps, mig_steps):
+        check_replicated_interleaving(seed, drop_steps, mig_steps)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_fill_weight_zero_unchanged_property(seed):
+        check_fill_weight_zero_unchanged(seed)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 8), st.integers(0, 128), st.integers(0, 1000),
+           st.sampled_from(shard_router.REPLICA_POLICIES))
+    def test_selector_property(R, B, counter, policy):
+        rng = np.random.default_rng(counter + 7 * R)
+        alive = np.zeros(R, bool)
+        alive[rng.choice(R, rng.integers(1, R + 1), replace=False)] = True
+        check_selector(B, alive, counter, policy, rng.random(R) * 10)
+else:
+    _skip = pytest.mark.skip(
+        reason="hypothesis not installed (pip install '.[test]')")
+
+    @_skip
+    def test_replicated_interleaving_property():
+        pass
+
+    @_skip
+    def test_fill_weight_zero_unchanged_property():
+        pass
+
+    @_skip
+    def test_selector_property():
+        pass
