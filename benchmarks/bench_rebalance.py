@@ -103,7 +103,7 @@ def run_window(kv: ShardedKV, batches) -> dict:
         rounds_per_batch=(kv.rounds - rounds0) / n_batches,
         imbalance_max_over_mean=imbalance_of(stats.routed_lanes - lanes0),
         migrations=kv.migrations - mig0,
-        shard_stats=stats.to_dict(),
+        stats=kv.stats(),       # the unified nested KVProtocol shape
     )
 
 

@@ -104,7 +104,7 @@ def run_config(kv: ReplicatedKV, read_batches: np.ndarray,
         n_ops=n_ops,
         rounds_per_batch=(kv.rounds - rounds0) / (n_batches * repeats),
         replica_load=np.round(kv.replica_load, 1).tolist(),
-        io=kv.io_stats(),
+        stats=kv.stats(),       # the unified nested KVProtocol shape
     )
 
 

@@ -1,0 +1,244 @@
+"""Session-layer benchmark: cross-session batch packing vs synchronous
+per-request serving on a hot-shard YCSB mix.
+
+The serving shape that motivates the async session API: M concurrent
+clients, each submitting small requests (a few dozen ops — far fewer
+than the S*W routed slab holds), with the key distribution Zipf-skewed
+onto ONE shard's buckets.  The synchronous path must dispatch one routed
+round per request — the hot shard uses a fraction of its slab and the
+other shards' lanes ride almost empty, so wall clock is bound by the
+number of dispatches, not the work.  The session layer accepts the SAME
+requests into per-session rings and packs pending ops from all M
+clients into every round (global-ticket arbitration, per-session FIFO),
+so each dispatch carries up to `lanes` ops per shard and the round count
+collapses toward total_hot_ops/lanes.
+
+Both sides run the identical op stream on identically-tuned stores
+(`harness.make_sharded_kv` vs `harness.make_session_kv`, same
+`_shard_cfg` recipe), so the measured difference is the scheduling
+change and nothing else.  Reported per side: wall-clock kops, routed
+rounds, and slab occupancy (fraction of S*W lanes filled per round —
+the before/after signal the packer exists to move).
+
+    PYTHONPATH=src python benchmarks/bench_sessions.py [--tiny] [--out f.json]
+
+`--tiny` is the CI smoke mode (`BENCH_sessions.json` artifact) with the
+gate: multi-session throughput >= the synchronous baseline on the
+hot-shard mix, and session slab occupancy STRICTLY above synchronous.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import jax
+
+from benchmarks.bench_mixed import zipf_keys
+from benchmarks.bench_rebalance import shard_keyset
+from benchmarks.harness import make_session_kv, make_sharded_kv
+from repro.core import OP_READ, OP_RMW, ST_OK
+
+
+def make_requests(rng, n_keys: int, hot_keys: np.ndarray, n_req: int,
+                  req_size: int, vw: int, hot_frac: float, theta: float,
+                  read_frac: float):
+    """The client request stream: `n_req` small batches, each a YCSB-A
+    style read/RMW mix with `hot_frac` of lanes Zipf-drawn from the
+    one-shard hot set."""
+    reqs = []
+    for _ in range(n_req):
+        n_hot = int(req_size * hot_frac)
+        hot = hot_keys[zipf_keys(rng, len(hot_keys), theta, n_hot)]
+        uni = rng.integers(0, n_keys, req_size - n_hot)
+        keys = rng.permutation(
+            np.concatenate([hot, uni])).astype(np.int32)
+        ops = np.where(rng.random(req_size) < read_frac,
+                       OP_READ, OP_RMW).astype(np.int32)
+        vals = rng.integers(0, 10, (req_size, vw)).astype(np.int32)
+        reqs.append((keys, ops, vals))
+    return reqs
+
+
+def preload(kv, n_keys: int, vw: int, batch: int = 1024):
+    keys = np.arange(n_keys, dtype=np.int32)
+    vals = np.stack([keys % 97] * vw, 1).astype(np.int32)
+    for off in range(0, n_keys, batch):
+        kv.upsert(keys[off:off + batch], vals[off:off + batch])
+
+
+def run_sync(kv, reqs, repeats: int) -> dict:
+    """The baseline: every client request is its own synchronous apply —
+    one (or more) routed dispatches per request, no cross-request
+    packing.  Best-of-repeats wall clock on the identical stream."""
+    S, W = kv.S, kv.lanes
+    kv.apply(*reqs[0])                                  # compile
+    r0 = kv.rounds
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for k, o, v in reqs:
+            kv.apply(k, o, v)
+        jax.block_until_ready(kv.state.hot.tail)
+        best = min(best, time.perf_counter() - t0)
+    kv.check_invariants()
+    n_ops = sum(len(k) for k, _, _ in reqs)
+    rounds = (kv.rounds - r0) / repeats
+    return dict(
+        ops_per_s=n_ops / best, seconds=best, n_ops=n_ops,
+        rounds=rounds, rounds_per_req=rounds / len(reqs),
+        slab_occupancy=n_ops / (rounds * S * W),
+        stats=kv.stats(),           # the unified nested KVProtocol shape
+    )
+
+
+def run_sessions(svc, reqs, n_sessions: int, repeats: int) -> dict:
+    """The async path: the SAME requests, request i owned by client
+    session i mod M.  Each client enqueues its next request as soon as
+    its ring has room and polls completions by ticket; the service packs
+    all clients' pending ops into every routed round."""
+    sess = [svc.open_session() for _ in range(n_sessions)]
+    assign = [[] for _ in range(n_sessions)]
+    for i, r in enumerate(reqs):
+        assign[i % n_sessions].append(r)
+
+    def serve_stream(check: bool):
+        queues = [list(a) for a in assign]
+        outstanding = [[] for _ in range(n_sessions)]
+        ok_reads = 0
+
+        def poll(m):
+            nonlocal ok_reads
+            done, st, _ = sess[m].poll(outstanding[m])
+            if check:
+                ok_reads += int((np.asarray(st)[done] == ST_OK).sum())
+            outstanding[m] = [t for t, d
+                              in zip(outstanding[m], done) if not d]
+
+        # steady state: one packed round per iteration; a client only
+        # round-trips to the host (poll) when its ring lacks room for
+        # its next request — completions otherwise stay on device and
+        # the step chain pipelines through JAX async dispatch
+        while any(queues):
+            for m, s in enumerate(sess):
+                if not queues[m]:
+                    continue
+                need = len(queues[m][0][0])
+                if s.capacity - s.in_use < need and outstanding[m]:
+                    poll(m)
+                if s.capacity - s.in_use >= need:
+                    tk = s.enqueue(*queues[m].pop(0))
+                    outstanding[m].extend(int(t) for t in tk)
+            svc.step()
+        # tail: pump the remaining pending ops without host round-trips
+        # (run_until_idle checks a single device bool per round), then
+        # one poll per session collects everything at once
+        svc.run_until_idle()
+        for m in range(n_sessions):
+            if outstanding[m]:
+                poll(m)
+        assert not any(outstanding), "uncollected tickets after idle"
+        return ok_reads
+
+    ok = serve_stream(check=True)                       # compile + check
+    assert ok > 0, "no completions collected"
+    r0 = svc.pack_rounds
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        serve_stream(check=False)
+        best = min(best, time.perf_counter() - t0)
+    svc.check_invariants()
+    n_ops = sum(len(k) for k, _, _ in reqs)
+    return dict(
+        ops_per_s=n_ops / best, seconds=best, n_ops=n_ops,
+        rounds=(svc.pack_rounds - r0) / repeats,
+        slab_occupancy=svc.slab_occupancy(),
+        stats=svc.stats(),
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke mode: minimal sizes + the packing gate")
+    ap.add_argument("--out", default=None, help="write results JSON here")
+    ap.add_argument("--engine", default="fused",
+                    choices=("jnp", "fused", "fused_ref", "fused_pallas"))
+    ap.add_argument("--repeats", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    S = 4
+    if args.tiny:
+        n_keys, W, vw = 4096, 128, 2
+        n_sessions, depth, req_size, n_req = 8, 128, 32, 64
+        repeats, theta, hot_frac, read_frac = 3, 0.99, 0.9, 0.5
+    else:
+        n_keys, W, vw = 1 << 15, 256, 8
+        n_sessions, depth, req_size, n_req = 8, 256, 64, 128
+        repeats, theta, hot_frac, read_frac = 3, 0.99, 0.9, 0.5
+    if args.repeats:
+        repeats = args.repeats
+
+    hot_keys = shard_keyset(n_keys, 0, S)   # demand piles onto shard 0
+    rng = np.random.default_rng(17)
+    reqs = make_requests(rng, n_keys, hot_keys, n_req, req_size, vw,
+                         hot_frac, theta, read_frac)
+
+    store_kw = dict(mem_frac=0.25, value_width=vw, engine=args.engine,
+                    lanes=W, trigger=0.8, compact_batch=min(W, 1024),
+                    index_frac=0.7)
+    kv = make_sharded_kv(n_keys, S, **store_kw)
+    preload(kv, n_keys, vw)
+    sync = run_sync(kv, reqs, repeats)
+
+    svc = make_session_kv(n_keys, S, max_sessions=n_sessions,
+                          session_depth=depth, **store_kw)
+    preload(svc.kv, n_keys, vw)             # same state, pool untouched
+    asyn = run_sessions(svc, reqs, n_sessions, repeats)
+
+    results = dict(
+        backend=jax.default_backend(), n_devices=len(jax.devices()),
+        n_keys=n_keys, n_shards=S, lanes=W, tiny=bool(args.tiny),
+        engine=args.engine, n_sessions=n_sessions, session_depth=depth,
+        req_size=req_size, n_req=n_req, hot_frac=hot_frac, theta=theta,
+        read_frac=read_frac, sync=sync, sessions=asyn,
+        speedup=asyn["ops_per_s"] / sync["ops_per_s"],
+        occupancy_gain=(asyn["slab_occupancy"]
+                        / max(sync["slab_occupancy"], 1e-9)),
+    )
+    print(f"sync     {sync['ops_per_s'] / 1e3:9.1f} kops/s "
+          f"rounds={sync['rounds']:.0f} "
+          f"occupancy={sync['slab_occupancy']:.3f}")
+    print(f"sessions {asyn['ops_per_s'] / 1e3:9.1f} kops/s "
+          f"rounds={asyn['rounds']:.0f} "
+          f"occupancy={asyn['slab_occupancy']:.3f}")
+    print(f"    speedup {results['speedup']:.2f}x, occupancy "
+          f"{results['occupancy_gain']:.2f}x")
+
+    if args.tiny:
+        # the smoke gate: packing must not lose throughput on the
+        # hot-shard mix, and the slab occupancy — the quantity the
+        # packer exists to raise — must STRICTLY improve
+        assert results["speedup"] >= 1.0, (
+            f"sessions slower than synchronous serving: "
+            f"{results['speedup']:.2f}x")
+        assert asyn["slab_occupancy"] > sync["slab_occupancy"], (
+            f"slab occupancy did not improve: "
+            f"{asyn['slab_occupancy']:.3f} <= {sync['slab_occupancy']:.3f}")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.out}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

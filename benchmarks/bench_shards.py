@@ -101,7 +101,7 @@ def run_config(kv: ShardedKV, batches, repeats: int) -> dict:
         shard_occupancy=stats.occupancy.tolist(),
         hot_fill_per_shard=np.round(stats.hot_fill, 4).tolist(),
         compactions_per_shard=kv.compactions.tolist(),
-        shard_stats=stats.to_dict(),
+        stats=kv.stats(),       # the unified nested KVProtocol shape
     )
 
 

@@ -24,6 +24,8 @@ from repro.core import KV, F2Config, OP_UPSERT
 from repro.core.rebalance import RebalanceConfig
 from repro.core.replication import ReplicatedKV
 from repro.core.sharded import ShardedKV
+from repro.serve.serve_step import (ServiceConfig, make_kv_service,
+                                    make_session_service)
 from .ycsb import Zipf, make_ops
 
 N_DISKS = 4
@@ -168,8 +170,10 @@ def make_sharded_kv(n_keys: int, n_shards: int, mem_frac: float = 0.10,
                       / cfg.hot_capacity)
         kw.setdefault("faster_compaction", "lookup")
         kw.setdefault("compact_frac", 0.15)
-    return ShardedKV(cfg, n_shards, mode=mode, lanes=lanes,
-                     dispatch=dispatch, rebalance_cfg=rebalance_cfg, **kw)
+    sc = ServiceConfig(n_shards=n_shards, lanes=lanes, dispatch=dispatch,
+                       rebalance_cfg=rebalance_cfg,
+                       store_kwargs=dict(mode=mode, **kw))
+    return make_kv_service(cfg, sc)
 
 
 def make_replicated_kv(n_keys: int, n_shards: int, n_replicas: int = 2,
@@ -185,9 +189,31 @@ def make_replicated_kv(n_keys: int, n_shards: int, n_replicas: int = 2,
     picks the fan-out policy."""
     cfg = _shard_cfg(n_keys, n_shards, mem_frac, value_width, engine,
                      rc_frac, index_frac, lanes, mode="f2")
-    return ReplicatedKV(cfg, n_shards, n_replicas=n_replicas,
-                        read_selector=read_selector, lanes=lanes,
-                        dispatch=dispatch, **kw)
+    sc = ServiceConfig(n_shards=n_shards, lanes=lanes, dispatch=dispatch,
+                       n_replicas=n_replicas, read_selector=read_selector,
+                       store_kwargs=dict(**kw))
+    return make_kv_service(cfg, sc)
+
+
+def make_session_kv(n_keys: int, n_shards: int, max_sessions: int = 8,
+                    session_depth: int = 64, mem_frac: float = 0.10,
+                    value_width: int = 25, engine: str = "fused",
+                    lanes: int = None, dispatch: str = "auto",
+                    rc_frac: float = 0.17, index_frac: float = 0.17,
+                    rebalance_cfg: RebalanceConfig = None, **kw):
+    """The async serving stack over the `make_sharded_kv` store recipe:
+    a `KVSessionService` whose pool packs pending ops from up to
+    `max_sessions` concurrent sessions into every routed round.  Same
+    `_shard_cfg` tuning as the synchronous bench stores, so session vs
+    synchronous comparisons isolate the scheduling change."""
+    cfg = _shard_cfg(n_keys, n_shards, mem_frac, value_width, engine,
+                     rc_frac, index_frac, lanes, mode="f2")
+    sc = ServiceConfig(n_shards=n_shards, lanes=lanes, dispatch=dispatch,
+                       rebalance_cfg=rebalance_cfg,
+                       max_sessions=max_sessions,
+                       session_depth=session_depth,
+                       store_kwargs=dict(**kw))
+    return make_session_service(cfg, sc)
 
 
 def load_store(kv: KV, n_keys: int, batch: int = 4096, seed: int = 1):

@@ -9,6 +9,12 @@
 3. The replica axis end-to-end: an R=2 `ReplicatedKV` — fan-out reads
    under a hot key set (deferral rounds drop vs R=1), a drop→resync
    cycle, and a read-back assert pinned to the resynced replica.
+4. The async session layer: two ticketed sessions sharing one store —
+   cross-session batch packing fills the routed slabs, completions
+   surface out of order via poll(), per-session FIFO order holds.
+
+Stores build through `serve_step.make_kv_service(cfg, ServiceConfig(...))`
+— the one deployment-shape value (shards, replicas, lanes, sessions).
 
     PYTHONPATH=src python examples/kv_store_demo.py
 """
@@ -29,15 +35,17 @@ def sharded_demo():
 
     from repro.core import F2Config, OP_READ, OP_RMW, ST_OK
     from repro.core import shard_router
-    from repro.serve.serve_step import kv_service_step, make_kv_service
+    from repro.serve.serve_step import (ServiceConfig, kv_service_step,
+                                        make_kv_service)
 
     cfg = F2Config(hot_index_size=1 << 10, hot_capacity=1 << 11,
                    hot_mem=1 << 8, cold_capacity=1 << 14, cold_mem=1 << 7,
                    n_chunks=1 << 8, chunklog_capacity=1 << 11,
                    chunklog_mem=1 << 6, rc_capacity=1 << 8, value_width=4)
     S = 4
-    kv = make_kv_service(cfg, n_shards=S, trigger=0.6, compact_frac=0.5,
-                         compact_batch=256, donate=False)
+    kv = make_kv_service(cfg, ServiceConfig(
+        n_shards=S, store_kwargs=dict(trigger=0.6, compact_frac=0.5,
+                                      compact_batch=256, donate=False)))
     print(f"\n=== sharded store: S={S}, dispatch={kv.dispatch} ===")
 
     # load: 4096 keys hash-spread across the shards in one routed batch each
@@ -86,15 +94,17 @@ def replicated_demo():
     from repro.core import F2Config, ST_OK
     from repro.core import shard_router
     from repro.core.replication import replicas_byte_identical
-    from repro.serve.serve_step import kv_service_read, make_kv_service
+    from repro.serve.serve_step import (ServiceConfig, kv_service_read,
+                                        make_kv_service)
 
     cfg = F2Config(hot_index_size=1 << 10, hot_capacity=1 << 12,
                    hot_mem=1 << 8, cold_capacity=1 << 14, cold_mem=1 << 7,
                    n_chunks=1 << 8, chunklog_capacity=1 << 11,
                    chunklog_mem=1 << 6, rc_capacity=1 << 8, value_width=4)
     S, R, W = 4, 2, 64
-    kv = make_kv_service(cfg, n_shards=S, n_replicas=R, lanes=W,
-                         trigger=0.8, compact_batch=256, donate=False)
+    kv = make_kv_service(cfg, ServiceConfig(
+        n_shards=S, n_replicas=R, lanes=W,
+        store_kwargs=dict(trigger=0.8, compact_batch=256, donate=False)))
     print(f"\n=== replicated store: R={R}, S={S}, lanes={W}, "
           f"dispatch={kv.dispatch} ===")
 
@@ -133,6 +143,49 @@ def replicated_demo():
           f"read-back pinned to the resynced replica OK")
 
 
+def session_demo():
+    from repro.core import F2Config, OP_READ, OP_UPSERT, ST_OK
+    from repro.serve.serve_step import ServiceConfig, make_session_service
+
+    cfg = F2Config(hot_index_size=1 << 10, hot_capacity=1 << 12,
+                   hot_mem=1 << 8, cold_capacity=1 << 14, cold_mem=1 << 7,
+                   n_chunks=1 << 8, chunklog_capacity=1 << 11,
+                   chunklog_mem=1 << 6, rc_capacity=1 << 8, value_width=4)
+    svc = make_session_service(cfg, ServiceConfig(
+        n_shards=4, lanes=32, max_sessions=4, session_depth=32,
+        store_kwargs=dict(donate=False)))
+    print("\n=== async sessions: S=4, lanes=32, depth=32 ===")
+
+    writer, reader = svc.open_session(), svc.open_session()
+    keys = np.arange(64, dtype=np.int32)
+    vals = np.stack([keys, keys, keys, keys], 1).astype(np.int32)
+    # seed the first half of the key space and collect the completions
+    t_w1 = writer.enqueue(keys[:32], np.full(32, OP_UPSERT, np.int32),
+                          vals[:32])
+    svc.run_until_idle()
+    writer.poll(t_w1)
+    # now the writer enqueues the second half WHILE the reader enqueues
+    # reads of the durable first half — one packed round serves both
+    # sessions' ops (the slab lanes a lone session would leave empty)
+    t_w2 = writer.enqueue(keys[32:], np.full(32, OP_UPSERT, np.int32),
+                          vals[32:])
+    t_r = reader.enqueue(keys[:16], np.full(16, OP_READ, np.int32))
+    packed = svc.step(sync=True)
+    print(f"one round packed {packed} lanes from 2 sessions "
+          f"(writer tickets {t_w2[0]}..{t_w2[-1]}, reader {t_r[0]}..)")
+    svc.run_until_idle()
+    done, st, out = reader.poll(t_r)        # out-of-order collection
+    assert done.all() and np.all(st == ST_OK)
+    assert np.array_equal(np.asarray(out)[:, 0], keys[:16])
+    tk, st, _ = writer.drain()              # FIFO per session
+    assert list(tk) == sorted(tk) and np.all(st == ST_OK)
+    svc.check_invariants()
+    s = svc.stats()["sessions"]
+    print(f"reader polled its reads before the writer drained; "
+          f"slab occupancy {s['slab_occupancy']:.2f} over "
+          f"{s['pack_rounds']} packed rounds")
+
+
 def main():
     res = run(n_keys=1 << 14, windows=10, win_ops=1 << 13, batch=1024)
     print(report(res))
@@ -142,6 +195,7 @@ def main():
           "touched by compaction, so it stays flat.")
     sharded_demo()
     replicated_demo()
+    session_demo()
 
 
 if __name__ == "__main__":

@@ -7,10 +7,13 @@ Public API:
     plus the functional layers for power users:
     store.{create,apply,read_batch,write_batch,read_begin,read_finish},
     compaction.{hot_cold_step,cold_cold_step,conditional_insert_hot,...},
-    shard_router.{shard_of,bucket_of,route,unroute}, sharded.create,
-    rebalance.{RebalanceConfig,ShardStats,plan_moves} (live resharding).
+    shard_router.{shard_of,bucket_of,route,unroute,pack_from_pool},
+    sharded.create, rebalance.{RebalanceConfig,ShardStats,plan_moves}
+    (live resharding).  `KVProtocol` is the structural serving contract
+    every facade (and serve.sessions.KVSessionService) satisfies.
 """
 from .api import KV
+from .protocol import KVProtocol
 from .rebalance import RebalanceConfig, ShardStats
 from .replication import ReplicatedKV
 from .sharded import ShardedKV
@@ -18,15 +21,15 @@ from .types import (BLOCK_BYTES, OP_DELETE, OP_NOOP, OP_READ, OP_RMW,
                     OP_UPSERT, ST_CREATED, ST_NONE, ST_NOT_FOUND, ST_OK,
                     F2Config, IoStats)
 from . import (chain, cold_index, compaction, groups, hybrid_log,
-               probe_engine, read_cache, rebalance, replication,
+               probe_engine, protocol, read_cache, rebalance, replication,
                shard_router, sharded, store, write_engine)
 
 __all__ = [
-    "KV", "ShardedKV", "ReplicatedKV", "F2Config", "IoStats", "BLOCK_BYTES",
-    "RebalanceConfig", "ShardStats",
+    "KV", "ShardedKV", "ReplicatedKV", "KVProtocol", "F2Config", "IoStats",
+    "BLOCK_BYTES", "RebalanceConfig", "ShardStats",
     "OP_NOOP", "OP_READ", "OP_UPSERT", "OP_RMW", "OP_DELETE",
     "ST_NONE", "ST_OK", "ST_NOT_FOUND", "ST_CREATED",
     "chain", "cold_index", "compaction", "groups", "hybrid_log",
-    "probe_engine", "read_cache", "rebalance", "replication",
+    "probe_engine", "protocol", "read_cache", "rebalance", "replication",
     "shard_router", "sharded", "store", "write_engine",
 ]

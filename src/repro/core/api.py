@@ -184,6 +184,14 @@ class KV:
             mem_hits=int(s.mem_hits),
         )
 
+    def stats(self) -> dict:
+        """The nested KVProtocol telemetry shape (`io` / `shards` /
+        `replicas` / `sessions` sub-dicts; only `io` applies to the flat
+        store).  Every facade — KV, ShardedKV, ReplicatedKV, and the
+        session service — returns this same structure, so dashboards and
+        benches consume one shape regardless of the deployment."""
+        return dict(io=self.io_stats())
+
     def memory_model_bytes(self) -> dict:
         """In-memory footprint of each component under the paper's geometry
         (8 B index entries, record_bytes records, 256 B chunks)."""

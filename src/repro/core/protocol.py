@@ -1,0 +1,54 @@
+"""KVProtocol: the one serving surface every store facade satisfies.
+
+The repo has grown a stack of facades — `api.KV` (one store),
+`sharded.ShardedKV` (S routed shards), `replication.ReplicatedKV` (R
+replica copies), and `serve.sessions.KVSessionService` (ticketed async
+sessions) — each built on the previous one.  Their value is that callers
+cannot tell them apart: a benchmark, a demo, or the serving loop written
+against this protocol runs unchanged on any of them.  The protocol pins
+that contract structurally (`runtime_checkable`, so conformance is an
+`isinstance` check) and `tests/test_protocol.py` pins it behaviorally
+with one parametrized conformance suite, so future facades cannot drift.
+
+Surface (all batch-first, int32 everywhere):
+
+    apply(keys, ops, vals=None) -> (status [B], vals [B, V])
+        mixed op batch (OP_READ/UPSERT/RMW/DELETE; OP_NOOP lanes ignored)
+    read(keys)          -> (status [B], vals [B, V])   read hot path
+    upsert(keys, vals)  -> (status [B], vals [B, V])
+    rmw(keys, deltas)   -> (status [B], vals [B, V])   add-merge, creates
+    delete(keys)        -> (status [B], vals [B, V])
+    stats()             -> nested telemetry dict: an `io` sub-dict always
+        (read_bytes/write_bytes/read_ops/mem_hits), plus `shards` /
+        `replicas` / `sessions` sub-dicts as the deployment grows axes
+    check_invariants()  -> raises AssertionError on a broken store
+"""
+from __future__ import annotations
+
+from typing import Protocol, Tuple, runtime_checkable
+
+
+@runtime_checkable
+class KVProtocol(Protocol):
+    """Structural interface of a servable key-value store facade."""
+
+    def apply(self, keys, ops, vals=None) -> Tuple:
+        ...
+
+    def read(self, keys) -> Tuple:
+        ...
+
+    def upsert(self, keys, vals) -> Tuple:
+        ...
+
+    def rmw(self, keys, deltas) -> Tuple:
+        ...
+
+    def delete(self, keys) -> Tuple:
+        ...
+
+    def stats(self) -> dict:
+        ...
+
+    def check_invariants(self) -> None:
+        ...

@@ -316,40 +316,42 @@ class ReplicatedKV(ShardedKV):
         self._read_step = jax.jit(fan_out_read)
 
     # -- batched operations ---------------------------------------------------
+    def apply_round(self, keys, ops, vals=None, _rep_do=None):
+        """One fan-in routed round: every selected replica (default: all
+        alive) applies the identical routed slabs, results come from the
+        primary replica.  Same contract as `ShardedKV.apply_round` — the
+        session scheduler drives this entry under replication."""
+        keys, ops, vals = self._coerce(keys, ops, vals)
+        rep_do = np.asarray(self.alive if _rep_do is None else _rep_do, bool)
+        h = self._primary(rep_do)
+        (self.state, st_r, rv_r, placed, deferred,
+         occ, bc) = self._step(self.state, keys, ops, vals,
+                               self._bucket_map_dev, jnp.asarray(rep_do))
+        self._note_round(occ, bc)
+        self.maybe_compact()
+        return st_r[h], rv_r[h], placed, deferred
+
     def apply(self, keys, ops, vals=None, _rep_do=None):
         """Fan-in: every selected replica (default: all alive) applies the
         identical routed batch; results come from the primary replica.
         Deferral, the pressure scheduler and the rebalance check work
         exactly like ShardedKV."""
-        keys = jnp.asarray(keys, jnp.int32)
-        ops = jnp.asarray(ops, jnp.int32)
-        if vals is None:
-            vals = jnp.zeros((keys.shape[0], self.cfg.value_width), jnp.int32)
-        else:
-            vals = jnp.asarray(vals, jnp.int32)
+        keys, ops, vals = self._coerce(keys, ops, vals)
         B = keys.shape[0]
-        rep_do = np.asarray(self.alive if _rep_do is None else _rep_do, bool)
-        h = self._primary(rep_do)
-        rd = jnp.asarray(rep_do)
-        bmap = self._bucket_map_dev
         if self.lanes is None or self.lanes >= B:
-            (self.state, st_r, rv_r, _placed, _deferred,
-             occ, bc) = self._step(self.state, keys, ops, vals, bmap, rd)
-            self._note_round(occ, bc)
-            self.maybe_compact()
+            status, rvals, _placed, _deferred = self.apply_round(
+                keys, ops, vals, _rep_do=_rep_do)
             self.maybe_rebalance()
-            return st_r[h], rv_r[h]
+            return status, rvals
         status = np.zeros(B, np.int32)
         rvals = np.zeros((B, self.cfg.value_width), np.int32)
         cur_ops = ops
         for _ in range(B + 1):
-            (self.state, st_r, rv_r, placed, deferred,
-             occ, bc) = self._step(self.state, keys, cur_ops, vals, bmap, rd)
+            st_r, rv_r, placed, deferred = self.apply_round(
+                keys, cur_ops, vals, _rep_do=_rep_do)
             placed_np = np.asarray(placed)
-            self._note_round(occ, bc)
-            status = np.where(placed_np, np.asarray(st_r[h]), status)
-            rvals = np.where(placed_np[:, None], np.asarray(rv_r[h]), rvals)
-            self.maybe_compact()
+            status = np.where(placed_np, np.asarray(st_r), status)
+            rvals = np.where(placed_np[:, None], np.asarray(rv_r), rvals)
             deferred_np = np.asarray(deferred)
             if not deferred_np.any():
                 break
@@ -548,6 +550,13 @@ class ReplicatedKV(ShardedKV):
             resyncs=self.resyncs,
             resynced_records=self.resynced_records,
         )
+
+    def stats(self) -> dict:
+        """The nested KVProtocol telemetry shape, with the per-replica
+        sub-dict added (liveness, load EWMA, lifecycle counters)."""
+        out = super().stats()
+        out["replicas"] = self.replica_stats()
+        return out
 
     # shard_stats is inherited: the base assembles it through `_host_view`,
     # which picks the primary alive replica's rows here — fills/records at

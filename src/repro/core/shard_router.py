@@ -146,6 +146,96 @@ def route(
     return skeys, sops, svals, rt
 
 
+def pack_from_pool(
+    keys: jax.Array,     # int32 [N, C] per-session ring slots
+    ops: jax.Array,      # int32 [N, C]
+    vals: jax.Array,     # int32 [N, C, V]
+    ticket: jax.Array,   # int32 [N, C] global enqueue sequence number
+    pending: jax.Array,  # bool  [N, C] slot holds an unexecuted op
+    n_shards: int,
+    lanes: int,
+    bucket_map: jax.Array,  # int32 [n_buckets] -> shard
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array,
+           jax.Array, jax.Array]:
+    """Cross-session batch packing: select pending ops from *many* session
+    rings into ONE routed round's worth of lanes — at most `lanes` per
+    shard, so the batch routes with zero deferral and every shard's slab
+    is as full as the pool allows (the slots deferral would leave empty
+    are filled with other sessions' work instead).
+
+    Selection is oldest-ticket-first per shard (tickets are the global
+    enqueue order, so the scheme is global FIFO arbitration: the oldest
+    pending op in the pool is ALWAYS selected, which is the liveness
+    guarantee — no op, and hence no session, can starve), then closed
+    under per-session prefixes: an op is only packed if every older
+    pending op of the *same session* is packed too.  The emitted batch
+    lists lanes in ascending ticket order, so a session's ops occupy
+    ascending lane positions; the router's stable sort preserves that
+    order inside each shard's slab, and the store linearizes a slab in
+    lane order — execution is therefore bit-exact with a serial replay
+    that interleaves the sessions in ticket order while keeping each
+    session's ops in FIFO order.
+
+    Returns (bkeys [S*W], bops [S*W], bvals [S*W, V], sess [S*W],
+    slot [S*W], valid [S*W], fill [S]):  `sess`/`slot` locate each lane's
+    source ring slot (for the completion scatter), `valid` marks real
+    lanes (the rest are OP_NOOP padding), `fill` counts packed lanes per
+    shard (the slab-occupancy telemetry the session bench gates on).
+    Pure jnp, jit-friendly, static shapes."""
+    N, C = keys.shape
+    S, W = n_shards, lanes
+    B, NC = S * W, N * C
+    imax = jnp.int32(np.iinfo(np.int32).max)
+    k_f = keys.reshape(NC)
+    o_f = ops.reshape(NC)
+    v_f = vals.reshape(NC, vals.shape[-1])
+    t_f = ticket.reshape(NC)
+    p_f = pending.reshape(NC)
+    bucket = bucket_of(k_f, bucket_map.shape[0])
+    sid = jnp.where(p_f, bucket_map[bucket].astype(jnp.int32), jnp.int32(S))
+    tkt = jnp.where(p_f, t_f, imax)
+
+    # per-shard capacity: rank every pending op within its shard by ticket
+    # (two stable argsorts = lexsort by (shard, ticket)); the W lowest
+    # tickets of each shard fit this round
+    o1 = jnp.argsort(tkt, stable=True)
+    order = o1[jnp.argsort(sid[o1], stable=True)]
+    sid_sorted = sid[order]
+    counts_full = jnp.zeros((S + 1,), jnp.int32).at[sid].add(1)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts_full)[:-1]])
+    pos_sorted = jnp.arange(NC, dtype=jnp.int32) - offsets[sid_sorted]
+    fits_sorted = (sid_sorted < S) & (pos_sorted < W)
+    fits = jnp.zeros((NC,), jnp.bool_).at[order].set(fits_sorted)
+
+    # per-session FIFO prefix closure: a slot is packed only if every
+    # older pending slot of its session is packed (cumulative AND in
+    # ticket order along each ring; non-pending slots sort last)
+    ordc = jnp.argsort(tkt.reshape(N, C), axis=1, stable=True)
+    fits_c = jnp.take_along_axis(fits.reshape(N, C), ordc, axis=1)
+    closed = jnp.cumprod(fits_c.astype(jnp.int32), axis=1) > 0
+    rows = jnp.arange(N, dtype=jnp.int32)[:, None]
+    accepted = (jnp.zeros((N, C), jnp.bool_).at[rows, ordc].set(closed)
+                .reshape(NC)) & p_f
+
+    # emit: accepted lanes in ascending global-ticket order, NOOP padding
+    tkt_acc = jnp.where(accepted, t_f, imax)
+    sel = jnp.argsort(tkt_acc, stable=True)[:min(B, NC)]
+    valid = accepted[sel]
+    pad = B - sel.shape[0]
+    if pad:
+        sel = jnp.concatenate([sel, jnp.zeros((pad,), sel.dtype)])
+        valid = jnp.concatenate([valid, jnp.zeros((pad,), jnp.bool_)])
+    bkeys = jnp.where(valid, k_f[sel], 0)
+    bops = jnp.where(valid, o_f[sel], jnp.int32(OP_NOOP))
+    bvals = jnp.where(valid[:, None], v_f[sel], 0)
+    sess = jnp.where(valid, (sel // C).astype(jnp.int32), jnp.int32(-1))
+    slot = jnp.where(valid, (sel % C).astype(jnp.int32), jnp.int32(-1))
+    fill = jnp.zeros((S + 1,), jnp.int32).at[
+        jnp.where(accepted, sid, jnp.int32(S))].add(1)[:S]
+    return bkeys, bops, bvals, sess, slot, valid, fill
+
+
 REPLICA_POLICIES = ("round_robin", "least_loaded")
 
 

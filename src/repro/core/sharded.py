@@ -357,39 +357,56 @@ class ShardedKV:
         return self._routed_lanes.copy()    # folding mutates the internal
 
     # -- batched operations --------------------------------------------------
-    def apply(self, keys, ops, vals=None):
-        """Route, execute, inverse-gather.  With lanes=None this is one
-        round (bit-exact with one store.apply per shard); with a narrower
-        slab, over-capacity lanes defer to follow-up rounds, each followed
-        by a scheduler pass, until every lane has executed."""
+    def _coerce(self, keys, ops, vals):
         keys = jnp.asarray(keys, jnp.int32)
         ops = jnp.asarray(ops, jnp.int32)
         if vals is None:
             vals = jnp.zeros((keys.shape[0], self.cfg.value_width), jnp.int32)
         else:
             vals = jnp.asarray(vals, jnp.int32)
+        return keys, ops, vals
+
+    def apply_round(self, keys, ops, vals=None):
+        """Exactly ONE routed round — route, lifted apply, inverse-gather,
+        then a pressure-scheduler pass.  Returns (status [B], vals [B, V],
+        placed [B], deferred [B]) as device arrays with no host sync:
+        lanes beyond a shard's slab width come back `deferred` and were
+        NOT executed.  This is the entry the session scheduler drives (it
+        packs <= `lanes` ops per shard, so its rounds never defer); `apply`
+        is the synchronous loop over it.  The rebalance check is per
+        *batch*, not per round — callers run `maybe_rebalance()` at their
+        own batch boundary."""
+        keys, ops, vals = self._coerce(keys, ops, vals)
+        (self.state, status, rvals, placed, deferred,
+         occ, bc) = self._step(self.state, keys, ops, vals,
+                               self._bucket_map_dev)
+        self._note_round(occ, bc)
+        self.maybe_compact()
+        return status, rvals, placed, deferred
+
+    def apply(self, keys, ops, vals=None):
+        """Route, execute, inverse-gather.  With lanes=None this is one
+        round (bit-exact with one store.apply per shard); with a narrower
+        slab, over-capacity lanes defer to follow-up rounds, each followed
+        by a scheduler pass, until every lane has executed."""
+        keys, ops, vals = self._coerce(keys, ops, vals)
         B = keys.shape[0]
-        bmap = self._bucket_map_dev     # re-uploaded only at a map flip
         if self.lanes is None or self.lanes >= B:
             # single-round fast path: deferral is impossible, so no host
             # round-trips of per-lane results (the serving hot path)
-            (self.state, status, rvals, _placed, _deferred,
-             occ, bc) = self._step(self.state, keys, ops, vals, bmap)
-            self._note_round(occ, bc)
-            self.maybe_compact()
+            status, rvals, _placed, _deferred = self.apply_round(keys, ops,
+                                                                 vals)
             self.maybe_rebalance()
             return status, rvals
         status = np.zeros(B, np.int32)
         rvals = np.zeros((B, self.cfg.value_width), np.int32)
         cur_ops = ops
         for _ in range(B + 1):          # each round places >= 1 lane
-            (self.state, st_r, rv_r, placed, deferred,
-             occ, bc) = self._step(self.state, keys, cur_ops, vals, bmap)
+            st_r, rv_r, placed, deferred = self.apply_round(keys, cur_ops,
+                                                            vals)
             placed_np = np.asarray(placed)
-            self._note_round(occ, bc)
             status = np.where(placed_np, np.asarray(st_r), status)
             rvals = np.where(placed_np[:, None], np.asarray(rv_r), rvals)
-            self.maybe_compact()
             deferred_np = np.asarray(deferred)
             if not deferred_np.any():
                 break
@@ -586,6 +603,26 @@ class ShardedKV:
             shard_traffic=load,
             imbalance=rebalance.imbalance_of(load),
             bucket_map=self.bucket_map.copy(),
+        )
+
+    def stats(self) -> dict:
+        """The ONE nested telemetry shape every facade speaks (KVProtocol):
+        an `io` sub-dict (KV.io_stats totals) plus, per facade, `shards`
+        (this class), `replicas` (ReplicatedKV) and `sessions`
+        (serve.sessions.KVSessionService) sub-dicts — what an operator
+        dashboard polls, what `serve_step.kv_service_stats` returns, and
+        what the benches report from."""
+        return dict(
+            io=self.io_stats(),
+            shards=dict(
+                n_shards=self.S,
+                rounds=self.rounds,
+                **self.shard_stats().to_dict(),
+                compactions=self.compactions.tolist(),
+                migrations=self.migrations,
+                migrated_buckets=self.migrated_buckets,
+                migrated_records=self.migrated_records,
+            ),
         )
 
     def maybe_rebalance(self) -> bool:

@@ -19,6 +19,8 @@ live-resynced without stopping the service.
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -44,13 +46,56 @@ def decode_step(cfg: ModelConfig, params, cache, tokens):
 # F2 KV service (key-value traffic served alongside the model)
 # ---------------------------------------------------------------------------
 
-def make_kv_service(kv_cfg, n_shards: int = 1, lanes: Optional[int] = None,
-                    dispatch: str = "auto", rebalance_cfg=None,
-                    n_replicas: int = 1, read_selector: str = "round_robin",
-                    **kw):
-    """Backing store for a KV-serving deployment: `n_shards` hash-routed F2
-    shards behind one deterministic batch router (`core.shard_router`),
-    optionally replicated `n_replicas` ways (`core.replication`).
+@dataclasses.dataclass
+class ServiceConfig:
+    """Deployment shape of the KV service, separated from the store
+    geometry (`F2Config`): how many shards and replicas, how batches
+    route, whether the live rebalancer is armed, and — for the async
+    session layer — how many sessions the pool holds and how deep each
+    ring is.  `make_kv_service(kv_cfg, ServiceConfig(...))` replaces the
+    old splat of keyword arguments (still accepted through a deprecation
+    shim) so deployments are one comparable, serializable value."""
+
+    n_shards: int = 1               # hash-routed F2 shards (power of 2)
+    lanes: Optional[int] = None     # per-shard slab width (None: 1 round)
+    dispatch: str = "auto"          # "auto" | "vmap" | "shard_map"
+    rebalance_cfg: Any = None       # core.rebalance.RebalanceConfig
+    n_replicas: int = 1             # replica copies of every shard
+    read_selector: str = "round_robin"   # fan-out read policy
+    # -- async session layer (make_session_service) --
+    max_sessions: int = 8           # concurrent Session handles
+    session_depth: int = 64         # per-session ring slots
+    pack_lanes: Optional[int] = None    # per-shard pack width (None: lanes)
+    # -- pass-through store knobs (mode/trigger/compact_batch/...) --
+    store_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+_LEGACY_KEYS = ("n_shards", "lanes", "dispatch", "rebalance_cfg",
+                "n_replicas", "read_selector", "max_sessions",
+                "session_depth", "pack_lanes")
+
+
+def _coerce_service_cfg(service, kw: dict) -> ServiceConfig:
+    """The deprecation shim: accept the pre-ServiceConfig keyword-splat
+    call shape (`make_kv_service(cfg, n_shards=8, lanes=64, mode=...)`),
+    fold it into a ServiceConfig, and warn once per call site."""
+    if service is not None:
+        assert not kw, f"pass store knobs in store_kwargs, got {sorted(kw)}"
+        return service
+    if kw:
+        warnings.warn(
+            "make_kv_service(**kwargs) is deprecated: pass a "
+            "ServiceConfig (store knobs go in store_kwargs)",
+            DeprecationWarning, stacklevel=3)
+    fields = {k: kw.pop(k) for k in _LEGACY_KEYS if k in kw}
+    return ServiceConfig(store_kwargs=kw, **fields)
+
+
+def make_kv_service(kv_cfg, service: Optional[ServiceConfig] = None, **kw):
+    """Backing store for a KV-serving deployment: `service.n_shards`
+    hash-routed F2 shards behind one deterministic batch router
+    (`core.shard_router`), optionally replicated `service.n_replicas`
+    ways (`core.replication`).
 
     `dispatch="auto"` places the shard axis — and, when replicated, the
     2-D (replica, shard) grid — across every visible device via shard_map
@@ -69,16 +114,37 @@ def make_kv_service(kv_cfg, n_shards: int = 1, lanes: Optional[int] = None,
     (`kv_service_read`) fan out — each request lane served by exactly one
     replica per `read_selector` ("round_robin" | "least_loaded") — and
     `kv.drop_replica(r)` / `kv.resync(r)` rotate a replica out of and
-    back into serving without downtime."""
-    if n_replicas > 1:
+    back into serving without downtime.
+
+    Legacy keyword-splat calls still work through a deprecation shim."""
+    sc = _coerce_service_cfg(service, kw)
+    if sc.n_replicas > 1:
         from ..core.replication import ReplicatedKV
-        return ReplicatedKV(kv_cfg, n_shards, n_replicas=n_replicas,
-                            read_selector=read_selector, lanes=lanes,
-                            dispatch=dispatch, rebalance_cfg=rebalance_cfg,
-                            **kw)
+        return ReplicatedKV(kv_cfg, sc.n_shards, n_replicas=sc.n_replicas,
+                            read_selector=sc.read_selector, lanes=sc.lanes,
+                            dispatch=sc.dispatch,
+                            rebalance_cfg=sc.rebalance_cfg,
+                            **sc.store_kwargs)
     from ..core.sharded import ShardedKV
-    return ShardedKV(kv_cfg, n_shards, lanes=lanes, dispatch=dispatch,
-                     rebalance_cfg=rebalance_cfg, **kw)
+    return ShardedKV(kv_cfg, sc.n_shards, lanes=sc.lanes,
+                     dispatch=sc.dispatch, rebalance_cfg=sc.rebalance_cfg,
+                     **sc.store_kwargs)
+
+
+def make_session_service(kv_cfg, service: Optional[ServiceConfig] = None,
+                         **kw):
+    """The async serving stack in one call: a sharded/replicated store
+    (`make_kv_service`) wrapped in the ticketed session layer
+    (`serve.sessions.KVSessionService`).  Callers `open_session()` for
+    async enqueue/poll/drain handles; the service packs pending ops from
+    every session into each routed round.  The returned service also
+    satisfies `KVProtocol`, so synchronous callers can use it directly."""
+    from .sessions import KVSessionService
+    sc = _coerce_service_cfg(service, kw)
+    return KVSessionService(make_kv_service(kv_cfg, sc),
+                            max_sessions=sc.max_sessions,
+                            session_depth=sc.session_depth,
+                            pack_lanes=sc.pack_lanes)
 
 
 def kv_service_step(kv, keys, ops, vals=None):
@@ -99,19 +165,12 @@ def kv_service_read(kv, keys):
 
 
 def kv_service_stats(kv) -> dict:
-    """Serving telemetry: the per-shard occupancy/traffic struct
-    (`ShardedKV.shard_stats()`) as a JSON-friendly dict, plus migration
-    counters — what an operator dashboard polls to watch skew and the
-    rebalancer's response.  Replicated services add the per-replica view
-    (liveness, read-load EWMA, drop/resync counters)."""
-    out = kv.shard_stats().to_dict()
-    out.update(migrations=kv.migrations,
-               migrated_records=kv.migrated_records,
-               migrated_buckets=kv.migrated_buckets,
-               rounds=kv.rounds)
-    if hasattr(kv, "replica_stats"):
-        out["replicas"] = kv.replica_stats()
-    return out
+    """Serving telemetry: the unified nested `KVProtocol.stats()` shape —
+    an `io` sub-dict always, plus `shards` / `replicas` / `sessions`
+    sub-dicts as the deployment grows axes.  What an operator dashboard
+    polls to watch skew, the rebalancer's response, replica liveness and
+    session backlog, whichever facade is serving."""
+    return kv.stats()
 
 
 def cache_specs(cfg: ModelConfig, mesh: Optional[jax.sharding.Mesh] = None

@@ -1,0 +1,565 @@
+"""Async session API: ticketed multi-session serving with cross-session
+batch packing (the FASTER lineage's session idea, tensorized).
+
+Every other entry point in the repo is synchronous: one batch routes,
+fans out, completes, and only then does the next enter — so a hot
+shard's deferral rounds (real serialized dispatches) stall every caller
+while the other shards' slabs run half-empty.  The source paper's FASTER
+C# API solves this with *sessions*: callers enqueue operations and
+collect completions out of order, and the store packs work from many
+sessions into every internal round.  This module is that layer on top of
+`ShardedKV`/`ReplicatedKV`.
+
+Pool
+----
+Pending ops live in `SessionPool`: N fixed-capacity per-session rings
+stored as ONE stacked pytree (the hierarchical named-tensor idiom —
+stack heterogeneous per-session state on a leading axis and mask), with
+per-session `head`/`tail` cursors and a per-slot lane state
+(FREE -> PENDING -> DONE -> FREE).  Enqueue, completion scatter and slot
+collection are all jitted scatters on that one structure.
+
+Scheduler
+---------
+`step()` runs one routed round: the jitted packer
+(`shard_router.pack_from_pool`) selects at most `lanes` pending ops per
+*shard* (not per session) in global-ticket order, closed under
+per-session FIFO prefixes, and lays them out in one batch that routes
+with ZERO deferral — the slab slots a hot shard's deferral would leave
+empty in the synchronous path are filled with other sessions' work
+instead.  The batch executes through the store's `apply_round` (the
+single-round entry the synchronous `apply` is itself built on, so the
+pressure scheduler and rebalancer run exactly as they do for
+synchronous batches), and completions scatter back into the pool.
+
+Tickets and ordering
+--------------------
+`Session.enqueue` returns one monotonically increasing global ticket
+per op; `poll(tickets)` collects whichever completions are ready,
+`drain()` pumps the service until the session is empty.  Completions
+surface out of order *across* sessions, but every session's ops are
+packed — and therefore applied — in its FIFO enqueue order, and each
+round's batch is emitted in ascending ticket order, so the realized
+history is the round sequence with the store's documented batch
+semantics (writes linearize in ticket order; reads observe the
+round-entry snapshot — the same per-batch contract synchronous callers
+get).  tests/test_sessions.py proves this bit-exactly: statuses, values
+and state leaves of any enqueue/step/poll interleaving match a twin
+store replaying the recorded round batches, and the client-visible
+results match a dict model folded in ticket order.  Global-ticket
+arbitration also gives the liveness bound: the oldest pending op in the
+pool is packed every round, so no op — and no session — can starve.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import shard_router
+from ..core.types import (OP_DELETE, OP_NOOP, OP_READ, OP_RMW, OP_UPSERT,
+                          ST_NONE)
+
+SLOT_FREE, SLOT_PENDING, SLOT_DONE = 0, 1, 2
+
+
+class SessionPool(NamedTuple):
+    """All sessions' pending-op rings as one stacked pytree: N sessions x
+    C slots, slot = (cursor mod C).  `head`/`tail` are monotone int32
+    counters — [head, tail) is the in-use window; `slot_state` tracks
+    each slot's lifecycle so the packer (PENDING mask), the completion
+    scatter (-> DONE) and collection (-> FREE, head advance) compose as
+    pure pytree -> pytree steps."""
+
+    keys: jax.Array        # int32 [N, C]
+    ops: jax.Array         # int32 [N, C]
+    vals: jax.Array        # int32 [N, C, V]
+    ticket: jax.Array      # int32 [N, C] global enqueue sequence number
+    slot_state: jax.Array  # int32 [N, C] FREE / PENDING / DONE
+    status: jax.Array      # int32 [N, C] completion status
+    rvals: jax.Array       # int32 [N, C, V] completion values
+    head: jax.Array        # int32 [N] collect cursor (monotone)
+    tail: jax.Array        # int32 [N] enqueue cursor (monotone)
+
+
+def create_pool(n_sessions: int, depth: int, value_width: int) -> SessionPool:
+    N, C, V = n_sessions, depth, value_width
+    z = functools.partial(jnp.zeros, dtype=jnp.int32)
+    return SessionPool(
+        keys=z((N, C)), ops=jnp.full((N, C), OP_NOOP, jnp.int32),
+        vals=z((N, C, V)), ticket=z((N, C)), slot_state=z((N, C)),
+        status=z((N, C)), rvals=z((N, C, V)), head=z((N,)), tail=z((N,)))
+
+
+# -- jitted pool kernels (pure pytree -> pytree) -----------------------------
+
+def _enqueue_kernel(pool: SessionPool, sid, keys, ops, vals, t0, n_acc):
+    """Claim the next `n_acc` ring slots of session `sid` (host enforces
+    capacity) and stamp them PENDING with tickets t0, t0+1, ...; lanes
+    past n_acc are rejected (dropped).  Returns only the pool: the
+    ticket values are deterministic on the host (t0 + lane, -1 past
+    n_acc), so enqueue never has to round-trip to the device — the
+    serving loop stays fully async-dispatched."""
+    N, C = pool.keys.shape
+    B = keys.shape[0]
+    idx = jnp.arange(B, dtype=jnp.int32)
+    ok = idx < n_acc
+    row = jnp.where(ok, sid, jnp.int32(N))          # OOB row -> dropped
+    col = jnp.where(ok, (pool.tail[sid] + idx) % C, 0)
+    return pool._replace(
+        keys=pool.keys.at[row, col].set(keys, mode="drop"),
+        ops=pool.ops.at[row, col].set(ops, mode="drop"),
+        vals=pool.vals.at[row, col].set(vals, mode="drop"),
+        ticket=pool.ticket.at[row, col].set(t0 + idx, mode="drop"),
+        slot_state=pool.slot_state.at[row, col].set(
+            jnp.int32(SLOT_PENDING), mode="drop"),
+        tail=pool.tail.at[sid].add(n_acc),
+    )
+
+
+def _commit_kernel(pool: SessionPool, sess, slot, valid, status, rvals):
+    """Scatter one round's completions back into the pool: results land
+    at (sess, slot) and those slots flip PENDING -> DONE."""
+    N = pool.keys.shape[0]
+    row = jnp.where(valid, sess, jnp.int32(N))
+    col = jnp.where(valid, slot, 0)
+    return pool._replace(
+        status=pool.status.at[row, col].set(status, mode="drop"),
+        rvals=pool.rvals.at[row, col].set(rvals, mode="drop"),
+        slot_state=pool.slot_state.at[row, col].set(
+            jnp.int32(SLOT_DONE), mode="drop"))
+
+
+def _free_kernel(pool: SessionPool, sid, mask):
+    """Collection: free the masked slots of session `sid` (mask bool [C],
+    ring-indexed) and advance `head` over the contiguous FREE prefix of
+    the in-use window — freed mid-window slots stay counted against
+    capacity until everything older is collected (ring semantics)."""
+    C = pool.keys.shape[1]
+    state_row = jnp.where(mask, jnp.int32(SLOT_FREE), pool.slot_state[sid])
+    idx = (pool.head[sid] + jnp.arange(C, dtype=jnp.int32)) % C
+    used = jnp.arange(C, dtype=jnp.int32) < (pool.tail[sid] - pool.head[sid])
+    run = jnp.cumprod(jnp.where(
+        used, (state_row[idx] == SLOT_FREE).astype(jnp.int32), 0))
+    return pool._replace(
+        slot_state=pool.slot_state.at[sid].set(state_row),
+        head=pool.head.at[sid].add(run.sum()))
+
+
+class Session:
+    """A caller's handle: enqueue ops, collect completions by ticket.
+    One session's ops execute in FIFO order; different sessions' ops
+    interleave freely inside the service's packed rounds.  Not
+    thread-safe (like a FASTER session: one owner per session)."""
+
+    def __init__(self, svc: "KVSessionService", sid: int):
+        self._svc = svc
+        self.sid = sid
+        self.open = True
+        self._head = 0                  # host mirrors of the device cursors
+        self._tail = 0
+        self._freed: set = set()        # collected cursors ahead of head
+        self._slot_of: dict = {}        # outstanding ticket -> cursor
+        self._fifo: list = []           # outstanding tickets, enqueue order
+
+    @property
+    def capacity(self) -> int:
+        return self._svc.depth
+
+    @property
+    def in_use(self) -> int:
+        return self._tail - self._head
+
+    @property
+    def outstanding(self) -> int:
+        """Ops enqueued and not yet collected (pending or done)."""
+        return len(self._fifo)
+
+    def enqueue(self, keys, ops, vals=None) -> np.ndarray:
+        """Submit a batch; returns one int32 ticket per lane, -1 for
+        lanes that did not fit the ring (retry after poll/drain frees
+        slots).  Tickets are the service-wide enqueue order — the
+        scheduler's arbitration key."""
+        assert self.open, "session is closed"
+        return self._svc._enqueue(self, keys, ops, vals)
+
+    def poll(self, tickets: Sequence[int]):
+        """Non-blocking collection: returns (done [k] bool, status [k],
+        vals [k, V]) aligned with `tickets`.  Completed tickets are
+        collected exactly once — their slots free up for new enqueues;
+        polling them again (or polling a rejected ticket -1) reads
+        done=False."""
+        assert self.open, "session is closed"
+        return self._svc._poll(self, np.asarray(tickets, np.int64))
+
+    def drain(self):
+        """Pump the service until every outstanding op of THIS session
+        completed, then collect them all.  Returns (tickets [m],
+        status [m], vals [m, V]) in enqueue (FIFO) order."""
+        assert self.open, "session is closed"
+        return self._svc._drain(self)
+
+    def close(self):
+        self._svc.close_session(self)
+
+
+class KVSessionService:
+    """Ticketed multi-session serving over a sharded/replicated store.
+
+    `open_session()` hands out up to `max_sessions` concurrent handles,
+    each with a `depth`-slot ring in the shared `SessionPool`.  `step()`
+    executes one cross-session packed round through the store's
+    `apply_round`; `poll`/`drain` on the sessions pump it implicitly.
+    The synchronous `KVProtocol` surface (apply/read/upsert/rmw/delete)
+    is provided through a private session, so anything written against
+    the protocol — benches, demos, conformance tests — runs unchanged on
+    the async service."""
+
+    def __init__(self, kv, max_sessions: int = 8, session_depth: int = 64,
+                 pack_lanes: Optional[int] = None):
+        assert hasattr(kv, "apply_round"), \
+            "KVSessionService needs a routed store (ShardedKV/ReplicatedKV)"
+        assert max_sessions >= 1 and session_depth >= 1
+        self.kv = kv
+        self.N = int(max_sessions)
+        self.depth = int(session_depth)
+        self.W = int(pack_lanes or kv.lanes or session_depth)
+        assert kv.lanes is None or self.W <= kv.lanes, \
+            "pack_lanes wider than the store's slab would defer rounds"
+        self.V = kv.cfg.value_width
+        self.pool = create_pool(self.N, self.depth, self.V)
+        self._sessions: list = [None] * self.N
+        self._sync: Optional[Session] = None    # lazy protocol-facade session
+        self._next_ticket = 0
+        self.tickets_issued = 0
+        self.tickets_rejected = 0
+        self.collected = 0
+        self.pack_rounds = 0
+        self.sessions_opened = 0
+        self._pending_fill: list = []           # unfolded per-round fill [S]
+        self._packed_lanes = 0                  # folded totals
+        self._fill_rounds = 0
+        self._fill_sum = np.zeros(kv.S, np.int64)
+        self.trace_schedule = False             # test hook: record rounds
+        self.schedule: list = []    # [(sess, valid, bkeys, bops, bvals,
+        #                              status, rvals, ticket)] per round
+
+        S, W = kv.S, self.W
+
+        def pack(pool, bmap):
+            return shard_router.pack_from_pool(
+                pool.keys, pool.ops, pool.vals, pool.ticket,
+                pool.slot_state == SLOT_PENDING, S, W, bmap)
+
+        self._pack_j = jax.jit(pack)
+        self._enqueue_j = jax.jit(_enqueue_kernel)
+        self._commit_j = jax.jit(_commit_kernel)
+        self._free_j = jax.jit(_free_kernel)
+
+    # -- session lifecycle ----------------------------------------------------
+    def open_session(self) -> Session:
+        for sid in range(self.N):
+            if self._sessions[sid] is None:
+                s = Session(self, sid)
+                # continue the ring cursors where the previous owner of
+                # this sid left them (slots are FREE, cursors monotone)
+                prev = jax.device_get((self.pool.head[sid],
+                                       self.pool.tail[sid]))
+                s._head, s._tail = int(prev[0]), int(prev[1])
+                assert s._head == s._tail, "reused sid has in-use slots"
+                self._sessions[sid] = s
+                self.sessions_opened += 1
+                return s
+        raise RuntimeError(f"all {self.N} sessions are open")
+
+    def close_session(self, session: Session):
+        assert session.outstanding == 0, \
+            "close_session with outstanding ops: drain() first"
+        self._sessions[session.sid] = None
+        session.open = False
+
+    # -- the scheduler round --------------------------------------------------
+    def total_outstanding(self) -> int:
+        return sum(s.outstanding for s in self._sessions if s is not None)
+
+    def step(self, sync: bool = False):
+        """One cross-session packed round: pack -> apply_round -> commit
+        -> per-batch rebalance check.  With `sync=False` (the serving hot
+        path) nothing round-trips to the host; `sync=True` returns the
+        number of lanes packed (0 = the pool had nothing pending)."""
+        (bkeys, bops, bvals, sess, slot, valid,
+         fill) = self._pack_j(self.pool, self.kv._bucket_map_dev)
+        status, rvals, placed, _deferred = self.kv.apply_round(
+            bkeys, bops, bvals)
+        # by construction the packer never exceeds a shard's slab width,
+        # so nothing defers; `placed` still gates the commit so an
+        # (impossible) unexecuted lane could never read a stale result
+        self.pool = self._commit_j(self.pool, sess, slot, valid & placed,
+                                   status, rvals)
+        self.kv.maybe_rebalance()
+        self.pack_rounds += 1
+        self._pending_fill.append(fill)
+        if self.trace_schedule:
+            tkt = jnp.where(valid, self.pool.ticket[
+                jnp.maximum(sess, 0), jnp.maximum(slot, 0)], jnp.int32(-1))
+            self.schedule.append((sess, valid, bkeys, bops, bvals,
+                                  status, rvals, tkt))
+        if len(self._pending_fill) >= 128:
+            self._fold_fill()
+        if sync:
+            return int(np.asarray(jax.device_get(fill)).sum())
+        return None
+
+    def run_until_idle(self, max_rounds: Optional[int] = None) -> int:
+        """Pump packed rounds until the pool is empty of PENDING ops.
+        Returns rounds executed.  Bounded: global-FIFO packing completes
+        >= 1 op per round whenever anything is pending."""
+        limit = max_rounds if max_rounds is not None else \
+            self.total_outstanding() + self.N + 2
+        rounds = 0
+        for _ in range(limit):
+            if not self._any_pending():
+                return rounds
+            self.step()
+            rounds += 1
+        if self._any_pending():
+            raise RuntimeError(
+                f"session scheduler made no progress in {limit} rounds")
+        return rounds
+
+    def _any_pending(self) -> bool:
+        return bool(jax.device_get(
+            (self.pool.slot_state == SLOT_PENDING).any()))
+
+    # -- internals driven by the Session handles ------------------------------
+    def _enqueue(self, s: Session, keys, ops, vals):
+        keys = np.asarray(keys, np.int32)
+        ops = np.asarray(ops, np.int32)
+        if vals is None:
+            vals = np.zeros((len(keys), self.V), np.int32)
+        else:
+            vals = np.asarray(vals, np.int32)
+        assert keys.shape == ops.shape and vals.shape == keys.shape + (self.V,)
+        assert (ops != OP_NOOP).all(), \
+            "OP_NOOP cannot be enqueued (it would never complete)"
+        B = len(keys)
+        n_acc = min(B, self.depth - s.in_use)
+        t0 = self._next_ticket
+        self.pool = self._enqueue_j(
+            self.pool, jnp.int32(s.sid), jnp.asarray(keys),
+            jnp.asarray(ops), jnp.asarray(vals), jnp.int32(t0),
+            jnp.int32(n_acc))
+        self._next_ticket += n_acc
+        self.tickets_issued += n_acc
+        self.tickets_rejected += B - n_acc
+        for i in range(n_acc):
+            t = t0 + i
+            s._slot_of[t] = s._tail + i     # monotone cursor, slot = mod C
+            s._fifo.append(t)
+        s._tail += n_acc
+        # tickets are host-deterministic: no device round-trip on enqueue
+        idx = np.arange(B, dtype=np.int32)
+        return np.where(idx < n_acc, t0 + idx, np.int32(-1)).astype(np.int32)
+
+    def _state_row(self, s: Session) -> np.ndarray:
+        """One session's slot states — the only device fetch a poll that
+        finds nothing ready has to pay."""
+        return np.asarray(jax.device_get(self.pool.slot_state[s.sid]))
+
+    def _collect(self, s: Session, tickets: np.ndarray):
+        """Collect the given tickets (all known-DONE): gather results,
+        free slots, advance the host head mirror."""
+        C = self.depth
+        status, rvals = map(np.asarray, jax.device_get(
+            (self.pool.status[s.sid], self.pool.rvals[s.sid])))
+        mask = np.zeros(C, bool)
+        out_st = np.full(len(tickets), ST_NONE, np.int32)
+        out_v = np.zeros((len(tickets), self.V), np.int32)
+        for i, t in enumerate(tickets):
+            cur = s._slot_of.pop(int(t))
+            s._fifo.remove(int(t))
+            mask[cur % C] = True
+            out_st[i] = status[cur % C]
+            out_v[i] = rvals[cur % C]
+            s._freed.add(cur)
+        if mask.any():
+            self.pool = self._free_j(self.pool, jnp.int32(s.sid),
+                                     jnp.asarray(mask))
+            while s._head in s._freed:
+                s._freed.remove(s._head)
+                s._head += 1
+            self.collected += len(tickets)
+        return out_st, out_v
+
+    def _poll(self, s: Session, tickets: np.ndarray):
+        state = self._state_row(s)
+        C = self.depth
+        done = np.zeros(len(tickets), bool)
+        ready = []
+        for i, t in enumerate(tickets):
+            cur = s._slot_of.get(int(t))
+            if cur is not None and state[cur % C] == SLOT_DONE:
+                done[i] = True
+                ready.append(int(t))
+        out_st = np.full(len(tickets), ST_NONE, np.int32)
+        out_v = np.zeros((len(tickets), self.V), np.int32)
+        if ready:
+            st_r, v_r = self._collect(s, np.asarray(ready))
+            j = 0
+            for i in range(len(tickets)):
+                if done[i]:
+                    out_st[i], out_v[i] = st_r[j], v_r[j]
+                    j += 1
+        return done, out_st, out_v
+
+    def _drain(self, s: Session):
+        limit = self.total_outstanding() + self.N + 2
+        for _ in range(limit):
+            state = self._state_row(s)
+            C = self.depth
+            if all(state[cur % C] == SLOT_DONE
+                   for cur in s._slot_of.values()):
+                break
+            self.step()
+        else:
+            raise RuntimeError("drain made no progress")
+        tickets = np.asarray(sorted(s._fifo), np.int64)
+        st, v = self._collect(s, tickets) if len(tickets) else (
+            np.zeros(0, np.int32), np.zeros((0, self.V), np.int32))
+        return tickets, st, v
+
+    # -- slab-occupancy telemetry (the bench's before/after signal) ----------
+    def _fold_fill(self):
+        if not self._pending_fill:
+            return
+        pending, self._pending_fill = jax.device_get(self._pending_fill), []
+        for f in pending:
+            f = np.asarray(f).astype(np.int64)
+            self._fill_sum += f
+            self._packed_lanes += int(f.sum())
+            self._fill_rounds += 1
+
+    @property
+    def packed_lanes(self) -> int:
+        self._fold_fill()
+        return self._packed_lanes
+
+    def slab_occupancy(self) -> float:
+        """Mean fraction of the S*W slab lanes filled per packed round —
+        the quantity deferral leaves low in the synchronous path and
+        cross-session packing is meant to raise."""
+        self._fold_fill()
+        if not self._fill_rounds:
+            return 0.0
+        return self._packed_lanes / (self._fill_rounds * self.kv.S * self.W)
+
+    # -- KVProtocol surface (synchronous facade over the async path) ---------
+    def _sync_session(self) -> Session:
+        if self._sync is None or not self._sync.open:
+            self._sync = self.open_session()
+        return self._sync
+
+    def apply(self, keys, ops, vals=None):
+        """Synchronous mixed batch through the session machinery: enqueue
+        on a private session (chunked to its ring capacity), drain, and
+        return per-lane (status, vals) in the original batch order."""
+        s = self._sync_session()
+        keys = np.asarray(keys, np.int32)
+        ops = np.asarray(ops, np.int32)
+        if vals is None:
+            vals = np.zeros((len(keys), self.V), np.int32)
+        else:
+            vals = np.asarray(vals, np.int32)
+        B = len(keys)
+        status = np.zeros(B, np.int32)
+        rvals = np.zeros((B, self.V), np.int32)
+        lane_of = {}
+        start = 0
+        while start < B:
+            live = ops[start:] != OP_NOOP       # NOOP lanes complete as
+            if not live.any():                  # ST_NONE without enqueue
+                break
+            nxt = start + int(np.argmax(live))
+            n = min(B - nxt, self.depth - s.in_use)
+            if n <= 0:
+                self._drain_into(s, lane_of, status, rvals)
+                continue
+            chunk = slice(nxt, nxt + n)
+            sel = ops[chunk] != OP_NOOP
+            if not sel.all():
+                n = int(np.argmin(sel))         # stop chunk at first NOOP
+                chunk = slice(nxt, nxt + n)
+            tk = s.enqueue(keys[chunk], ops[chunk], vals[chunk])
+            for j, t in enumerate(tk):
+                lane_of[int(t)] = nxt + j
+            start = nxt + n
+        self._drain_into(s, lane_of, status, rvals)
+        return jnp.asarray(status), jnp.asarray(rvals)
+
+    def _drain_into(self, s, lane_of, status, rvals):
+        tk, st, v = s.drain()
+        for j, t in enumerate(tk):
+            lane = lane_of.pop(int(t))
+            status[lane] = st[j]
+            rvals[lane] = v[j]
+
+    def read(self, keys):
+        ops = np.full(len(keys), OP_READ, np.int32)
+        return self.apply(keys, ops)
+
+    def upsert(self, keys, vals):
+        ops = np.full(len(keys), OP_UPSERT, np.int32)
+        return self.apply(keys, ops, vals)
+
+    def rmw(self, keys, deltas):
+        ops = np.full(len(keys), OP_RMW, np.int32)
+        return self.apply(keys, ops, deltas)
+
+    def delete(self, keys):
+        ops = np.full(len(keys), OP_DELETE, np.int32)
+        return self.apply(keys, ops)
+
+    # -- reporting ------------------------------------------------------------
+    def io_stats(self) -> dict:
+        return self.kv.io_stats()
+
+    def stats(self) -> dict:
+        """The nested KVProtocol telemetry shape: the underlying store's
+        `io`/`shards`(/`replicas`) sub-dicts plus the `sessions` view."""
+        out = self.kv.stats()
+        self._fold_fill()
+        out["sessions"] = dict(
+            max_sessions=self.N,
+            session_depth=self.depth,
+            pack_lanes=self.W,
+            open=sum(x is not None for x in self._sessions),
+            opened=self.sessions_opened,
+            tickets_issued=self.tickets_issued,
+            tickets_rejected=self.tickets_rejected,
+            collected=self.collected,
+            outstanding=self.total_outstanding(),
+            pack_rounds=self.pack_rounds,
+            packed_lanes=self.packed_lanes,
+            slab_occupancy=round(self.slab_occupancy(), 4),
+        )
+        return out
+
+    def check_invariants(self):
+        """Store invariants plus pool/bookkeeping coherence: device
+        cursors match the host mirrors, in-use windows fit the rings,
+        and every PENDING slot belongs to an outstanding ticket."""
+        self.kv.check_invariants()
+        head, tail, state = jax.device_get(
+            (self.pool.head, self.pool.tail, self.pool.slot_state))
+        head, tail = np.asarray(head), np.asarray(tail)
+        for sid, s in enumerate(self._sessions):
+            if s is None:
+                continue
+            assert s._head == int(head[sid]), (sid, "head mirror drift")
+            assert s._tail == int(tail[sid]), (sid, "tail mirror drift")
+            assert 0 <= s.in_use <= self.depth, (sid, "ring overflow")
+            n_live = int((np.asarray(state[sid]) != SLOT_FREE).sum())
+            assert n_live == len(s._slot_of), (sid, "slot bookkeeping drift")

@@ -1,0 +1,165 @@
+"""KVProtocol conformance: one parametrized suite every store facade must
+pass — `KV`, `ShardedKV`, `ReplicatedKV`, and the async
+`KVSessionService` behind its synchronous facade.  The point of the
+protocol is that callers cannot tell the facades apart; this file pins
+that behaviorally (same mixed workload against the same dict oracle,
+driven only through protocol methods) and structurally (runtime
+`isinstance` checks, the nested `stats()` telemetry shape).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (KV, OP_DELETE, OP_READ, OP_RMW, OP_UPSERT,
+                        ST_NOT_FOUND, ST_OK, F2Config, KVProtocol)
+from repro.core.replication import ReplicatedKV
+from repro.core.sharded import ShardedKV
+from repro.serve.serve_step import ServiceConfig, make_session_service
+
+V = 2
+
+
+def tiny_cfg(**kw):
+    base = dict(hot_index_size=1 << 8, hot_capacity=1 << 9, hot_mem=1 << 6,
+                cold_capacity=1 << 11, cold_mem=1 << 6, n_chunks=1 << 6,
+                chunklog_capacity=1 << 9, chunklog_mem=1 << 5,
+                rc_capacity=1 << 6, value_width=V, chain_max=48)
+    base.update(kw)
+    return F2Config(**base)
+
+
+def _kv():
+    return KV(tiny_cfg(), trigger=0.6, compact_batch=64, donate=False)
+
+
+def _sharded():
+    return ShardedKV(tiny_cfg(), 4, trigger=0.6, compact_batch=64,
+                     donate=False)
+
+
+def _replicated():
+    return ReplicatedKV(tiny_cfg(), 2, n_replicas=2, trigger=0.6,
+                        compact_batch=64, donate=False)
+
+
+def _sessions():
+    return make_session_service(tiny_cfg(), ServiceConfig(
+        n_shards=2, lanes=32, max_sessions=2, session_depth=32,
+        store_kwargs=dict(trigger=0.6, compact_batch=64, donate=False)))
+
+
+FACADES = [("kv", _kv), ("sharded", _sharded), ("replicated", _replicated),
+           ("sessions", _sessions)]
+EXPECTED_SUBDICTS = {
+    "kv": {"io"},
+    "sharded": {"io", "shards"},
+    "replicated": {"io", "shards", "replicas"},
+    "sessions": {"io", "shards", "sessions"},
+}
+
+
+@pytest.mark.parametrize("name,build", FACADES, ids=[n for n, _ in FACADES])
+def test_structural_conformance(name, build):
+    """Every facade satisfies the runtime_checkable protocol."""
+    store = build()
+    assert isinstance(store, KVProtocol), name
+
+
+@pytest.mark.parametrize("name,build", FACADES, ids=[n for n, _ in FACADES])
+def test_behavioral_conformance(name, build):
+    """The same mixed workload, driven ONLY through protocol methods,
+    matches the dict oracle on every facade: upsert/read/rmw/delete
+    round-trips, apply with a mixed op batch, and invariants hold."""
+    store = build()
+    rng = np.random.default_rng(71)
+    ref = {}
+    n_keys = 300
+
+    def fold(keys, ops, vals):
+        for i in range(len(keys)):
+            k, o = int(keys[i]), int(ops[i])
+            if o == OP_UPSERT:
+                ref[k] = vals[i].copy()
+            elif o == OP_DELETE:
+                ref.pop(k, None)
+            elif o == OP_RMW:
+                ref[k] = (ref.get(k, np.zeros(V, np.int32))
+                          + vals[i]).astype(np.int32)
+
+    def check_reads(keys, status, vals, tag):
+        status, vals = np.asarray(status), np.asarray(vals)
+        for i, k in enumerate(keys):
+            k = int(k)
+            if k in ref:
+                assert status[i] == ST_OK, (tag, k)
+                assert np.array_equal(vals[i], ref[k]), (tag, k)
+            else:
+                assert status[i] == ST_NOT_FOUND, (tag, k)
+
+    # typed entry points
+    for step in range(4):
+        keys = rng.integers(0, n_keys, 64).astype(np.int32)
+        vals = rng.integers(0, 100, (64, V)).astype(np.int32)
+        store.upsert(keys, vals)
+        fold(keys, np.full(64, OP_UPSERT), vals)
+        dk = rng.integers(0, n_keys, 16).astype(np.int32)
+        store.delete(dk)
+        fold(dk, np.full(16, OP_DELETE), vals[:16])
+        mk = rng.integers(0, n_keys, 32).astype(np.int32)
+        deltas = rng.integers(0, 10, (32, V)).astype(np.int32)
+        store.rmw(mk, deltas)
+        fold(mk, np.full(32, OP_RMW), deltas)
+        probe = rng.integers(0, n_keys, 64).astype(np.int32)
+        st, rv = store.read(probe)
+        check_reads(probe, st, rv, ("typed", name, step))
+
+    # mixed apply batches.  Keys are DISTINCT within a batch: the store's
+    # in-batch read semantics (reads observe the pre-batch snapshot) and
+    # the session facade's chunked semantics only coincide when no lane
+    # reads a key another lane in the same batch writes — the protocol
+    # pins the conflict-free contract, each facade's own suite pins its
+    # conflict semantics.
+    for step in range(4):
+        keys = rng.permutation(n_keys)[:96].astype(np.int32)
+        ops = rng.choice([OP_READ, OP_UPSERT, OP_RMW, OP_DELETE], 96,
+                         p=[.25, .45, .15, .15]).astype(np.int32)
+        vals = rng.integers(0, 100, (96, V)).astype(np.int32)
+        st, rv = store.apply(keys, ops, vals)
+        st, rv = np.asarray(st), np.asarray(rv)
+        for i in range(96):
+            if int(ops[i]) == OP_READ:
+                k = int(keys[i])
+                if k in ref:
+                    assert st[i] == ST_OK, ("mixed", name, step, k)
+                    assert np.array_equal(rv[i], ref[k])
+                else:
+                    assert st[i] == ST_NOT_FOUND, ("mixed", name, step, k)
+        fold(keys, ops, vals)
+
+    # full-keyspace readback, then invariants
+    probe = np.arange(n_keys, dtype=np.int32)
+    st, rv = store.read(probe)
+    check_reads(probe, st, rv, ("final", name))
+    store.check_invariants()
+
+
+@pytest.mark.parametrize("name,build", FACADES, ids=[n for n, _ in FACADES])
+def test_stats_shape(name, build):
+    """stats() returns the one nested telemetry shape: an `io` sub-dict
+    always (the four KV totals), facade-specific sub-dicts beyond it."""
+    store = build()
+    keys = np.arange(64, dtype=np.int32)
+    store.upsert(keys, np.ones((64, V), np.int32))
+    store.read(keys)
+    out = store.stats()
+    assert EXPECTED_SUBDICTS[name] <= set(out), (name, out.keys())
+    assert {"read_bytes", "write_bytes", "read_ops", "mem_hits"} \
+        <= set(out["io"]), out["io"]
+    if "shards" in out:
+        assert out["shards"]["n_shards"] >= 1
+        assert out["shards"]["rounds"] >= 1
+    if "replicas" in out:
+        assert out["replicas"]["n_replicas"] == 2
+    if "sessions" in out:
+        s = out["sessions"]
+        assert s["tickets_issued"] >= 64 and s["outstanding"] == 0
+        assert 0.0 <= s["slab_occupancy"] <= 1.0
