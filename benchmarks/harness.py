@@ -195,6 +195,31 @@ def make_replicated_kv(n_keys: int, n_shards: int, n_replicas: int = 2,
     return make_kv_service(cfg, sc)
 
 
+def make_durable_kv(n_keys: int, n_shards: int, directory: str,
+                    snapshot_every_rounds: int = 0, n_replicas: int = 1,
+                    fsync: str = "batch", mem_frac: float = 0.10,
+                    value_width: int = 25, engine: str = "fused",
+                    lanes: int = None, dispatch: str = "auto",
+                    rc_frac: float = 0.17, index_frac: float = 0.17,
+                    **kw):
+    """The `make_sharded_kv` / `make_replicated_kv` store recipe wrapped
+    in `core.durability.DurableKV`: CPR-style async snapshots into
+    `directory` plus a write-ahead slab log.  Same `_shard_cfg` tuning as
+    the non-durable bench stores, so durable vs plain comparisons isolate
+    the durability tax and nothing else."""
+    from repro.core.durability import DurabilityConfig
+    cfg = _shard_cfg(n_keys, n_shards, mem_frac, value_width, engine,
+                     rc_frac, index_frac, lanes, mode="f2")
+    sc = ServiceConfig(n_shards=n_shards, lanes=lanes, dispatch=dispatch,
+                       n_replicas=n_replicas,
+                       durability=DurabilityConfig(
+                           dir=directory,
+                           snapshot_every_rounds=snapshot_every_rounds,
+                           fsync=fsync),
+                       store_kwargs=dict(**kw))
+    return make_kv_service(cfg, sc)
+
+
 def make_session_kv(n_keys: int, n_shards: int, max_sessions: int = 8,
                     session_depth: int = 64, mem_frac: float = 0.10,
                     value_width: int = 25, engine: str = "fused",

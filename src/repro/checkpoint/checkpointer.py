@@ -1,8 +1,20 @@
 """Async, atomic, elastic checkpointing.
 
-Layout: <dir>/step_<N>/leaf_<i>.npy + manifest.json (written LAST, via
-atomic rename — a checkpoint without a manifest is incomplete and ignored
-on restore).  Saving runs on a background thread off the step path.
+Layout: <dir>/step_<N>/leaves.bin + manifest.json (written LAST — a
+checkpoint without a manifest is incomplete and ignored on restore).
+`leaves.bin` is every leaf's .npy serialization back to back, one file
+open per snapshot instead of one per leaf; the manifest carries each
+leaf's tree path and byte offset.
+Saving runs on a background thread off the step path; exceptions raised
+there are surfaced on the next `save()`/`wait()` instead of vanishing.
+
+Commit is a rename swap: the finished `.tmp_step_N` is renamed over the
+final name after any previous `step_N` is renamed aside to `.old_step_N`
+(then deleted).  A crash can therefore never lose a previously committed
+step: the worst case leaves `.old_step_N` behind, which `__init__`
+promotes back to `step_N` if the final name is missing.  Stale
+`.tmp_step_*` / `.old_step_*` and manifest-less `step_N` dirs are ignored
+by `available_steps()`/`restore()` and garbage-collected.
 
 Elasticity: leaves are stored as full (host-replicated) arrays with their
 tree paths; `restore(..., shardings=...)` re-device_puts them under ANY
@@ -13,12 +25,40 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
 from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.testing import faults
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointStructureError(AssertionError):
+    """Restore target structure does not match the checkpoint manifest.
+
+    Subclasses AssertionError for backward compatibility with callers
+    that guarded the seed's bare ``assert``.
+    """
+
+    def __init__(self, step: int, like_paths, ckpt_paths):
+        missing = [p for p in ckpt_paths if p not in like_paths]
+        extra = [p for p in like_paths if p not in ckpt_paths]
+        msg = (f"checkpoint/model structure mismatch at step {step}: "
+               f"{len(like_paths)} target leaves vs "
+               f"{len(ckpt_paths)} checkpointed leaves")
+        if missing:
+            msg += f"; in checkpoint but not target: {missing}"
+        if extra:
+            msg += f"; in target but not checkpoint: {extra}"
+        super().__init__(msg)
+        self.step = step
+        self.missing = missing
+        self.extra = extra
 
 
 def _paths(tree) -> list:
@@ -32,53 +72,104 @@ class Checkpointer:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self._repair()
+
+    # -- crash repair ----------------------------------------------------------
+    def _repair(self):
+        """Promote `.old_step_N` left by a crash mid-swap; GC torn artifacts."""
+        for d in os.listdir(self.dir):
+            m = re.match(r"^\.old_step_(\d+)$", d)
+            if not m:
+                continue
+            final = os.path.join(self.dir, f"step_{m.group(1)}")
+            if not os.path.exists(final):
+                os.rename(os.path.join(self.dir, d), final)
+        self._gc_torn()
+
+    def _gc_torn(self):
+        for d in os.listdir(self.dir):
+            p = os.path.join(self.dir, d)
+            if d.startswith(".tmp_step_") or d.startswith(".old_step_"):
+                shutil.rmtree(p, ignore_errors=True)
+            elif _STEP_RE.match(d) and not os.path.exists(
+                    os.path.join(p, "manifest.json")):
+                shutil.rmtree(p, ignore_errors=True)
 
     # -- save ------------------------------------------------------------------
-    def save(self, step: int, state: Any, blocking: bool = False):
+    def _raise_pending(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, step: int, state: Any, blocking: bool = False,
+             on_commit: Optional[Any] = None):
+        """`on_commit` (zero-arg callable) runs on the worker thread after
+        the rename-swap commit — deferred housekeeping (e.g. WAL segment
+        GC) that must wait for the checkpoint to be durable but has no
+        business on the step path.  Its errors surface like save errors."""
         # snapshot to host BEFORE going async (donated buffers may die)
         host = jax.tree.map(lambda x: np.asarray(x), state)
         if self._thread is not None:
             self._thread.join()
+        self._raise_pending()
 
         def work():
-            tmp = os.path.join(self.dir, f".tmp_step_{step}")
-            final = os.path.join(self.dir, f"step_{step}")
-            shutil.rmtree(tmp, ignore_errors=True)
-            os.makedirs(tmp)
-            names = []
-            for i, (pth, leaf) in enumerate(_paths(host)):
-                np.save(os.path.join(tmp, f"leaf_{i}.npy"), leaf,
-                        allow_pickle=False)
-                names.append(pth)
-            manifest = {"step": step, "leaves": names}
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump(manifest, f)
-            shutil.rmtree(final, ignore_errors=True)
-            os.rename(tmp, final)          # atomic commit
-            self._gc()
+            try:
+                tmp = os.path.join(self.dir, f".tmp_step_{step}")
+                final = os.path.join(self.dir, f"step_{step}")
+                old = os.path.join(self.dir, f".old_step_{step}")
+                shutil.rmtree(tmp, ignore_errors=True)
+                os.makedirs(tmp)
+                names, offsets = [], []
+                with open(os.path.join(tmp, "leaves.bin"), "wb") as lf:
+                    for pth, leaf in _paths(host):
+                        offsets.append(lf.tell())
+                        np.lib.format.write_array(
+                            lf, np.asarray(leaf), allow_pickle=False)
+                        names.append(pth)
+                faults.maybe_crash("checkpoint.before_manifest")
+                manifest = {"step": step, "leaves": names,
+                            "offsets": offsets}
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                # rename-swap commit: never a window with no step_N on disk
+                shutil.rmtree(old, ignore_errors=True)
+                if os.path.exists(final):
+                    os.rename(final, old)
+                os.rename(tmp, final)
+                shutil.rmtree(old, ignore_errors=True)
+                self._gc()
+                if on_commit is not None:
+                    on_commit()
+            except BaseException as e:   # surfaced on next save()/wait()
+                self._error = e
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
         if blocking:
-            self._thread.join()
+            self.wait()
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
+        self._raise_pending()
 
     def _gc(self):
         steps = sorted(self.available_steps())
         for s in steps[:-self.keep]:
             shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
                           ignore_errors=True)
+        self._gc_torn()
 
     # -- restore ---------------------------------------------------------------
     def available_steps(self):
         out = []
         for d in os.listdir(self.dir):
-            if d.startswith("step_") and os.path.exists(
+            m = _STEP_RE.match(d)
+            if m and os.path.exists(
                     os.path.join(self.dir, d, "manifest.json")):
-                out.append(int(d.split("_")[1]))
+                out.append(int(m.group(1)))
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
@@ -96,10 +187,15 @@ class Checkpointer:
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
         flat_like, treedef = jax.tree_util.tree_flatten(like)
-        assert len(flat_like) == len(manifest["leaves"]), \
-            "checkpoint/model structure mismatch"
-        arrs = [np.load(os.path.join(d, f"leaf_{i}.npy"))
-                for i in range(len(flat_like))]
+        if len(flat_like) != len(manifest["leaves"]):
+            raise CheckpointStructureError(
+                step, [p for p, _ in _paths(like)], manifest["leaves"])
+        arrs = []
+        with open(os.path.join(d, "leaves.bin"), "rb") as lf:
+            for off in manifest["offsets"]:
+                lf.seek(off)
+                arrs.append(np.lib.format.read_array(lf,
+                                                     allow_pickle=False))
         state = jax.tree_util.tree_unflatten(treedef, arrs)
         if shardings is not None:
             state = jax.tree.map(

@@ -11,8 +11,12 @@ Public API:
     sharded.create, rebalance.{RebalanceConfig,ShardStats,plan_moves}
     (live resharding).  `KVProtocol` is the structural serving contract
     every facade (and serve.sessions.KVSessionService) satisfies.
+    `DurableKV` + `DurabilityConfig` + `recover` (core.durability) add
+    CPR-style snapshots, a write-ahead slab log and crash recovery on
+    top of any sharded/replicated deployment.
 """
 from .api import KV
+from .durability import DurabilityConfig, DurableKV, recover
 from .protocol import KVProtocol
 from .rebalance import RebalanceConfig, ShardStats
 from .replication import ReplicatedKV
@@ -20,16 +24,17 @@ from .sharded import ShardedKV
 from .types import (BLOCK_BYTES, OP_DELETE, OP_NOOP, OP_READ, OP_RMW,
                     OP_UPSERT, ST_CREATED, ST_NONE, ST_NOT_FOUND, ST_OK,
                     F2Config, IoStats)
-from . import (chain, cold_index, compaction, groups, hybrid_log,
-               probe_engine, protocol, read_cache, rebalance, replication,
-               shard_router, sharded, store, write_engine)
+from . import (chain, cold_index, compaction, durability, groups,
+               hybrid_log, probe_engine, protocol, read_cache, rebalance,
+               replication, shard_router, sharded, store, write_engine)
 
 __all__ = [
     "KV", "ShardedKV", "ReplicatedKV", "KVProtocol", "F2Config", "IoStats",
     "BLOCK_BYTES", "RebalanceConfig", "ShardStats",
+    "DurableKV", "DurabilityConfig", "recover",
     "OP_NOOP", "OP_READ", "OP_UPSERT", "OP_RMW", "OP_DELETE",
     "ST_NONE", "ST_OK", "ST_NOT_FOUND", "ST_CREATED",
-    "chain", "cold_index", "compaction", "groups", "hybrid_log",
-    "probe_engine", "protocol", "read_cache", "rebalance", "replication",
-    "shard_router", "sharded", "store", "write_engine",
+    "chain", "cold_index", "compaction", "durability", "groups",
+    "hybrid_log", "probe_engine", "protocol", "read_cache", "rebalance",
+    "replication", "shard_router", "sharded", "store", "write_engine",
 ]

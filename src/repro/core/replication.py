@@ -77,6 +77,7 @@ from jax.sharding import PartitionSpec as P
 
 from . import rebalance, shard_router, sharded, store
 from .sharded import DISPATCHES, SHARD_AXIS, ShardedKV, bucket_counts
+from repro.testing import faults
 from .types import (BLOCK_BYTES, OP_DELETE, OP_NOOP, OP_READ, OP_UPSERT,
                     F2Config, IoStats)
 
@@ -322,6 +323,12 @@ class ReplicatedKV(ShardedKV):
         primary replica.  Same contract as `ShardedKV.apply_round` — the
         session scheduler drives this entry under replication."""
         keys, ops, vals = self._coerce(keys, ops, vals)
+        if (self.wal is not None and not self._migrating
+                and not self._wal_defer and _rep_do is None):
+            # write-ahead, same rule as ShardedKV: client rounds only —
+            # masked resync/rebuild replay reconstructs already-logged
+            # data, and `apply` logs its whole batch itself
+            self.wal.log_slab(keys, ops, vals, self.map_version)
         rep_do = np.asarray(self.alive if _rep_do is None else _rep_do, bool)
         h = self._primary(rep_do)
         (self.state, st_r, rv_r, placed, deferred,
@@ -343,20 +350,29 @@ class ReplicatedKV(ShardedKV):
                 keys, ops, vals, _rep_do=_rep_do)
             self.maybe_rebalance()
             return status, rvals
+        # write-ahead ONCE for the whole batch (see ShardedKV.apply)
+        if (self.wal is not None and not self._migrating
+                and _rep_do is None):
+            self.wal.log_slab(keys, ops, vals, self.map_version)
         status = np.zeros(B, np.int32)
         rvals = np.zeros((B, self.cfg.value_width), np.int32)
         cur_ops = ops
-        for _ in range(B + 1):
-            st_r, rv_r, placed, deferred = self.apply_round(
-                keys, cur_ops, vals, _rep_do=_rep_do)
-            placed_np = np.asarray(placed)
-            status = np.where(placed_np, np.asarray(st_r), status)
-            rvals = np.where(placed_np[:, None], np.asarray(rv_r), rvals)
-            deferred_np = np.asarray(deferred)
-            if not deferred_np.any():
-                break
-            cur_ops = jnp.where(jnp.asarray(deferred_np), ops,
-                                jnp.int32(OP_NOOP))
+        self._wal_defer = True
+        try:
+            for _ in range(B + 1):
+                st_r, rv_r, placed, deferred = self.apply_round(
+                    keys, cur_ops, vals, _rep_do=_rep_do)
+                placed_np = np.asarray(placed)
+                status = np.where(placed_np, np.asarray(st_r), status)
+                rvals = np.where(placed_np[:, None], np.asarray(rv_r),
+                                 rvals)
+                deferred_np = np.asarray(deferred)
+                if not deferred_np.any():
+                    break
+                cur_ops = jnp.where(jnp.asarray(deferred_np), ops,
+                                    jnp.int32(OP_NOOP))
+        finally:
+            self._wal_defer = False
         self.maybe_rebalance()
         return jnp.asarray(status), jnp.asarray(rvals)
 
@@ -515,6 +531,7 @@ class ReplicatedKV(ShardedKV):
                              constant_values=OP_NOOP)
                 vs = np.pad(vals_all[off:off + Bm], ((0, pad), (0, 0)))
                 self.apply(ks, os_, vs, _rep_do=onehot)
+                faults.maybe_crash("resync.mid_replay")
         finally:
             self._resync_only = None
             self._migrating = False

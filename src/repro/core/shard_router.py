@@ -77,6 +77,22 @@ def default_bucket_map(n_shards: int, n_buckets: int) -> np.ndarray:
     return (np.arange(n_buckets, dtype=np.int32) // per).astype(np.int32)
 
 
+def bucket_moves(old_map: np.ndarray, new_map: np.ndarray,
+                 n_shards: int) -> np.ndarray:
+    """bool [S, n_buckets] mask of (source shard, bucket) pairs whose
+    placement changes going `old_map` -> `new_map` — the purge/drain mask
+    of a migration.  Shared by live `ShardedKV.migrate()` and the WAL MAP
+    replay in `core.durability`, which must purge the exact same source
+    copies when re-enacting a logged migration after a crash."""
+    old_map = np.asarray(old_map, np.int32)
+    new_map = np.asarray(new_map, np.int32)
+    assert old_map.shape == new_map.shape, (old_map.shape, new_map.shape)
+    changed = np.flatnonzero(new_map != old_map)
+    move = np.zeros((n_shards, old_map.shape[0]), bool)
+    move[old_map[changed], changed] = True
+    return move
+
+
 class Route(NamedTuple):
     """Everything needed to invert a routing decision, per original lane."""
 

@@ -74,6 +74,7 @@ from jax.sharding import PartitionSpec as P
 from . import compaction, rebalance, shard_router, store
 from . import cold_index as _cold_index
 from .rebalance import RebalanceConfig
+from repro.testing import faults
 from .types import (BLOCK_BYTES, OP_DELETE, OP_NOOP, OP_READ, OP_RMW,
                     OP_UPSERT, F2Config)
 
@@ -204,6 +205,19 @@ class ShardedKV:
         self.migrated_records = 0
         self._migrating = False
         self._last_rb_round = 0
+        # -- durability hook: `core.durability.DurableKV` installs a WAL
+        #    writer here; every client batch logs its full input slab ONCE
+        #    (write-ahead: `apply` before its deferral loop, `apply_round`
+        #    when driven directly) and migrate() logs a self-contained MAP
+        #    record.  The bucket map cannot change mid-batch (the rebalance
+        #    check runs after the deferral loop), so the round sequence is
+        #    a pure function of (batch, map, lanes) and replay re-derives
+        #    it — deferral rounds are never re-logged.  map_version counts
+        #    bucket-map flips; WAL headers carry it so recovery can assert
+        #    replay stays in lockstep with the log. --
+        self.wal = None
+        self._wal_defer = False     # True inside apply(): rounds are covered
+        self.map_version = 0
         self._decay = rebalance_cfg.decay if rebalance_cfg else 0.9
         mig_batch = (rebalance_cfg.migrate_batch if rebalance_cfg
                      else min(compact_batch, 256))
@@ -377,6 +391,13 @@ class ShardedKV:
         *batch*, not per round — callers run `maybe_rebalance()` at their
         own batch boundary."""
         keys, ops, vals = self._coerce(keys, ops, vals)
+        if (self.wal is not None and not self._migrating
+                and not self._wal_defer):
+            # write-ahead: the round's full input is durable before it
+            # executes (internal migration/resync replay is NOT logged —
+            # it reconstructs data the log already covers; `apply` logs
+            # its whole batch itself and re-derives the deferral rounds)
+            self.wal.log_slab(keys, ops, vals, self.map_version)
         (self.state, status, rvals, placed, deferred,
          occ, bc) = self._step(self.state, keys, ops, vals,
                                self._bucket_map_dev)
@@ -398,24 +419,36 @@ class ShardedKV:
                                                                  vals)
             self.maybe_rebalance()
             return status, rvals
+        # write-ahead ONCE for the whole batch: the map is frozen until
+        # the post-loop rebalance check, so the deferral rounds below are
+        # a pure function of (batch, map, lanes) that replay re-derives
+        if self.wal is not None and not self._migrating:
+            self.wal.log_slab(keys, ops, vals, self.map_version)
         status = np.zeros(B, np.int32)
         rvals = np.zeros((B, self.cfg.value_width), np.int32)
         cur_ops = ops
-        for _ in range(B + 1):          # each round places >= 1 lane
-            st_r, rv_r, placed, deferred = self.apply_round(keys, cur_ops,
-                                                            vals)
-            placed_np = np.asarray(placed)
-            status = np.where(placed_np, np.asarray(st_r), status)
-            rvals = np.where(placed_np[:, None], np.asarray(rv_r), rvals)
-            deferred_np = np.asarray(deferred)
-            if not deferred_np.any():
-                break
-            cur_ops = jnp.where(jnp.asarray(deferred_np), ops,
-                                jnp.int32(OP_NOOP))
+        self._wal_defer = True
+        try:
+            for _ in range(B + 1):      # each round places >= 1 lane
+                st_r, rv_r, placed, deferred = self.apply_round(keys,
+                                                                cur_ops,
+                                                                vals)
+                placed_np = np.asarray(placed)
+                status = np.where(placed_np, np.asarray(st_r), status)
+                rvals = np.where(placed_np[:, None], np.asarray(rv_r),
+                                 rvals)
+                deferred_np = np.asarray(deferred)
+                if not deferred_np.any():
+                    break
+                cur_ops = jnp.where(jnp.asarray(deferred_np), ops,
+                                    jnp.int32(OP_NOOP))
+        finally:
+            self._wal_defer = False
         # the rebalance check runs once per batch, after every routed
         # round has executed (a mid-batch map flip would re-route lanes
         # that were already deferred under the old map — harmless, but
-        # one check per batch keeps migrations at batch boundaries)
+        # one check per batch keeps migrations at batch boundaries; it is
+        # also what makes the once-per-batch WAL record sound)
         self.maybe_rebalance()
         return jnp.asarray(status), jnp.asarray(rvals)
 
@@ -687,8 +720,7 @@ class ShardedKV:
         changed = np.flatnonzero(new_map != self.bucket_map)
         if changed.size == 0:
             return 0
-        move = np.zeros((self.S, self.n_buckets), bool)
-        move[self.bucket_map[changed], changed] = True
+        move = shard_router.bucket_moves(self.bucket_map, new_map, self.S)
         do = self._rep_shard(move.any(axis=1))
         move_dev = self._rep_move(move)
         Bm = self._mig_batch
@@ -736,11 +768,6 @@ class ShardedKV:
             #     whole arrays, so records that moved hot->cold meanwhile
             #     are still caught ----------------------------------------
             self.maybe_compact()
-            # --- purge source copies, then flip the indirection ----------
-            self.state = self._purge(self.state, move_dev, jnp.asarray(do))
-            self.bucket_map = new_map.copy()
-            self._bucket_map_dev = jnp.asarray(self.bucket_map)
-            # --- replay as ordinary routed writes (now land on dst) ------
             if parts:
                 keys_all = np.concatenate([p[0] for p in parts])
                 vals_all = np.concatenate([p[1] for p in parts])
@@ -750,6 +777,20 @@ class ShardedKV:
                 vals_all = np.zeros((0, V), np.int32)
                 ops_all = np.zeros(0, np.int32)
             n_moved = len(keys_all)
+            # --- durability: one self-contained MAP record (new map +
+            #     drained payload under a single CRC) goes to the WAL
+            #     *before* the destructive purge — recovery either replays
+            #     the whole migration or, on a torn record, none of it ----
+            if self.wal is not None:
+                self.wal.log_map(new_map, self.map_version + 1,
+                                 keys_all, ops_all, vals_all)
+            # --- purge source copies, then flip the indirection ----------
+            self.state = self._purge(self.state, move_dev, jnp.asarray(do))
+            self.bucket_map = new_map.copy()
+            self._bucket_map_dev = jnp.asarray(self.bucket_map)
+            self.map_version += 1
+            faults.maybe_crash("migrate.after_flip")
+            # --- replay as ordinary routed writes (now land on dst) ------
             for off in range(0, n_moved, Bm):
                 ks = keys_all[off:off + Bm]
                 pad = Bm - len(ks)

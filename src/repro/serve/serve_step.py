@@ -66,6 +66,8 @@ class ServiceConfig:
     max_sessions: int = 8           # concurrent Session handles
     session_depth: int = 64         # per-session ring slots
     pack_lanes: Optional[int] = None    # per-shard pack width (None: lanes)
+    # -- durability (core.durability.DurabilityConfig or None) --
+    durability: Any = None          # set: wrap the store in DurableKV
     # -- pass-through store knobs (mode/trigger/compact_batch/...) --
     store_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
@@ -116,19 +118,28 @@ def make_kv_service(kv_cfg, service: Optional[ServiceConfig] = None, **kw):
     `kv.drop_replica(r)` / `kv.resync(r)` rotate a replica out of and
     back into serving without downtime.
 
-    Legacy keyword-splat calls still work through a deprecation shim."""
+    `service.durability` (a `core.durability.DurabilityConfig`) wraps the
+    store in `DurableKV`: CPR-style async snapshots + a write-ahead slab
+    log, so `core.durability.recover(dir, make_kv)` brings the deployment
+    back after a crash.  Legacy keyword-splat calls still work through a
+    deprecation shim."""
     sc = _coerce_service_cfg(service, kw)
     if sc.n_replicas > 1:
         from ..core.replication import ReplicatedKV
-        return ReplicatedKV(kv_cfg, sc.n_shards, n_replicas=sc.n_replicas,
-                            read_selector=sc.read_selector, lanes=sc.lanes,
-                            dispatch=sc.dispatch,
-                            rebalance_cfg=sc.rebalance_cfg,
-                            **sc.store_kwargs)
-    from ..core.sharded import ShardedKV
-    return ShardedKV(kv_cfg, sc.n_shards, lanes=sc.lanes,
-                     dispatch=sc.dispatch, rebalance_cfg=sc.rebalance_cfg,
-                     **sc.store_kwargs)
+        kv = ReplicatedKV(kv_cfg, sc.n_shards, n_replicas=sc.n_replicas,
+                          read_selector=sc.read_selector, lanes=sc.lanes,
+                          dispatch=sc.dispatch,
+                          rebalance_cfg=sc.rebalance_cfg,
+                          **sc.store_kwargs)
+    else:
+        from ..core.sharded import ShardedKV
+        kv = ShardedKV(kv_cfg, sc.n_shards, lanes=sc.lanes,
+                       dispatch=sc.dispatch, rebalance_cfg=sc.rebalance_cfg,
+                       **sc.store_kwargs)
+    if sc.durability is not None:
+        from ..core.durability import DurableKV
+        kv = DurableKV(kv, sc.durability)
+    return kv
 
 
 def make_session_service(kv_cfg, service: Optional[ServiceConfig] = None,

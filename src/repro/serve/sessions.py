@@ -300,6 +300,12 @@ class KVSessionService:
         self.pool = self._commit_j(self.pool, sess, slot, valid & placed,
                                    status, rvals)
         self.kv.maybe_rebalance()
+        # durability hook: a DurableKV backing store snapshots on its
+        # configured cadence at packed-round boundaries (between rounds the
+        # pool rings hold every un-acked op, so the snapshot is consistent)
+        snap = getattr(self.kv, "maybe_snapshot", None)
+        if snap is not None:
+            snap()
         self.pack_rounds += 1
         self._pending_fill.append(fill)
         if self.trace_schedule:

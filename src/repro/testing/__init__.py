@@ -1,0 +1,9 @@
+"""Test-support utilities: crash-fault injection for durability tests."""
+from repro.testing.faults import (  # noqa: F401
+    CRASH_POINTS,
+    InjectedCrash,
+    arm,
+    armed,
+    maybe_crash,
+    reset,
+)

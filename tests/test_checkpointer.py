@@ -1,0 +1,178 @@
+"""Checkpointer robustness: background-thread error surfacing, the
+rename-swap commit (a crash can never lose a committed step), torn
+artifacts (stale `.tmp_step_N`, manifest-less `step_N`, orphaned
+`.old_step_N`) ignored and garbage-collected, and the typed
+`CheckpointStructureError` on a restore-structure mismatch.
+
+The trainer suite exercises the happy path (async save/restore, elastic
+resharding); this file pins the failure paths the durability subsystem
+leans on.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import (Checkpointer,
+                                           CheckpointStructureError)
+from repro.testing import faults
+
+
+@pytest.fixture(autouse=True)
+def _disarm():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(4, 3)).astype(np.float32),
+            "b": rng.normal(size=(3,)).astype(np.float32)}
+
+
+def _poison():
+    # np.save(allow_pickle=False) refuses object arrays: a deterministic
+    # background-thread failure
+    return {"w": np.array([object()], dtype=object)}
+
+
+# ---------------------------------------------------------------------------
+# background-thread error surfacing
+# ---------------------------------------------------------------------------
+
+def test_background_error_surfaces_on_wait(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _poison())
+    with pytest.raises(ValueError):
+        ck.wait()
+    # the error is consumed: the checkpointer keeps working afterwards
+    ck.save(2, _state(), blocking=True)
+    assert ck.latest_step() == 2
+
+
+def test_background_error_surfaces_on_next_save(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _poison())
+    with pytest.raises(ValueError):
+        ck.save(2, _state())
+    ck.save(3, _state(), blocking=True)
+    assert ck.available_steps() == [3]
+
+
+def test_failed_save_leaves_no_committed_step(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, _poison())
+    with pytest.raises(ValueError):
+        ck.wait()
+    assert ck.available_steps() == []
+    with pytest.raises(FileNotFoundError):
+        ck.restore(_state())
+
+
+# ---------------------------------------------------------------------------
+# rename-swap commit + crash repair
+# ---------------------------------------------------------------------------
+
+def test_resave_same_step_swaps_atomically(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(0), blocking=True)
+    ck.save(1, _state(9), blocking=True)
+    got, step = ck.restore(_state())
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(got["w"]), _state(9)["w"])
+    # no swap debris
+    assert not any(d.startswith(".") for d in os.listdir(tmp_path))
+
+
+def test_crash_mid_swap_promotes_old_step(tmp_path):
+    """Crash window: `step_N` already renamed aside to `.old_step_N`, the
+    new tmp never made it.  A fresh Checkpointer promotes the old copy
+    back — the committed step is never lost."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(4, _state(3), blocking=True)
+    os.rename(tmp_path / "step_4", tmp_path / ".old_step_4")
+    ck2 = Checkpointer(str(tmp_path))
+    assert ck2.available_steps() == [4]
+    got, _ = ck2.restore(_state())
+    np.testing.assert_array_equal(np.asarray(got["w"]), _state(3)["w"])
+
+
+def test_crash_after_commit_drops_old_step(tmp_path):
+    """Crash window: tmp renamed over the final name, `.old_step_N` not
+    yet deleted.  The NEW copy wins; the stale old one is GC'd, not
+    promoted."""
+    ck = Checkpointer(str(tmp_path / "live"))
+    ck.save(4, _state(2), blocking=True)
+    scratch = Checkpointer(str(tmp_path / "scratch"))
+    scratch.save(4, _state(1), blocking=True)
+    os.rename(tmp_path / "scratch" / "step_4",
+              tmp_path / "live" / ".old_step_4")
+    ck2 = Checkpointer(str(tmp_path / "live"))
+    got, _ = ck2.restore(_state())
+    np.testing.assert_array_equal(np.asarray(got["w"]), _state(2)["w"])
+    assert not (tmp_path / "live" / ".old_step_4").exists()
+
+
+def test_crash_before_manifest_is_ignored(tmp_path):
+    """The injected crash point `checkpoint.before_manifest`: every leaf
+    written, no manifest — the torn snapshot is invisible to restore and
+    the previous step survives."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(0), blocking=True)
+    faults.arm("checkpoint.before_manifest")
+    with pytest.raises(faults.InjectedCrash):
+        ck.save(2, _state(7), blocking=True)
+    faults.reset()
+    assert ck.available_steps() == [1]
+    torn = tmp_path / ".tmp_step_2"
+    assert torn.exists() and not (torn / "manifest.json").exists()
+    ck2 = Checkpointer(str(tmp_path))           # GC on init
+    assert not torn.exists()
+    assert ck2.latest_step() == 1
+
+
+# ---------------------------------------------------------------------------
+# torn-artifact hygiene
+# ---------------------------------------------------------------------------
+
+def test_stale_tmp_and_manifestless_step_ignored_and_gcd(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(3, _state(), blocking=True)
+    (tmp_path / ".tmp_step_9").mkdir()
+    (tmp_path / ".tmp_step_9" / "leaf_0.npy").write_bytes(b"junk")
+    torn = tmp_path / "step_7"
+    torn.mkdir()
+    np.save(torn / "leaf_0.npy", np.zeros(3))   # leaves but no manifest
+    assert ck.available_steps() == [3]
+    _, step = ck.restore(_state())
+    assert step == 3
+    ck2 = Checkpointer(str(tmp_path))
+    assert ck2.available_steps() == [3]
+    assert not (tmp_path / ".tmp_step_9").exists()
+    assert not torn.exists()
+
+
+def test_gc_keeps_newest_k(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in range(1, 6):
+        ck.save(s, _state(s), blocking=True)
+    assert ck.available_steps() == [4, 5]
+
+
+# ---------------------------------------------------------------------------
+# typed structure error
+# ---------------------------------------------------------------------------
+
+def test_structure_error_names_offending_paths(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(2, _state(), blocking=True)
+    with pytest.raises(CheckpointStructureError) as ei:
+        ck.restore({"w": np.zeros((4, 3), np.float32)})
+    err = ei.value
+    assert isinstance(err, AssertionError)      # seed back-compat
+    assert err.step == 2
+    assert len(err.missing) == 1 and "b" in err.missing[0]
+    assert err.extra == []
+    assert "structure mismatch" in str(err)

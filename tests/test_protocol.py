@@ -47,13 +47,22 @@ def _sessions():
         store_kwargs=dict(trigger=0.6, compact_batch=64, donate=False)))
 
 
+def _durable():
+    import tempfile
+    from repro.core.durability import DurabilityConfig, DurableKV
+    return DurableKV(_sharded(),
+                     DurabilityConfig(dir=tempfile.mkdtemp(),
+                                      snapshot_every_rounds=8))
+
+
 FACADES = [("kv", _kv), ("sharded", _sharded), ("replicated", _replicated),
-           ("sessions", _sessions)]
+           ("sessions", _sessions), ("durable", _durable)]
 EXPECTED_SUBDICTS = {
     "kv": {"io"},
     "sharded": {"io", "shards"},
     "replicated": {"io", "shards", "replicas"},
     "sessions": {"io", "shards", "sessions"},
+    "durable": {"io", "shards", "durability"},
 }
 
 
