@@ -24,7 +24,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import functools
-import json
 import sys
 import time
 
@@ -37,6 +36,7 @@ import jax.numpy as jnp
 
 from repro.core import KV, F2Config, store
 from repro.core.types import OP_READ, OP_RMW, OP_UPSERT
+from repro.obs import export
 
 MIXES = {
     "A": {OP_READ: 0.5, OP_UPSERT: 0.5},
@@ -180,8 +180,9 @@ def main(argv=None):
             f"engines disagree at mix={row['mix']} theta={row['theta']}: {fps}")
 
     if args.out:
-        with open(args.out, "w") as f:
-            json.dump(results, f, indent=2)
+        export.write_bench_json(args.out, bench="mixed",
+                                config=vars(args),
+                                results=results)
         print(f"wrote {args.out}")
     return results
 

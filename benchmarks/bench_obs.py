@@ -1,0 +1,160 @@
+"""Observability overhead benchmark: the obs-enabled serving path vs. the
+obs-disabled one on an identical YCSB-A workload.
+
+Runs the same mixed batch stream through two identically-built
+`ShardedKV` stores — one with `repro.obs` armed (spans + metrics +
+journal), one with the kill-switch off — and reports the throughput
+ratio.  The disabled path must be bit-exact with the pre-observability
+code, and the enabled path must stay within a few percent of it: `--tiny`
+is the CI gate (`enabled/disabled >= 0.95`) and additionally asserts the
+two sides' `stats()` trees are value-identical, proving the registry
+fold changes nothing the caller sees.
+
+    PYTHONPATH=src python benchmarks/bench_obs.py [--tiny] \
+        [--out BENCH_obs.json] [--trace-out trace.json]
+
+`--trace-out` saves the enabled side's Chrome-trace JSON (load it in
+`chrome://tracing` or Perfetto); the BENCH envelope's
+`metrics_snapshot` carries the enabled side's full registry.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro import obs
+from repro.core import KV, F2Config
+from repro.core.sharded import ShardedKV
+from repro.core.types import OP_UPSERT
+from repro.obs import export
+
+try:                                    # python benchmarks/bench_obs.py
+    from bench_mixed import MIXES, mixed_batches
+except ImportError:                     # python -m benchmarks.bench_obs
+    from benchmarks.bench_mixed import MIXES, mixed_batches
+
+GATE_RATIO = 0.95          # enabled must keep >= 95% of disabled throughput
+
+
+def _make_cfg(tiny: bool) -> F2Config:
+    if tiny:
+        return F2Config(hot_index_size=1 << 9, hot_capacity=1 << 11,
+                        hot_mem=1 << 8, cold_capacity=1 << 13,
+                        cold_mem=1 << 7, n_chunks=1 << 7,
+                        chunklog_capacity=1 << 11, chunklog_mem=1 << 6,
+                        rc_capacity=1 << 7, value_width=2, chain_max=48)
+    return F2Config(hot_index_size=1 << 13, hot_capacity=1 << 16,
+                    hot_mem=1 << 13, cold_capacity=1 << 17,
+                    cold_mem=1 << 9, n_chunks=1 << 9,
+                    chunklog_capacity=1 << 12, chunklog_mem=1 << 7,
+                    rc_capacity=1 << 11, value_width=2, chain_max=48)
+
+
+def _build(cfg: F2Config, n_keys: int, n_shards: int) -> ShardedKV:
+    kv = ShardedKV(cfg, n_shards, trigger=2.0, donate=False)
+    keys = np.arange(n_keys, dtype=np.int32)
+    vals = np.stack([keys] * cfg.value_width, 1).astype(np.int32)
+    ops = np.full(n_keys, OP_UPSERT, np.int32)
+    B = 1024
+    for off in range(0, n_keys, B):
+        kv.apply(keys[off:off + B], ops[off:off + B], vals[off:off + B])
+    return kv
+
+
+def run_side(enabled: bool, cfg: F2Config, n_keys: int, n_shards: int,
+             batches, repeats: int) -> dict:
+    """One side of the A/B: fresh registry, fresh store, identical op
+    stream, best-of-N lap timing (min lap survives noisy CI runners)."""
+    obs.configure(enabled=enabled, reset=True)
+    kv = _build(cfg, n_keys, n_shards)
+    keys, ops, vals = batches
+    kv.apply(keys[0], ops[0], vals[0])          # compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for kb, ob, vb in zip(keys, ops, vals):
+            kv.apply(kb, ob, vb)
+        jax.block_until_ready(kv.state.hot.tail)
+        best = min(best, time.perf_counter() - t0)
+    n_ops = keys.shape[0] * keys.shape[1]
+    return dict(enabled=enabled, ops_per_s=n_ops / best, seconds=best,
+                n_ops=n_ops, stats=kv.stats())
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI gate mode: minimal sizes, asserts the "
+                         f"{GATE_RATIO:.0%} throughput floor and stats "
+                         "bit-compat")
+    ap.add_argument("--out", default=None, help="write results JSON here")
+    ap.add_argument("--trace-out", default=None,
+                    help="save the enabled side's Chrome-trace JSON here")
+    ap.add_argument("--repeats", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    if args.tiny:
+        n_keys, B, n_batches, repeats, n_shards = 512, 128, 4, 30, 4
+    else:
+        n_keys, B, n_batches, repeats, n_shards = 1 << 14, 2048, 8, 5, 8
+    if args.repeats:
+        repeats = args.repeats
+
+    rng = np.random.default_rng(23)
+    batches = mixed_batches(rng, MIXES["A"], n_keys, 0.99, B, n_batches,
+                            _make_cfg(args.tiny).value_width)
+    cfg = _make_cfg(args.tiny)
+
+    off = run_side(False, cfg, n_keys, n_shards, batches, repeats)
+    on = run_side(True, cfg, n_keys, n_shards, batches, repeats)
+    ratio = on["ops_per_s"] / off["ops_per_s"]
+    print(f"disabled: {off['ops_per_s'] / 1e3:9.1f} kops/s")
+    print(f"enabled:  {on['ops_per_s'] / 1e3:9.1f} kops/s")
+    print(f"enabled/disabled throughput ratio: {ratio:.3f}")
+
+    # a KV-facade lap for the chain-walk histogram (per-lane record
+    # touches — the probe-depth signal the read cache is meant to flatten)
+    kv1 = KV(cfg, trigger=2.0, donate=False)
+    keys = np.arange(min(n_keys, 1024), dtype=np.int32)
+    kv1.upsert(keys, np.stack([keys] * cfg.value_width, 1))
+    hops = kv1.chain_hops(keys[:256])
+    print(f"chain hops sample: mean={hops.mean():.2f} max={hops.max()}")
+
+    trace_events = len(obs.trace.TRACER)
+    if args.trace_out:
+        obs.trace.TRACER.save(args.trace_out)
+        print(f"wrote {trace_events} trace events to {args.trace_out}")
+
+    results = dict(backend=jax.default_backend(), n_keys=n_keys, batch=B,
+                   tiny=bool(args.tiny), disabled=off["ops_per_s"],
+                   enabled=on["ops_per_s"], ratio=ratio,
+                   trace_events=trace_events,
+                   chain_hops_mean=float(hops.mean()),
+                   stats_match=on["stats"] == off["stats"])
+    if args.out:
+        # written while the enabled side's registry is still live, so the
+        # envelope's metrics_snapshot carries the full metric catalog
+        export.write_bench_json(args.out, bench="obs", config=vars(args),
+                                results=results)
+        print(f"wrote {args.out}")
+    obs.configure(enabled=False)
+
+    assert results["stats_match"], (
+        "stats() trees differ between obs enabled and disabled:\n"
+        f"enabled:  {on['stats']}\ndisabled: {off['stats']}")
+    if args.tiny:
+        assert ratio >= GATE_RATIO, (
+            f"observability overhead gate failed: enabled/disabled = "
+            f"{ratio:.3f} < {GATE_RATIO}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import functools
-import json
 import sys
 import time
 
@@ -29,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import KV, F2Config, store
+from repro.obs import export
 
 
 def build_store(n_keys: int, cfg: F2Config) -> KV:
@@ -131,8 +131,9 @@ def main(argv=None):
         assert len(counts) == 1, f"engines disagree at theta={row['theta']}: {counts}"
 
     if args.out:
-        with open(args.out, "w") as f:
-            json.dump(results, f, indent=2)
+        export.write_bench_json(args.out, bench="probe",
+                                config=vars(args),
+                                results=results)
         print(f"wrote {args.out}")
     return results
 

@@ -30,7 +30,6 @@ than the no-rebalance baseline.
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 
@@ -47,6 +46,7 @@ from benchmarks.bench_shards import build_sharded
 from repro.core import OP_READ, OP_UPSERT, shard_router
 from repro.core.rebalance import RebalanceConfig, imbalance_of
 from repro.core.sharded import ShardedKV
+from repro.obs import export
 
 
 def shard_keyset(n_keys: int, shard: int, n_shards: int) -> np.ndarray:
@@ -175,8 +175,9 @@ def main(argv=None):
             f"{reb['final_imbalance']:.3f} vs {base['final_imbalance']:.3f}")
 
     if args.out:
-        with open(args.out, "w") as f:
-            json.dump(results, f, indent=2)
+        export.write_bench_json(args.out, bench="rebalance",
+                                config=vars(args),
+                                results=results)
         print(f"wrote {args.out}")
     return results
 

@@ -29,7 +29,6 @@ records from the healthy replica than resync.
 from __future__ import annotations
 
 import argparse
-import json
 import shutil
 import sys
 import tempfile
@@ -46,6 +45,7 @@ from benchmarks.harness import (load_store, make_durable_kv,
                                 make_sharded_kv, run_workload)
 from benchmarks.ycsb import Zipf, make_ops
 from repro.core.durability import recover
+from repro.obs import export
 
 
 def bench_hot_path(n_keys, S, store_kw, zipf, n_ops, batch, repeats,
@@ -248,8 +248,9 @@ def main(argv=None):
         assert reb["resync_drained"] > 0
 
     if args.out:
-        with open(args.out, "w") as f:
-            json.dump(results, f, indent=2)
+        export.write_bench_json(args.out, bench="recovery",
+                                config=vars(args),
+                                results=results)
         print(f"wrote {args.out}")
     return results
 

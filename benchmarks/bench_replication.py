@@ -24,7 +24,6 @@ phase, and bit-exact cross-replica state at the end of every run.
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 
@@ -40,6 +39,7 @@ from benchmarks.bench_rebalance import shard_keyset
 from benchmarks.harness import make_replicated_kv
 from repro.core import OP_UPSERT, ST_OK
 from repro.core.replication import ReplicatedKV, replicas_byte_identical
+from repro.obs import export
 
 
 def build(n_keys: int, S: int, R: int, W: int, vw: int, engine: str,
@@ -182,8 +182,9 @@ def main(argv=None):
             f"{results['r2_over_r1']:.2f}x")
 
     if args.out:
-        with open(args.out, "w") as f:
-            json.dump(results, f, indent=2)
+        export.write_bench_json(args.out, bench="replication",
+                                config=vars(args),
+                                results=results)
         print(f"wrote {args.out}")
     return results
 

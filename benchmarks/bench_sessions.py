@@ -29,7 +29,6 @@ hot-shard mix, and session slab occupancy STRICTLY above synchronous.
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 
@@ -44,6 +43,7 @@ from benchmarks.bench_mixed import zipf_keys
 from benchmarks.bench_rebalance import shard_keyset
 from benchmarks.harness import make_session_kv, make_sharded_kv
 from repro.core import OP_READ, OP_RMW, ST_OK
+from repro.obs import export
 
 
 def make_requests(rng, n_keys: int, hot_keys: np.ndarray, n_req: int,
@@ -234,8 +234,9 @@ def main(argv=None):
             f"{asyn['slab_occupancy']:.3f} <= {sync['slab_occupancy']:.3f}")
 
     if args.out:
-        with open(args.out, "w") as f:
-            json.dump(results, f, indent=2)
+        export.write_bench_json(args.out, bench="sessions",
+                                config=vars(args),
+                                results=results)
         print(f"wrote {args.out}")
     return results
 

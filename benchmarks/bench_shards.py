@@ -23,7 +23,6 @@ must be >= S=1 on the YCSB-B mix.
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 
@@ -38,6 +37,7 @@ from benchmarks.bench_mixed import MIXES, mixed_batches, zipf_keys  # noqa: F401
 from benchmarks.harness import make_sharded_kv
 from repro.core.rebalance import imbalance_of
 from repro.core.sharded import ShardedKV
+from repro.obs import export
 
 
 def build_sharded(n_keys: int, S: int, W: int, value_width: int,
@@ -168,8 +168,9 @@ def main(argv=None):
                 f"S=4 slower than S=1 on YCSB-B: {r['s4_over_s1']:.2f}x")
 
     if args.out:
-        with open(args.out, "w") as f:
-            json.dump(results, f, indent=2)
+        export.write_bench_json(args.out, bench="shards",
+                                config=vars(args),
+                                results=results)
         print(f"wrote {args.out}")
     return results
 

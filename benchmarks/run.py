@@ -22,7 +22,13 @@ def main() -> None:
                     help="probe/write engine backend swept by every section")
     ap.add_argument("--seed", type=int, default=2,
                     help="workload rng seed threaded through every section")
+    ap.add_argument("--metrics-out", default=None,
+                    help="arm repro.obs and write the full observability "
+                         "snapshot (metrics + journal) here at the end")
     args = ap.parse_args()
+    if args.metrics_out:
+        from repro import obs
+        obs.configure(enabled=True, reset=True)
     eng, seed = args.engine, args.seed
     scale = 2 if args.full else 1
     n_keys = (1 << 16) * scale
@@ -117,6 +123,10 @@ def main() -> None:
     for name, us, derived in csv:
         print(f"{name},{us:.3f},{derived}")
     print(f"\n[benchmarks total {time.time()-t_all:.0f}s]")
+    if args.metrics_out:
+        from repro.obs import export
+        export.save_snapshot(args.metrics_out)
+        print(f"wrote metrics snapshot {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,9 @@
 4. The async session layer: two ticketed sessions sharing one store —
    cross-session batch packing fills the routed slabs, completions
    surface out of order via poll(), per-session FIFO order holds.
+5. The observability layer: the same sharded run with `repro.obs` armed
+   — the metric catalog the facades fold into, the lifecycle journal,
+   a Chrome-trace dump, and the registry-backed `stats()` tree.
 
 Stores build through `serve_step.make_kv_service(cfg, ServiceConfig(...))`
 — the one deployment-shape value (shards, replicas, lanes, sessions).
@@ -186,6 +189,78 @@ def session_demo():
           f"{s['pack_rounds']} packed rounds")
 
 
+def obs_demo():
+    import json
+    import tempfile
+
+    from repro import obs
+    from repro.core import F2Config
+    from repro.obs.report import summarize
+    from repro.serve.serve_step import ServiceConfig, make_kv_service
+
+    cfg = F2Config(hot_index_size=1 << 10, hot_capacity=1 << 11,
+                   hot_mem=1 << 8, cold_capacity=1 << 14, cold_mem=1 << 7,
+                   n_chunks=1 << 8, chunklog_capacity=1 << 11,
+                   chunklog_mem=1 << 6, rc_capacity=1 << 8, value_width=4)
+    # obs_enabled arms the process-wide registry + tracer + journal; the
+    # same store with the switch off runs the identical bit-exact path
+    kv = make_kv_service(cfg, ServiceConfig(
+        n_shards=4, obs_enabled=True,
+        store_kwargs=dict(trigger=0.6, compact_batch=256, donate=False)))
+    obs.reset_all()                      # a clean window for this demo
+    print("\n=== observability: metrics + journal + trace ===")
+
+    rng = np.random.default_rng(5)
+    keys = np.arange(2048, dtype=np.int32)
+    vals = np.stack([keys] * 4, 1).astype(np.int32)
+    for off in range(0, 2048, 512):
+        kv.upsert(keys[off:off + 512], vals[off:off + 512])
+    for _ in range(4):                   # skewed rewrites feed the EWMAs
+        hot = rng.integers(0, 256, 512).astype(np.int32)
+        kv.upsert(hot, rng.integers(0, 99, (512, 4)).astype(np.int32))
+    # distinct keys append (rewrites update in place): the hot-log fill
+    # crosses the trigger and the pressure scheduler's compaction lands
+    # in the journal and the f2_compactions_total counter
+    more = np.arange(2048, 7168, dtype=np.int32)
+    for off in range(0, more.size, 512):
+        kv.upsert(more[off:off + 512],
+                  np.stack([more[off:off + 512]] * 4, 1).astype(np.int32))
+    kv.read(keys[:512])
+    stats = kv.stats()                   # registry-backed, shape-identical
+
+    reg = obs.get_registry()
+    print(f"{len(reg.names())} metric families after the run; e.g.")
+    for name in ("f2_compactions_total", "f2_deferral_rounds",
+                 "f2_bucket_traffic_ewma", "f2_stats_io_read_ops"):
+        m = reg.get(name)
+        if m is None:            # e.g. no compaction tripped this window
+            continue
+        for labels, child in m.samples():
+            v = (f"n={child.count}" if m.kind == "histogram"
+                 else child.value)
+            print(f"  {name}{dict(zip(m.label_names, labels))} -> {v}")
+    assert stats["io"]["read_ops"] == reg.get("f2_stats_io_read_ops"
+                                              ).labels(facade="sharded").value
+
+    print("journal:", ", ".join(f"{k} x{n}" for k, n in sorted(
+        {k: obs.journal.kinds().count(k)
+         for k in set(obs.journal.kinds())}.items())))
+
+    with tempfile.TemporaryDirectory() as d:
+        trace_path = obs.trace.TRACER.save(os.path.join(d, "trace.json"))
+        with open(trace_path) as f:
+            n_events = len(json.load(f)["traceEvents"])
+        print(f"saved {n_events} Chrome-trace events (load such a file in "
+              f"chrome://tracing or ui.perfetto.dev)")
+        snap_path = obs.export.save_snapshot(os.path.join(d, "obs.json"))
+        with open(snap_path) as f:
+            doc = json.load(f)
+        # `python -m repro.obs.report <snapshot.json>` prints exactly this
+        print("report summary (first lines):")
+        print("\n".join(summarize(doc).splitlines()[:6]))
+    obs.configure(enabled=False, reset=True)
+
+
 def main():
     res = run(n_keys=1 << 14, windows=10, win_ops=1 << 13, batch=1024)
     print(report(res))
@@ -196,6 +271,7 @@ def main():
     sharded_demo()
     replicated_demo()
     session_demo()
+    obs_demo()
 
 
 if __name__ == "__main__":

@@ -19,12 +19,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from . import compaction, store
 from .types import (BLOCK_BYTES, OP_DELETE, OP_READ, OP_RMW, OP_UPSERT,
                     F2Config)
 
 
 class KV:
+    _obs_facade = "kv"      # label on every metric this facade folds
     def __init__(
         self,
         cfg: F2Config,
@@ -74,6 +76,8 @@ class KV:
             lambda s: s._replace(**dict(zip(
                 ("cold_idx", "stats"),
                 _ci.compact_chunklog(s.cold_idx, cfg, s.stats)))))
+        # pure probe for observability; never donates state
+        self._hops = jax.jit(functools.partial(store.probe_hops, cfg))
 
     # -- batched operations --------------------------------------------------
     def apply(self, keys, ops, vals=None):
@@ -128,7 +132,11 @@ class KV:
         if self.cold_fill() > self.trigger:
             self.compact_cold_cold()
         if self.chunklog_fill() > self.trigger:
-            self.state = self._chunk_gc(self.state)
+            with obs.span("compact.chunk_gc", cat="compaction"):
+                self.state = self._chunk_gc(self.state)
+            obs.journal.emit("compaction.chunk_gc", facade=self._obs_facade)
+            obs.count("f2_compactions_total", facade=self._obs_facade,
+                      kind="chunk_gc")
 
     def _region(self, log_tail, log_begin):
         n = int(log_tail - log_begin)
@@ -140,20 +148,32 @@ class KV:
         n = n_records or self._region(int(self.state.hot.tail), begin)
         n = min(n, int(self.state.hot.tail) - begin)
         until = jnp.int32(begin + n)
-        for start in range(begin, begin + n, self.compact_batch):
-            self.state, _ = self._hc_step(self.state, jnp.int32(start), until)
-        self.state = self._hot_trunc(self.state, until)
+        with obs.span("compact.hot_cold", cat="compaction", records=n):
+            for start in range(begin, begin + n, self.compact_batch):
+                self.state, _ = self._hc_step(self.state, jnp.int32(start),
+                                              until)
+            self.state = self._hot_trunc(self.state, until)
         self.compactions += 1
+        obs.journal.emit("compaction.hot_cold", facade=self._obs_facade,
+                         records=n)
+        obs.count("f2_compactions_total", facade=self._obs_facade,
+                  kind="hot_cold")
 
     def compact_cold_cold(self, n_records: Optional[int] = None):
         begin = int(self.state.cold.begin)
         n = n_records or self._region(int(self.state.cold.tail), begin)
         n = min(n, int(self.state.cold.tail) - begin)
         until = jnp.int32(begin + n)
-        for start in range(begin, begin + n, self.compact_batch):
-            self.state, _ = self._cc_step(self.state, jnp.int32(start), until)
-        self.state = self._cold_trunc(self.state, until)
+        with obs.span("compact.cold_cold", cat="compaction", records=n):
+            for start in range(begin, begin + n, self.compact_batch):
+                self.state, _ = self._cc_step(self.state, jnp.int32(start),
+                                              until)
+            self.state = self._cold_trunc(self.state, until)
         self.compactions += 1
+        obs.journal.emit("compaction.cold_cold", facade=self._obs_facade,
+                         records=n)
+        obs.count("f2_compactions_total", facade=self._obs_facade,
+                  kind="cold_cold")
 
     def compact_single_log(self, n_records: Optional[int] = None):
         begin = int(self.state.hot.begin)
@@ -161,18 +181,23 @@ class KV:
         n = min(n, int(self.state.hot.tail) - begin)
         until = jnp.int32(begin + n)
         live_total = 0
-        for start in range(begin, begin + n, self.compact_batch):
-            self.state, n_live = self._sl_step(self.state, jnp.int32(start),
-                                               until)
-            live_total += int(n_live)
-        if self.faster_compaction == "scan":
-            # full-log sequential liveness scan + temp hash table memory
-            self.state = self._full_scan(self.state)
-            self.temp_table_peak_bytes = max(
-                self.temp_table_peak_bytes,
-                live_total * (self.cfg.record_bytes + 16))
-        self.state = self._hot_trunc(self.state, until)
+        with obs.span("compact.single_log", cat="compaction", records=n):
+            for start in range(begin, begin + n, self.compact_batch):
+                self.state, n_live = self._sl_step(self.state,
+                                                   jnp.int32(start), until)
+                live_total += int(n_live)
+            if self.faster_compaction == "scan":
+                # full-log sequential liveness scan + temp hash table memory
+                self.state = self._full_scan(self.state)
+                self.temp_table_peak_bytes = max(
+                    self.temp_table_peak_bytes,
+                    live_total * (self.cfg.record_bytes + 16))
+            self.state = self._hot_trunc(self.state, until)
         self.compactions += 1
+        obs.journal.emit("compaction.single_log", facade=self._obs_facade,
+                         records=n)
+        obs.count("f2_compactions_total", facade=self._obs_facade,
+                  kind="single_log")
 
     # -- reporting ------------------------------------------------------------
     def io_stats(self) -> dict:
@@ -184,13 +209,31 @@ class KV:
             mem_hits=int(s.mem_hits),
         )
 
+    def _stats_tree(self) -> dict:
+        """The raw nested telemetry tree; `stats()` folds it through the
+        metrics registry (identity when observability is disabled)."""
+        return dict(io=self.io_stats())
+
     def stats(self) -> dict:
         """The nested KVProtocol telemetry shape (`io` / `shards` /
         `replicas` / `sessions` sub-dicts; only `io` applies to the flat
         store).  Every facade — KV, ShardedKV, ReplicatedKV, and the
         session service — returns this same structure, so dashboards and
-        benches consume one shape regardless of the deployment."""
-        return dict(io=self.io_stats())
+        benches consume one shape regardless of the deployment.  With
+        observability enabled, every leaf is mirrored into `f2_stats_*`
+        gauges labeled by facade."""
+        return obs.fold_stats(self._obs_facade, self._stats_tree())
+
+    def chain_hops(self, keys) -> np.ndarray:
+        """Per-lane hash-chain record touches for a probe of `keys`
+        (pure: no state change, no modeled I/O charged).  Observations
+        land in the `f2_chain_hops` histogram when obs is enabled."""
+        keys = jnp.asarray(keys, jnp.int32)
+        hops = np.asarray(self._hops(self.state, keys))
+        obs.observe("f2_chain_hops", hops, buckets=obs.COUNT_BUCKETS,
+                    help="hash-chain record touches per probe lane",
+                    facade=self._obs_facade)
+        return hops
 
     def memory_model_bytes(self) -> dict:
         """In-memory footprint of each component under the paper's geometry

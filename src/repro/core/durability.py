@@ -61,6 +61,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core import shard_router
 from repro.core.types import OP_DELETE, OP_NOOP, OP_RMW, OP_UPSERT
@@ -178,6 +179,11 @@ class WalWriter:
         else:
             self._dirty = True          # flushed + fsync'd at sync()/close()
         self.seq += 1
+        kind = "slab" if rtype == REC_SLAB else "map"
+        obs.count("f2_wal_records_total", help="WAL records appended",
+                  kind=kind)
+        obs.count("f2_wal_bytes_total", _REC_HDR.size + len(payload),
+                  help="WAL bytes appended", kind=kind)
 
     # -- the two record types --------------------------------------------------
     def log_slab(self, keys, ops, vals, map_version: int):
@@ -208,8 +214,16 @@ class WalWriter:
         are returned — an op is acked only once its record is durable.
         No-op when nothing is buffered (e.g. fsync="always")."""
         if self._dirty and self._f is not None and not self._f.closed:
-            self._f.flush()
-            os.fsync(self._f.fileno())
+            if obs.enabled():
+                t0 = time.perf_counter()
+                self._f.flush()
+                os.fsync(self._f.fileno())
+                obs.observe("f2_wal_fsync_seconds",
+                            time.perf_counter() - t0,
+                            help="group-commit fsync latency")
+            else:
+                self._f.flush()
+                os.fsync(self._f.fileno())
             self._dirty = False
 
     def rotate(self, new_epoch: int):
@@ -221,6 +235,7 @@ class WalWriter:
         if self._f.tell() == 0:
             self._f.write(_SEG_HDR.pack(SEG_MAGIC, SEG_VERSION, self.epoch))
             self._f.flush()
+        obs.journal.emit("wal.segment_rotated", epoch=self.epoch)
 
     def close(self):
         if self._f is not None and not self._f.closed:
@@ -315,6 +330,8 @@ class DurableKV:
     shard_stats, drop_replica, ...) transparently delegates to the
     wrapped store."""
 
+    _obs_facade = "durable"
+
     def __init__(self, kv, cfg: DurabilityConfig):
         assert getattr(kv, "wal", "missing") is None, \
             "store already has a WAL installed (double-wrapped?)"
@@ -367,8 +384,8 @@ class DurableKV:
         self.maybe_snapshot()
         return out
 
-    def stats(self) -> dict:
-        out = self.kv.stats()
+    def _stats_tree(self) -> dict:
+        out = self.kv._stats_tree()
         out["durability"] = {
             "epoch": self.epoch,
             "snapshots": self.snapshots,
@@ -376,6 +393,9 @@ class DurableKV:
             "wal_segments": len(wal_epochs(self.dcfg.dir)),
         }
         return out
+
+    def stats(self) -> dict:
+        return obs.fold_stats(self._obs_facade, self._stats_tree())
 
     def check_invariants(self):
         self.kv.check_invariants()
@@ -402,18 +422,35 @@ class DurableKV:
         point), then hand the state pytree to the async Checkpointer.
         Off the step path unless `blocking`.  Returns the new epoch."""
         self.ckpt.wait()                # surface a prior save's error here
-        self.epoch += 1
-        self._wal.rotate(self.epoch)
-        payload = {"state": self.kv.state, "meta": self._meta()}
-        blocking = (self.dcfg.blocking_snapshots if blocking is None
-                    else blocking)
-        # segment GC rides the save worker: it is only correct once the
-        # snapshot is durable, and listdir+unlink have no business on the
-        # step path
-        self.ckpt.save(self.epoch, payload, blocking=blocking,
-                       on_commit=self._gc_segments)
-        self.snapshots += 1
-        self._last_snap_rounds = self.kv.rounds
+        with obs.span("durability.snapshot", cat="durability"):
+            self.epoch += 1
+            self._wal.rotate(self.epoch)
+            payload = {"state": self.kv.state, "meta": self._meta()}
+            blocking = (self.dcfg.blocking_snapshots if blocking is None
+                        else blocking)
+            epoch, t0 = self.epoch, time.perf_counter()
+
+            def _on_commit():
+                # runs on the Checkpointer worker thread; registry and
+                # journal are lock-protected
+                dt = time.perf_counter() - t0
+                obs.observe("f2_checkpoint_save_seconds", dt,
+                            help="snapshot capture-to-durable latency",
+                            facade=self._obs_facade)
+                obs.journal.emit("snapshot.committed", epoch=epoch,
+                                 seconds=round(dt, 6))
+                self._gc_segments()
+
+            # segment GC rides the save worker: it is only correct once the
+            # snapshot is durable, and listdir+unlink have no business on
+            # the step path
+            self.ckpt.save(self.epoch, payload, blocking=blocking,
+                           on_commit=_on_commit)
+            self.snapshots += 1
+            self._last_snap_rounds = self.kv.rounds
+        obs.journal.emit("snapshot.taken", epoch=self.epoch,
+                         blocking=bool(blocking))
+        obs.count("f2_snapshots_total", facade=self._obs_facade)
         return self.epoch
 
     def maybe_snapshot(self) -> bool:
@@ -503,12 +540,16 @@ class DurableKV:
                         retries=self.dcfg.segment_retries,
                         backoff=self.dcfg.retry_backoff)
         kv.alive[r] = True
-        n, end_map, _ = _replay(kv, recs, start_map, start_version,
-                                rep_mask=onehot, resync_only=r)
+        with obs.span("durability.rebuild_replica", cat="durability",
+                      replica=r):
+            n, end_map, _ = _replay(kv, recs, start_map, start_version,
+                                    rep_mask=onehot, resync_only=r)
         # replay must land on the live map — every migrate logged a MAP
         assert (end_map == kv.bucket_map).all(), \
             "WAL replay ended on a different bucket map than the live store"
         kv.resyncs += 1                 # telemetry parity with resync()
+        obs.journal.emit("replica.rebuilt", facade=self._obs_facade,
+                         replica=r, records=n)
         return n
 
 
@@ -655,7 +696,11 @@ def recover(directory: str, make_kv: Callable[[], Any],
 
     recs = read_wal(directory, from_epoch=from_epoch,
                     retries=cfg.segment_retries, backoff=cfg.retry_backoff)
-    _replay(kv, recs, start_map, start_version=kv.map_version)
+    with obs.span("durability.recover", cat="durability"):
+        n_replayed, _, _ = _replay(kv, recs, start_map,
+                                   start_version=kv.map_version)
+    obs.journal.emit("recovery.completed", records=n_replayed,
+                     snapshot_epoch=snap_epoch)
     if recs:
         next_seq = max(next_seq, recs[-1].seq + 1)
 

@@ -20,7 +20,11 @@ Surface (all batch-first, int32 everywhere):
     delete(keys)        -> (status [B], vals [B, V])
     stats()             -> nested telemetry dict: an `io` sub-dict always
         (read_bytes/write_bytes/read_ops/mem_hits), plus `shards` /
-        `replicas` / `sessions` sub-dicts as the deployment grows axes
+        `replicas` / `sessions` sub-dicts as the deployment grows axes.
+        Backed by the `repro.obs` metrics registry: with observability
+        enabled every leaf is mirrored into `f2_stats_*` gauges (labeled
+        by facade) as the tree is assembled; the returned dict's shape
+        and values are bit-identical either way
     check_invariants()  -> raises AssertionError on a broken store
 """
 from __future__ import annotations

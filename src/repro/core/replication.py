@@ -77,6 +77,7 @@ from jax.sharding import PartitionSpec as P
 
 from . import rebalance, shard_router, sharded, store
 from .sharded import DISPATCHES, SHARD_AXIS, ShardedKV, bucket_counts
+from repro import obs
 from repro.testing import faults
 from .types import (BLOCK_BYTES, OP_DELETE, OP_NOOP, OP_READ, OP_UPSERT,
                     F2Config, IoStats)
@@ -158,6 +159,8 @@ class ReplicatedKV(ShardedKV):
     applies the identical routed slabs), dedicated reads fan out (each
     lane served by exactly one replica, chosen by a deterministic
     selector), and replicas can be dropped and live-resynced."""
+
+    _obs_facade = "replicated"
 
     def __init__(
         self,
@@ -396,25 +399,36 @@ class ReplicatedKV(ShardedKV):
         bmap = self._bucket_map_dev
         active = np.ones(B, bool)
         if self.lanes is None or self.lanes >= B:
-            (status, rvals, _placed, _deferred, occ, bc, io_d, exh,
-             rl) = self._read_step(self.state, keys, rep_dev,
-                                   jnp.asarray(active), bmap)
-            self._note_read_round(occ, bc, io_d, exh, rl)
+            with obs.span("replicated.read", cat="serve", B=B):
+                (status, rvals, _placed, _deferred, occ, bc, io_d, exh,
+                 rl) = self._read_step(self.state, keys, rep_dev,
+                                       jnp.asarray(active), bmap)
+                self._note_read_round(occ, bc, io_d, exh, rl)
+            obs.observe("f2_deferral_rounds", 1, buckets=obs.COUNT_BUCKETS,
+                        help="routed rounds needed per client batch",
+                        facade=self._obs_facade, path="read")
             return status, rvals
         status = np.zeros(B, np.int32)
         rvals = np.zeros((B, self.cfg.value_width), np.int32)
+        n_rounds = 0
         for _ in range(B + 1):
-            (st_b, rv_b, placed, deferred, occ, bc, io_d, exh,
-             rl) = self._read_step(self.state, keys, rep_dev,
-                                   jnp.asarray(active), bmap)
+            with obs.span("replicated.read", cat="serve", B=B):
+                (st_b, rv_b, placed, deferred, occ, bc, io_d, exh,
+                 rl) = self._read_step(self.state, keys, rep_dev,
+                                       jnp.asarray(active), bmap)
+                self._note_read_round(occ, bc, io_d, exh, rl)
+            n_rounds += 1
             placed_np = np.asarray(placed)
-            self._note_read_round(occ, bc, io_d, exh, rl)
             status = np.where(placed_np, np.asarray(st_b), status)
             rvals = np.where(placed_np[:, None], np.asarray(rv_b), rvals)
             deferred_np = np.asarray(deferred)
             if not deferred_np.any():
                 break
             active = deferred_np
+        obs.observe("f2_deferral_rounds", n_rounds,
+                    buckets=obs.COUNT_BUCKETS,
+                    help="routed rounds needed per client batch",
+                    facade=self._obs_facade, path="read")
         return jnp.asarray(status), jnp.asarray(rvals)
 
     # -- fan-out read telemetry (host-side: replica states never change) -----
@@ -435,6 +449,18 @@ class ReplicatedKV(ShardedKV):
             self._read_exhausted |= np.asarray(exh)
             self._replica_load = (self._replica_decay * self._replica_load
                                   + np.asarray(rl).astype(np.float64))
+        if obs.enabled():       # mirror the folded fan-out read signal
+            obs.gauge_set("f2_replica_load", self._replica_load.tolist(),
+                          help="per-replica fan-out read-load EWMA",
+                          facade=self._obs_facade)
+            obs.count_total("f2_fanout_read_ops_total",
+                            int(self._read_io["read_ops"].sum()),
+                            help="reads served via replica fan-out",
+                            facade=self._obs_facade)
+            obs.count_total("f2_fanout_mem_hits_total",
+                            int(self._read_io["mem_hits"].sum()),
+                            help="fan-out reads served from memory",
+                            facade=self._obs_facade)
 
     @property
     def replica_load(self) -> np.ndarray:
@@ -452,6 +478,9 @@ class ReplicatedKV(ShardedKV):
         assert not self._migrating
         self.alive[r] = False
         self.drops += 1
+        obs.journal.emit("replica.dropped", facade=self._obs_facade,
+                         replica=r)
+        obs.count("f2_replica_drops_total", facade=self._obs_facade)
 
     def resync(self, r: int) -> int:
         """Rebuild dropped replica r live from a healthy replica: reset ->
@@ -462,6 +491,8 @@ class ReplicatedKV(ShardedKV):
         r = int(r)
         assert not self.alive[r], f"replica {r} is alive; drop it first"
         assert not self._migrating
+        rs_span = obs.span("replica.resync", cat="replication", replica=r)
+        rs_span.__enter__()
         h = self._primary(self.alive)
         Bm = self._mig_batch
         V = self.cfg.value_width
@@ -535,8 +566,12 @@ class ReplicatedKV(ShardedKV):
         finally:
             self._resync_only = None
             self._migrating = False
+            rs_span.__exit__(None, None, None)
         self.resyncs += 1
         self.resynced_records += n_moved
+        obs.journal.emit("replica.resynced", facade=self._obs_facade,
+                         replica=r, records=n_moved)
+        obs.count("f2_replica_resyncs_total", facade=self._obs_facade)
         return n_moved
 
     # -- reporting ------------------------------------------------------------
@@ -568,10 +603,11 @@ class ReplicatedKV(ShardedKV):
             resynced_records=self.resynced_records,
         )
 
-    def stats(self) -> dict:
-        """The nested KVProtocol telemetry shape, with the per-replica
-        sub-dict added (liveness, load EWMA, lifecycle counters)."""
-        out = super().stats()
+    def _stats_tree(self) -> dict:
+        """The nested KVProtocol telemetry tree, with the per-replica
+        sub-dict added (liveness, load EWMA, lifecycle counters); the
+        inherited `stats()` folds it under the `replicated` facade."""
+        out = super()._stats_tree()
         out["replicas"] = self.replica_stats()
         return out
 

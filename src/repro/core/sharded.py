@@ -74,6 +74,7 @@ from jax.sharding import PartitionSpec as P
 from . import compaction, rebalance, shard_router, store
 from . import cold_index as _cold_index
 from .rebalance import RebalanceConfig
+from repro import obs
 from repro.testing import faults
 from .types import (BLOCK_BYTES, OP_DELETE, OP_NOOP, OP_READ, OP_RMW,
                     OP_UPSERT, F2Config)
@@ -148,6 +149,8 @@ class ShardedKV:
     """API-compatible with `api.KV` (apply/upsert/read/rmw/delete,
     check_invariants, io_stats, memory_model_bytes, compact_*), holding S
     hash-partitioned shards behind one deterministic batch router."""
+
+    _obs_facade = "sharded"
 
     def __init__(
         self,
@@ -359,6 +362,14 @@ class ShardedKV:
             self._routed_lanes += np.asarray(occ_np).astype(np.int64)
             self._traffic_ewma = (self._decay * self._traffic_ewma
                                   + np.asarray(bc_np))
+        if obs.enabled():       # mirror the folded traffic signal
+            obs.gauge_set("f2_bucket_traffic_ewma",
+                          self._traffic_ewma.tolist(),
+                          help="per-bucket routed-traffic EWMA",
+                          facade=self._obs_facade)
+            obs.gauge_set("f2_routed_lanes", self._routed_lanes.tolist(),
+                          help="cumulative routed lanes per shard",
+                          facade=self._obs_facade)
 
     @property
     def traffic_ewma(self) -> np.ndarray:
@@ -398,11 +409,13 @@ class ShardedKV:
             # it reconstructs data the log already covers; `apply` logs
             # its whole batch itself and re-derives the deferral rounds)
             self.wal.log_slab(keys, ops, vals, self.map_version)
-        (self.state, status, rvals, placed, deferred,
-         occ, bc) = self._step(self.state, keys, ops, vals,
-                               self._bucket_map_dev)
-        self._note_round(occ, bc)
-        self.maybe_compact()
+        with obs.span("sharded.apply_round", cat="serve",
+                      B=int(keys.shape[0])):
+            (self.state, status, rvals, placed, deferred,
+             occ, bc) = self._step(self.state, keys, ops, vals,
+                                   self._bucket_map_dev)
+            self._note_round(occ, bc)
+            self.maybe_compact()
         return status, rvals, placed, deferred
 
     def apply(self, keys, ops, vals=None):
@@ -417,6 +430,9 @@ class ShardedKV:
             # round-trips of per-lane results (the serving hot path)
             status, rvals, _placed, _deferred = self.apply_round(keys, ops,
                                                                  vals)
+            obs.observe("f2_deferral_rounds", 1, buckets=obs.COUNT_BUCKETS,
+                        help="routed rounds needed per client batch",
+                        facade=self._obs_facade, path="apply")
             self.maybe_rebalance()
             return status, rvals
         # write-ahead ONCE for the whole batch: the map is frozen until
@@ -428,11 +444,13 @@ class ShardedKV:
         rvals = np.zeros((B, self.cfg.value_width), np.int32)
         cur_ops = ops
         self._wal_defer = True
+        n_rounds = 0
         try:
             for _ in range(B + 1):      # each round places >= 1 lane
                 st_r, rv_r, placed, deferred = self.apply_round(keys,
                                                                 cur_ops,
                                                                 vals)
+                n_rounds += 1
                 placed_np = np.asarray(placed)
                 status = np.where(placed_np, np.asarray(st_r), status)
                 rvals = np.where(placed_np[:, None], np.asarray(rv_r),
@@ -444,6 +462,10 @@ class ShardedKV:
                                     jnp.int32(OP_NOOP))
         finally:
             self._wal_defer = False
+        obs.observe("f2_deferral_rounds", n_rounds,
+                    buckets=obs.COUNT_BUCKETS,
+                    help="routed rounds needed per client batch",
+                    facade=self._obs_facade, path="apply")
         # the rebalance check runs once per batch, after every routed
         # round has executed (a mid-batch map flip would re-route lanes
         # that were already deferred under the old map — harmless, but
@@ -466,17 +488,24 @@ class ShardedKV:
         bmap = self._bucket_map_dev     # re-uploaded only at a map flip
         cur_ops = jnp.full((B,), OP_READ, jnp.int32)
         if self.lanes is None or self.lanes >= B:
-            (self.state, status, rvals, _placed, _deferred,
-             occ, bc) = self._read_step(self.state, keys, cur_ops, bmap)
-            self._note_round(occ, bc)
+            with obs.span("sharded.read", cat="serve", B=B):
+                (self.state, status, rvals, _placed, _deferred,
+                 occ, bc) = self._read_step(self.state, keys, cur_ops, bmap)
+                self._note_round(occ, bc)
+            obs.observe("f2_deferral_rounds", 1, buckets=obs.COUNT_BUCKETS,
+                        help="routed rounds needed per client batch",
+                        facade=self._obs_facade, path="read")
             return status, rvals
         status = np.zeros(B, np.int32)
         rvals = np.zeros((B, self.cfg.value_width), np.int32)
+        n_rounds = 0
         for _ in range(B + 1):
-            (self.state, st_r, rv_r, placed, deferred,
-             occ, bc) = self._read_step(self.state, keys, cur_ops, bmap)
+            with obs.span("sharded.read", cat="serve", B=B):
+                (self.state, st_r, rv_r, placed, deferred,
+                 occ, bc) = self._read_step(self.state, keys, cur_ops, bmap)
+                self._note_round(occ, bc)
+            n_rounds += 1
             placed_np = np.asarray(placed)
-            self._note_round(occ, bc)
             status = np.where(placed_np, np.asarray(st_r), status)
             rvals = np.where(placed_np[:, None], np.asarray(rv_r), rvals)
             deferred_np = np.asarray(deferred)
@@ -484,6 +513,10 @@ class ShardedKV:
                 break
             cur_ops = jnp.where(jnp.asarray(deferred_np),
                                 jnp.int32(OP_READ), jnp.int32(OP_NOOP))
+        obs.observe("f2_deferral_rounds", n_rounds,
+                    buckets=obs.COUNT_BUCKETS,
+                    help="routed rounds needed per client batch",
+                    facade=self._obs_facade, path="read")
         return jnp.asarray(status), jnp.asarray(rvals)
 
     def rmw(self, keys, deltas):
@@ -547,7 +580,14 @@ class ShardedKV:
         chunk_over = self._sched_mask(
             (it - ib) / self.cfg.chunklog_capacity > self.trigger)
         if chunk_over.any():
-            self.state = self._chunk_gc(self.state, jnp.asarray(chunk_over))
+            n_sh = int(chunk_over.sum())
+            with obs.span("compact.chunk_gc", cat="compaction", shards=n_sh):
+                self.state = self._chunk_gc(self.state,
+                                            jnp.asarray(chunk_over))
+            obs.journal.emit("compaction.chunk_gc",
+                             facade=self._obs_facade, shards=n_sh)
+            obs.count("f2_compactions_total", facade=self._obs_facade,
+                      kind="chunk_gc")
 
     def _regions(self, begins, tails, n_records, shards):
         """Per-shard compaction region sizes, mirroring KV._region exactly
@@ -583,36 +623,58 @@ class ShardedKV:
         hb, ht, *_ = self._bounds()
         shards = np.ones(hb.shape, bool) if shards is None else shards
         shards = self._sched_mask(np.asarray(shards, bool))
+        n_sh = int(shards.sum())
         n = self._regions(hb, ht, n_records, shards)
-        until, _ = self._masked_steps(self._hc_step, hb, n, shards)
-        self.state = self._hot_trunc(self.state, until, jnp.asarray(shards))
+        with obs.span("compact.hot_cold", cat="compaction", shards=n_sh):
+            until, _ = self._masked_steps(self._hc_step, hb, n, shards)
+            self.state = self._hot_trunc(self.state, until,
+                                         jnp.asarray(shards))
         self.compactions += shards.astype(np.int64)
+        obs.journal.emit("compaction.hot_cold", facade=self._obs_facade,
+                         shards=n_sh)
+        obs.count("f2_compactions_total", facade=self._obs_facade,
+                  kind="hot_cold")
 
     def compact_cold_cold(self, n_records: Optional[int] = None,
                           shards: Optional[np.ndarray] = None):
         _, _, cb, ct, *_ = self._bounds()
         shards = np.ones(cb.shape, bool) if shards is None else shards
         shards = self._sched_mask(np.asarray(shards, bool))
+        n_sh = int(shards.sum())
         n = self._regions(cb, ct, n_records, shards)
-        until, _ = self._masked_steps(self._cc_step, cb, n, shards)
-        self.state = self._cold_trunc(self.state, until, jnp.asarray(shards))
+        with obs.span("compact.cold_cold", cat="compaction", shards=n_sh):
+            until, _ = self._masked_steps(self._cc_step, cb, n, shards)
+            self.state = self._cold_trunc(self.state, until,
+                                          jnp.asarray(shards))
         self.compactions += shards.astype(np.int64)
+        obs.journal.emit("compaction.cold_cold", facade=self._obs_facade,
+                         shards=n_sh)
+        obs.count("f2_compactions_total", facade=self._obs_facade,
+                  kind="cold_cold")
 
     def compact_single_log(self, n_records: Optional[int] = None,
                            shards: Optional[np.ndarray] = None):
         hb, ht, *_ = self._bounds()
         shards = np.ones(hb.shape, bool) if shards is None else shards
         shards = self._sched_mask(np.asarray(shards, bool))
+        n_sh = int(shards.sum())
         n = self._regions(hb, ht, n_records, shards)
-        until, live_total = self._masked_steps(self._sl_step, hb, n, shards)
-        if self.faster_compaction == "scan":
-            self.state = self._full_scan(self.state, jnp.asarray(shards))
-            self.temp_table_peak_bytes = np.maximum(
-                self.temp_table_peak_bytes,
-                np.where(shards,
-                         live_total * (self.cfg.record_bytes + 16), 0))
-        self.state = self._hot_trunc(self.state, until, jnp.asarray(shards))
+        with obs.span("compact.single_log", cat="compaction", shards=n_sh):
+            until, live_total = self._masked_steps(self._sl_step, hb, n,
+                                                   shards)
+            if self.faster_compaction == "scan":
+                self.state = self._full_scan(self.state, jnp.asarray(shards))
+                self.temp_table_peak_bytes = np.maximum(
+                    self.temp_table_peak_bytes,
+                    np.where(shards,
+                             live_total * (self.cfg.record_bytes + 16), 0))
+            self.state = self._hot_trunc(self.state, until,
+                                         jnp.asarray(shards))
         self.compactions += shards.astype(np.int64)
+        obs.journal.emit("compaction.single_log", facade=self._obs_facade,
+                         shards=n_sh)
+        obs.count("f2_compactions_total", facade=self._obs_facade,
+                  kind="single_log")
 
     # -- live rebalancing (core.rebalance) -----------------------------------
     def shard_stats(self) -> rebalance.ShardStats:
@@ -638,13 +700,9 @@ class ShardedKV:
             bucket_map=self.bucket_map.copy(),
         )
 
-    def stats(self) -> dict:
-        """The ONE nested telemetry shape every facade speaks (KVProtocol):
-        an `io` sub-dict (KV.io_stats totals) plus, per facade, `shards`
-        (this class), `replicas` (ReplicatedKV) and `sessions`
-        (serve.sessions.KVSessionService) sub-dicts — what an operator
-        dashboard polls, what `serve_step.kv_service_stats` returns, and
-        what the benches report from."""
+    def _stats_tree(self) -> dict:
+        """The raw nested telemetry tree; `stats()` folds it through the
+        metrics registry (identity when observability is disabled)."""
         return dict(
             io=self.io_stats(),
             shards=dict(
@@ -657,6 +715,16 @@ class ShardedKV:
                 migrated_records=self.migrated_records,
             ),
         )
+
+    def stats(self) -> dict:
+        """The ONE nested telemetry shape every facade speaks (KVProtocol):
+        an `io` sub-dict (KV.io_stats totals) plus, per facade, `shards`
+        (this class), `replicas` (ReplicatedKV) and `sessions`
+        (serve.sessions.KVSessionService) sub-dicts — what an operator
+        dashboard polls, what `serve_step.kv_service_stats` returns, and
+        what the benches report from.  With observability enabled, every
+        leaf is mirrored into `f2_stats_*` gauges labeled by facade."""
+        return obs.fold_stats(self._obs_facade, self._stats_tree())
 
     def maybe_rebalance(self) -> bool:
         """Occupancy-driven trigger, run next to the pressure scheduler:
@@ -730,6 +798,9 @@ class ShardedKV:
             # --- drain: compaction-style liveness frontiers over the
             #     source shards' cold then hot logs (cold first so the
             #     replay linearizes hot versions over cold ones) ----------
+            mig_span = obs.span("rebalance.migrate", cat="rebalance",
+                                buckets=int(changed.size))
+            mig_span.__enter__()
             hb, ht, cb, ct, *_ = self._bounds()
             parts = []              # (keys, vals, ops) np fragments
             for tier, begins, tails in (("cold", cb, ct), ("hot", hb, ht)):
@@ -801,9 +872,16 @@ class ShardedKV:
                 self.apply(ks, os_, vs)
         finally:
             self._migrating = False
+            mig_span.__exit__(None, None, None)
         self.migrations += 1
         self.migrated_buckets += int(changed.size)
         self.migrated_records += n_moved
+        obs.journal.emit("rebalance.migrated", facade=self._obs_facade,
+                         buckets=int(changed.size), records=n_moved,
+                         map_version=self.map_version)
+        obs.count("f2_migrations_total", facade=self._obs_facade)
+        obs.count("f2_migrated_records_total", n_moved,
+                  facade=self._obs_facade)
         return n_moved
 
     # -- reporting ------------------------------------------------------------

@@ -129,6 +129,30 @@ def read_batch(
     return state, status, vals
 
 
+def probe_hops(cfg: F2Config, state: F2State, keys: jax.Array) -> jax.Array:
+    """Per-lane chain-walk record touches for a read probe of `keys` —
+    hot-tier walk plus the cold continuation for hot misses.  Pure
+    telemetry: no state change, no admission, no modeled I/O charged;
+    the observability layer folds the result into the `f2_chain_hops`
+    histogram (`KV.chain_hops`), giving the per-lane distribution the
+    aggregate `IoStats.mem_hits` total cannot show."""
+    B = keys.shape[0]
+    active = jnp.ones((B,), jnp.bool_)
+    hot_head = hybrid_log.head_addr(state.hot, cfg.hot_mem)
+    lower = jnp.broadcast_to(state.hot.begin, (B,))
+    res_h = probe_engine.probe(cfg, keys, state.hot, lower, hot_head, active,
+                               index=state.hot_index, rc=state.rc,
+                               rc_match=True)
+    cold_active = active & ~res_h.found
+    entries, _ = cold_index.find_entries(state.cold_idx, cfg, keys,
+                                         cold_active, state.stats)
+    cold_head = hybrid_log.head_addr(state.cold, cfg.cold_mem)
+    lower_c = jnp.broadcast_to(state.cold.begin, (B,))
+    res_c = probe_engine.probe(cfg, keys, state.cold, lower_c, cold_head,
+                               cold_active, heads=entries, rc=None)
+    return res_h.hops + res_c.hops
+
+
 # ---------------------------------------------------------------------------
 # Write path: Upsert / RMW / Delete (paper S5.3, Algorithm 1)
 # ---------------------------------------------------------------------------

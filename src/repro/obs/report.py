@@ -1,0 +1,100 @@
+"""One-shot text summarizer for observability snapshots:
+
+    python -m repro.obs.report <snapshot.json>
+
+Accepts any of the three JSON shapes this package writes — a raw
+`metrics_snapshot()`, a full `export.snapshot()` (metrics + journal),
+or a `BENCH_*.json` envelope (whose `metrics_snapshot` field it
+summarizes, with the bench name and git sha in the header)."""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Optional
+
+
+def _extract(doc: dict):
+    """-> (metrics_dict, journal_dict_or_None, header_lines)."""
+    header = []
+    if "metrics_snapshot" in doc:           # bench envelope
+        header.append(f"bench: {doc.get('bench')}  "
+                      f"git_sha: {doc.get('git_sha')}")
+        return doc["metrics_snapshot"], None, header
+    if "metrics" in doc and isinstance(doc["metrics"], dict):
+        return doc["metrics"], doc.get("journal"), header
+    return doc, None, header                # raw metrics snapshot
+
+
+def _hist_quantile(buckets, counts, q: float) -> Optional[float]:
+    """Upper-bound estimate of the q-quantile from bucket counts."""
+    total = sum(counts)
+    if not total:
+        return None
+    target = q * total
+    cum = 0
+    for edge, c in zip(buckets, counts):
+        cum += c
+        if cum >= target:
+            return edge
+    return float("inf")
+
+
+def summarize(doc: dict) -> str:
+    metrics, jrnl, lines = _extract(doc)
+    counters, gauges, hists = [], [], []
+    for name in sorted(metrics):
+        m = metrics[name]
+        kind = m.get("type")
+        for s in m.get("samples", []):
+            lbl = ",".join(f"{k}={v}" for k, v in
+                           sorted(s.get("labels", {}).items()))
+            tag = f"{name}{{{lbl}}}" if lbl else name
+            if kind == "histogram":
+                mean = s["sum"] / s["count"] if s["count"] else 0.0
+                p50 = _hist_quantile(m["buckets"], s["bucket_counts"], 0.5)
+                p99 = _hist_quantile(m["buckets"], s["bucket_counts"], 0.99)
+                hists.append(f"  {tag}: n={s['count']} mean={mean:.6g} "
+                             f"p50<={p50} p99<={p99}")
+            elif kind == "counter":
+                counters.append(f"  {tag} = {s['value']}")
+            else:
+                v = s.get("value")
+                if isinstance(v, list) and len(v) > 8:
+                    v = f"[{len(v)} values, sum={sum(v):g}]" if all(
+                        isinstance(x, (int, float, bool)) for x in v) else \
+                        f"[{len(v)} values]"
+                gauges.append(f"  {tag} = {v}")
+    if counters:
+        lines += ["counters:"] + counters
+    if gauges:
+        lines += ["gauges:"] + gauges
+    if hists:
+        lines += ["histograms:"] + hists
+    if jrnl:
+        lines.append(f"journal: {jrnl.get('total', 0)} events "
+                     f"({jrnl.get('dropped', 0)} dropped)")
+        by_kind: dict = {}
+        for ev in jrnl.get("events", []):
+            by_kind[ev["kind"]] = by_kind.get(ev["kind"], 0) + 1
+        for kind in sorted(by_kind):
+            lines.append(f"  {kind} x{by_kind[kind]}")
+    if not lines:
+        lines = ["(empty snapshot)"]
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="Summarize a repro.obs snapshot / bench envelope.")
+    ap.add_argument("snapshot", help="path to the JSON file")
+    args = ap.parse_args(argv)
+    with open(args.snapshot) as f:
+        doc = json.load(f)
+    print(summarize(doc))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -68,6 +68,8 @@ class ServiceConfig:
     pack_lanes: Optional[int] = None    # per-shard pack width (None: lanes)
     # -- durability (core.durability.DurabilityConfig or None) --
     durability: Any = None          # set: wrap the store in DurableKV
+    # -- observability (repro.obs): arm metrics/trace/journal process-wide --
+    obs_enabled: bool = False
     # -- pass-through store knobs (mode/trigger/compact_batch/...) --
     store_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
@@ -124,6 +126,9 @@ def make_kv_service(kv_cfg, service: Optional[ServiceConfig] = None, **kw):
     back after a crash.  Legacy keyword-splat calls still work through a
     deprecation shim."""
     sc = _coerce_service_cfg(service, kw)
+    if sc.obs_enabled:
+        from repro import obs
+        obs.configure(enabled=True)
     if sc.n_replicas > 1:
         from ..core.replication import ReplicatedKV
         kv = ReplicatedKV(kv_cfg, sc.n_shards, n_replicas=sc.n_replicas,

@@ -59,6 +59,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 from ..core import shard_router
 from ..core.types import (OP_DELETE, OP_NOOP, OP_READ, OP_RMW, OP_UPSERT,
                           ST_NONE)
@@ -218,6 +220,8 @@ class KVSessionService:
     the protocol — benches, demos, conformance tests — runs unchanged on
     the async service."""
 
+    _obs_facade = "sessions"
+
     def __init__(self, kv, max_sessions: int = 8, session_depth: int = 64,
                  pack_lanes: Optional[int] = None):
         assert hasattr(kv, "apply_round"), \
@@ -272,6 +276,9 @@ class KVSessionService:
                 assert s._head == s._tail, "reused sid has in-use slots"
                 self._sessions[sid] = s
                 self.sessions_opened += 1
+                obs.journal.emit("session.opened", sid=sid)
+                obs.count("f2_sessions_opened_total",
+                          facade=self._obs_facade)
                 return s
         raise RuntimeError(f"all {self.N} sessions are open")
 
@@ -280,6 +287,7 @@ class KVSessionService:
             "close_session with outstanding ops: drain() first"
         self._sessions[session.sid] = None
         session.open = False
+        obs.journal.emit("session.closed", sid=session.sid)
 
     # -- the scheduler round --------------------------------------------------
     def total_outstanding(self) -> int:
@@ -290,22 +298,25 @@ class KVSessionService:
         -> per-batch rebalance check.  With `sync=False` (the serving hot
         path) nothing round-trips to the host; `sync=True` returns the
         number of lanes packed (0 = the pool had nothing pending)."""
-        (bkeys, bops, bvals, sess, slot, valid,
-         fill) = self._pack_j(self.pool, self.kv._bucket_map_dev)
-        status, rvals, placed, _deferred = self.kv.apply_round(
-            bkeys, bops, bvals)
-        # by construction the packer never exceeds a shard's slab width,
-        # so nothing defers; `placed` still gates the commit so an
-        # (impossible) unexecuted lane could never read a stale result
-        self.pool = self._commit_j(self.pool, sess, slot, valid & placed,
-                                   status, rvals)
-        self.kv.maybe_rebalance()
-        # durability hook: a DurableKV backing store snapshots on its
-        # configured cadence at packed-round boundaries (between rounds the
-        # pool rings hold every un-acked op, so the snapshot is consistent)
-        snap = getattr(self.kv, "maybe_snapshot", None)
-        if snap is not None:
-            snap()
+        with obs.span("sessions.step", cat="serve"):
+            (bkeys, bops, bvals, sess, slot, valid,
+             fill) = self._pack_j(self.pool, self.kv._bucket_map_dev)
+            status, rvals, placed, _deferred = self.kv.apply_round(
+                bkeys, bops, bvals)
+            # by construction the packer never exceeds a shard's slab
+            # width, so nothing defers; `placed` still gates the commit so
+            # an (impossible) unexecuted lane could never read a stale
+            # result
+            self.pool = self._commit_j(self.pool, sess, slot,
+                                       valid & placed, status, rvals)
+            self.kv.maybe_rebalance()
+            # durability hook: a DurableKV backing store snapshots on its
+            # configured cadence at packed-round boundaries (between rounds
+            # the pool rings hold every un-acked op, so the snapshot is
+            # consistent)
+            snap = getattr(self.kv, "maybe_snapshot", None)
+            if snap is not None:
+                snap()
         self.pack_rounds += 1
         self._pending_fill.append(fill)
         if self.trace_schedule:
@@ -447,6 +458,16 @@ class KVSessionService:
             self._fill_sum += f
             self._packed_lanes += int(f.sum())
             self._fill_rounds += 1
+        if obs.enabled():       # mirror the folded packing signal
+            denom = self._fill_rounds * self.kv.S * self.W
+            obs.gauge_set("f2_slab_occupancy",
+                          self._packed_lanes / denom if denom else 0.0,
+                          help="mean fraction of slab lanes filled per "
+                               "packed round",
+                          facade=self._obs_facade)
+            obs.count_total("f2_packed_lanes_total", self._packed_lanes,
+                            help="lanes packed into routed rounds",
+                            facade=self._obs_facade)
 
     @property
     def packed_lanes(self) -> int:
@@ -532,10 +553,10 @@ class KVSessionService:
     def io_stats(self) -> dict:
         return self.kv.io_stats()
 
-    def stats(self) -> dict:
-        """The nested KVProtocol telemetry shape: the underlying store's
-        `io`/`shards`(/`replicas`) sub-dicts plus the `sessions` view."""
-        out = self.kv.stats()
+    def _stats_tree(self) -> dict:
+        """The raw nested telemetry tree; `stats()` folds it through the
+        metrics registry (identity when observability is disabled)."""
+        out = self.kv._stats_tree()
         self._fold_fill()
         out["sessions"] = dict(
             max_sessions=self.N,
@@ -552,6 +573,13 @@ class KVSessionService:
             slab_occupancy=round(self.slab_occupancy(), 4),
         )
         return out
+
+    def stats(self) -> dict:
+        """The nested KVProtocol telemetry shape: the underlying store's
+        `io`/`shards`(/`replicas`) sub-dicts plus the `sessions` view.
+        With observability enabled, every leaf is mirrored into
+        `f2_stats_*` gauges labeled by facade."""
+        return obs.fold_stats(self._obs_facade, self._stats_tree())
 
     def check_invariants(self):
         """Store invariants plus pool/bookkeeping coherence: device

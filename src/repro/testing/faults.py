@@ -17,6 +17,8 @@ from __future__ import annotations
 
 import threading
 
+from repro import obs
+
 # Every crash point instrumented in the codebase, for discoverability and
 # so tests can assert against typos when arming.
 CRASH_POINTS = (
@@ -50,6 +52,7 @@ def arm(point: str, at: int = 1) -> None:
         raise ValueError(f"at must be >= 1, got {at}")
     with _lock:
         _armed[point] = at
+    obs.journal.emit("crashpoint.armed", point=point, at=at)
 
 
 def armed(point: str) -> bool:
@@ -67,6 +70,7 @@ def maybe_crash(point: str) -> None:
         if _armed[point] > 0:
             return
         del _armed[point]
+    obs.journal.emit("crashpoint.hit", point=point)
     raise InjectedCrash(point)
 
 

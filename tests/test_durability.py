@@ -247,6 +247,59 @@ def test_kill_mid_snapshot(tmp_path):
         np.testing.assert_array_equal(np.asarray(rv_r), np.asarray(rv_t))
 
 
+def test_journal_pins_crash_recover_event_sequence(tmp_path):
+    """Tightened oracle: beyond end-state equality, a crash-and-recover
+    run must produce the expected *lifecycle event sequence* in the
+    `repro.obs` journal — the snapshot lands, the armed crash point
+    fires inside the migration, and recovery completes, in that order,
+    with the crash point and epoch threading through the event fields."""
+    from repro import obs
+    obs.configure(enabled=True, reset=True)
+    try:
+        d = str(tmp_path)
+        mk = lambda: make_store(False)  # noqa: E731
+        dkv = DurableKV(mk(), DurabilityConfig(dir=d,
+                                               snapshot_every_rounds=0))
+        batches = gen_batches(13, 5)
+        for ks, ops, vs in batches[:3]:
+            dkv.apply(ks, ops, vs)
+        dkv.snapshot(blocking=True)     # blocking: commit lands in-line
+        for ks, ops, vs in batches[3:]:
+            dkv.apply(ks, ops, vs)
+        faults.arm("migrate.after_flip")
+        with pytest.raises(faults.InjectedCrash):
+            dkv.kv.migrate(shifted_map(dkv.kv))
+        faults.reset()
+        rec = recover(d, mk)
+        rec.check_invariants()
+
+        kinds = obs.journal.kinds()
+        # ordered subsequence the run must emit: the blocking snapshot
+        # commits (in-line) then reports taken, the armed point fires
+        # inside the migration, recovery completes from disk
+        expected = ["snapshot.committed", "snapshot.taken",
+                    "crashpoint.armed", "crashpoint.hit",
+                    "recovery.completed"]
+        it = iter(kinds)
+        assert all(k in it for k in expected), (expected, kinds)
+
+        hit = obs.journal.events("crashpoint.hit")
+        assert [e["point"] for e in hit] == ["migrate.after_flip"]
+        armed = obs.journal.events("crashpoint.armed")
+        assert armed[-1]["point"] == "migrate.after_flip"
+        assert armed[-1]["seq"] < hit[-1]["seq"]
+
+        done = obs.journal.events("recovery.completed")
+        assert len(done) == 1
+        assert done[0]["records"] > 0           # the WAL suffix replayed
+        committed = obs.journal.events("snapshot.committed")
+        assert done[0]["snapshot_epoch"] == committed[-1]["epoch"]
+        assert obs.journal.JOURNAL.dropped == 0     # window is complete
+        rec.close()
+    finally:
+        obs.configure(enabled=False, reset=True)
+
+
 def test_kill_with_rebalancer_armed(tmp_path):
     # spontaneous occupancy-driven migrations write MAP records too.
     # distinct keys per batch: the traffic EWMA is ephemeral telemetry
