@@ -1,42 +1,221 @@
-"""Fig 13: throughput vs memory budget (2.5%-25% of dataset) for YCSB-A/B.
-At the smallest budget F2 disables its read cache, like the paper."""
+"""Memory-budget sweep: larger-than-memory operation through the host
+tier (the paper's fig 13 "throughput vs memory budget", reframed for the
+accelerator port: the device cold ring + chunk cache IS the memory
+budget, and the host-resident chunk store is the overflow tier).
+
+Holds a fixed working set (every key loaded twice, so the live tail of
+the cold log is ~n_keys records) and sweeps the device cold-ring budget
+below it — 1/2x, 1/4x, ... of the working set — driving a YCSB-B
+(95% read / 5% upsert) Zipf stream through each store.  An all-device
+baseline (host tier off, cold ring bigger than the whole log) runs the
+identical batches first; every budget must serve bit-exact statuses and
+values, so the sweep doubles as a differential spill oracle at benchmark
+scale.  Reports wall-clock ops/s per budget plus measured spill factor,
+demotion/promotion counts and the memory model — the BENCH_memory.json
+perf-trajectory artifact.
+
+    PYTHONPATH=src python benchmarks/bench_memory.py [--tiny] [--out f.json]
+
+`--tiny` is the CI smoke gate: minimal sizes, and two hard assertions —
+bit-exact results at every budget, and no throughput cliff worse than
+10x at >= 4x spill (paging through the host tier may cost, but must not
+fall off the map).
+"""
 from __future__ import annotations
 
-from repro.core import KV
+import argparse
+import sys
+import time
 
-from .harness import Zipf, load_store, make_f2_config, make_faster_kv, run_workload
+import numpy as np
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.core import KV, F2Config
+from repro.core.types import OP_READ, OP_UPSERT
+from repro.obs import export
 
 
-def run(n_keys: int = 1 << 16, n_ops: int = 1 << 15, batch: int = 4096,
-        fracs=(0.025, 0.05, 0.10, 0.25), engine: str = "fused",
-        seed: int = 2):
-    zipf = Zipf(n_keys, 0.99)
-    out = {}
-    for system in ("F2", "FASTER"):
-        out[system] = {}
-        for wl in ("A", "B"):
-            row = {}
-            for f in fracs:
-                if system == "F2":
-                    cfg = make_f2_config(n_keys, f, rc_enabled=(f > 0.03),
-                                         engine=engine)
-                    kv = KV(cfg, mode="f2", compact_batch=batch)
-                else:
-                    kv = make_faster_kv(n_keys, f, batch=batch,
-                                        engine=engine)
-                load_store(kv, n_keys, batch)
-                r = run_workload(kv, wl, zipf, n_ops, batch, seed=seed,
-                                 warmup_ops=n_keys)
-                kv.check_invariants()
-                row[f] = r.modeled_kops
-            out[system][wl] = row
-    return out
+def zipf_keys(rng, n_keys: int, theta: float, shape) -> np.ndarray:
+    if theta <= 0.01:
+        draws = rng.integers(0, n_keys, shape)
+    else:
+        ranks = np.arange(1, n_keys + 1, dtype=np.float64)
+        p = ranks ** -theta
+        p /= p.sum()
+        draws = rng.choice(n_keys, shape, p=p)
+    perm = rng.permutation(n_keys)                     # YCSB key scramble
+    return perm[draws].astype(np.int32)
+
+
+def make_cfg(hot_capacity, hot_mem, cold_capacity, host_tier, engine, B):
+    kw = dict(hot_index_size=1 << 10, hot_capacity=hot_capacity,
+              hot_mem=hot_mem, cold_capacity=cold_capacity,
+              cold_mem=1 << 7, n_chunks=1 << 8, chunk_slots=16,
+              chunklog_capacity=1 << 13, chunklog_mem=1 << 8,
+              rc_capacity=1 << 8, value_width=2, chain_max=24,
+              engine=engine)
+    if host_tier:
+        # the cache-capacity contract: one batch's below-floor walk
+        # paths must all pin into the cache at once, so rows scale with
+        # the batch width
+        kw.update(host_tier=True, host_chunk_records=16,
+                  host_cache_chunks=max(64, 2 * B),
+                  host_resident_frac=0.5, host_prefetch=1)
+    return F2Config(**kw)
+
+
+def gen_stream(seed, n_keys, B, n_load_passes, n_bench, theta):
+    """(load batches, bench batches): the load phase upserts every key
+    `n_load_passes` times in shuffled order (building the cold working
+    set), the bench phase is YCSB-B over a Zipf-`theta` scramble."""
+    rng = np.random.default_rng(seed)
+    load = []
+    for _ in range(n_load_passes):
+        order = rng.permutation(n_keys).astype(np.int64) + 1
+        for off in range(0, n_keys, B):
+            ks = order[off:off + B]
+            vs = np.stack([ks * 3, ks * 5 + 1], axis=1).astype(np.int32)
+            load.append((ks.astype(np.int32),
+                         np.full(len(ks), OP_UPSERT, np.int32), vs))
+    bench = []
+    for step in range(n_bench):
+        ks = zipf_keys(rng, n_keys, theta, B).astype(np.int64) + 1
+        ops = rng.choice([OP_READ, OP_UPSERT], B,
+                         p=[0.95, 0.05]).astype(np.int32)
+        vs = np.stack([ks * 7 + step, ks * 11 + 3], axis=1).astype(np.int32)
+        bench.append((ks.astype(np.int32), ops, vs))
+    return load, bench
+
+
+def run_budget(cfg, load, bench, expect=None):
+    """Load + bench one store; returns (row dict, per-batch outputs).
+    With `expect` (the baseline's outputs) every batch must match
+    bit-exactly — the spill differential oracle at benchmark scale."""
+    kv = KV(cfg, compact_batch=128, donate=False)
+    outs = []
+    bench_s = 0.0
+    # the bench stream runs twice: the first lap warms every miss /
+    # promote / deferral compile path, the second is the timed one —
+    # both laps' outputs join the differential (upserts are
+    # value-deterministic, so lap 2 is bit-comparable across configs
+    # too, at roughly double the spill)
+    for phase, batches in (("load", load), ("warm", bench),
+                           ("bench", bench)):
+        for ks, ops, vs in batches:
+            t0 = time.perf_counter()
+            st, rv = kv.apply(ks, ops, vs)
+            st, rv = np.asarray(st), np.asarray(rv)   # forces the sync
+            if phase == "bench":
+                bench_s += time.perf_counter() - t0
+            outs.append((st, rv))
+    if expect is not None:
+        for i, ((sa, va), (sb, vb)) in enumerate(zip(outs, expect)):
+            np.testing.assert_array_equal(sa, sb,
+                                          err_msg=f"status diverged @ {i}")
+            np.testing.assert_array_equal(va, vb,
+                                          err_msg=f"values diverged @ {i}")
+    kv.check_invariants()
+    c = jax.device_get(kv.state.cold)
+    n_ops = sum(len(b[0]) for b in bench)
+    row = dict(
+        cold_capacity=cfg.cold_capacity,
+        host_tier=cfg.host_tier,
+        ops_per_s=n_ops / max(bench_s, 1e-9),
+        bench_seconds=bench_s,
+        n_ops=n_ops,
+        cold_tail=int(c.tail), cold_begin=int(c.begin),
+        cold_floor=int(c.floor),
+        measured_spill=(int(c.tail) - int(c.begin)) / cfg.cold_capacity,
+        memory_model=kv.memory_model_bytes(),
+    )
+    if cfg.host_tier:
+        row["host"] = kv._ht.stats()
+    return row, outs
+
+
+def run(n_keys: int = 1 << 13, n_ops: int = 1 << 14, engine: str = "jnp",
+        seed: int = 2, tiny: bool = False):
+    """Sweep device cold budgets {working set, 1/2x, 1/4x(, 1/8x)} on one
+    YCSB-B Zipf stream; baseline first, every budget checked against it."""
+    if tiny:
+        n_keys, B, n_bench = 1 << 11, 32, 50
+        hot_capacity, hot_mem = 1 << 10, 1 << 8
+        budgets = [("baseline", 1 << 13, False),
+                   ("spill-2x", 1 << 10, True),
+                   ("spill-4x", 1 << 9, True)]
+        engine = "jnp"
+    else:
+        B = 128
+        n_bench = max(1, n_ops // B)
+        hot_capacity, hot_mem = 1 << 11, 1 << 8
+        budgets = [("baseline", max(1 << 15, n_keys * 4), False),
+                   ("spill-2x", n_keys // 2, True),
+                   ("spill-4x", n_keys // 4, True),
+                   ("spill-8x", n_keys // 8, True)]
+    load, bench = gen_stream(seed, n_keys, B, 2, n_bench, theta=0.99)
+
+    results = dict(backend=jax.default_backend(), n_keys=n_keys, batch=B,
+                   engine=engine, tiny=bool(tiny), budgets=[])
+    base_outs = None
+    for label, cap, host in budgets:
+        cfg = make_cfg(hot_capacity, hot_mem, cap, host, engine, B)
+        row, outs = run_budget(cfg, load, bench, expect=base_outs)
+        row["label"] = label
+        if base_outs is None:
+            base_outs = outs
+            base_ops = row["ops_per_s"]
+        row["slowdown_vs_baseline"] = base_ops / max(row["ops_per_s"], 1e-9)
+        results["budgets"].append(row)
+        print(f"{label:10s} cold={cap:6d} host={str(host):5s} "
+              f"{row['ops_per_s'] / 1e3:8.1f} kops/s "
+              f"spill={row['measured_spill']:5.2f}x "
+              f"slowdown={row['slowdown_vs_baseline']:5.2f}x")
+
+    # gates: spilled budgets really spilled, and the worst budget holds a
+    # >= 4x working set without falling off a >10x throughput cliff
+    for row in results["budgets"]:
+        if row["host_tier"]:
+            assert row["cold_floor"] > 0, row["label"]
+    worst = results["budgets"][-1]
+    assert worst["measured_spill"] >= 4.0, worst["measured_spill"]
+    assert worst["slowdown_vs_baseline"] <= 10.0, (
+        f"throughput cliff at {worst['measured_spill']:.1f}x spill: "
+        f"{worst['slowdown_vs_baseline']:.2f}x slower than all-device")
+    return results
 
 
 def report(res) -> str:
-    lines = ["fig13: modeled kops vs memory budget (fraction of dataset)"]
-    for system, per_wl in res.items():
-        for wl, row in per_wl.items():
-            s = " ".join(f"{f*100:4.1f}%:{v:9.1f}" for f, v in row.items())
-            lines.append(f"  {system:7s} YCSB-{wl}: {s}")
+    lines = ["memory-budget sweep: YCSB-B Zipf through the host tier"]
+    for row in res["budgets"]:
+        lines.append(
+            f"  {row['label']:10s} cold={row['cold_capacity']:6d} "
+            f"{row['ops_per_s'] / 1e3:8.1f} kops/s "
+            f"spill={row['measured_spill']:5.2f}x "
+            f"slowdown={row['slowdown_vs_baseline']:5.2f}x")
     return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke gate: minimal sizes, bit-exactness + "
+                         "no->10x-cliff assertions")
+    ap.add_argument("--out", default=None, help="write results JSON here")
+    ap.add_argument("--engine", default="jnp")
+    ap.add_argument("--seed", type=int, default=2)
+    args = ap.parse_args(argv)
+
+    results = run(engine=args.engine, seed=args.seed, tiny=args.tiny)
+    print(report(results))
+    if args.out:
+        export.write_bench_json(args.out, bench="memory",
+                                config=vars(args), results=results)
+        print(f"wrote {args.out}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from . import compaction, store
+from . import compaction, host_tier, store
 from .types import (BLOCK_BYTES, OP_DELETE, OP_READ, OP_RMW, OP_UPSERT,
                     F2Config)
 
@@ -79,6 +79,42 @@ class KV:
         # pure probe for observability; never donates state
         self._hops = jax.jit(functools.partial(store.probe_hops, cfg))
 
+        # -- host tier (core.host_tier): jitted movement kernels + manager ---
+        self._ht = None
+        if cfg.host_tier:
+            assert mode == "f2", "host_tier requires mode='f2'"
+            # a cold-cold step pins its frontier chunks for the whole step
+            # (the liveness walk is resumable and pins nothing); the cache
+            # must hold the pinned frontier plus walk/eviction headroom
+            assert (cfg.host_cache_chunks * cfg.host_chunk_records
+                    >= compact_batch + 4 * cfg.host_chunk_records), (
+                "host_cache_chunks * host_chunk_records must cover "
+                "compact_batch plus chain headroom (>= compact_batch + "
+                "4 * host_chunk_records)")
+            # planners are pure and never donate; install/commit/drop donate
+            self._plan_fetch = jax.jit(functools.partial(store.plan_fetch, cfg))
+            self._cc_fplan = jax.jit(functools.partial(
+                compaction.plan_cc_frontier, cfg, B=compact_batch))
+            self._cc_winit = jax.jit(functools.partial(
+                compaction.cc_walk_init, cfg, B=compact_batch))
+            self._cc_walk = jax.jit(functools.partial(
+                compaction.cc_walk_round, cfg, B=compact_batch), **dn)
+            self._cc_commit = jax.jit(functools.partial(
+                compaction.cc_commit, cfg, B=compact_batch), **dn)
+            self._read_host = jax.jit(functools.partial(
+                store.read_batch_host, cfg, admit_rc=admit), **dn)
+            slab = 8
+            self._ht = host_tier.HostTier(
+                cfg,
+                install=jax.jit(host_tier.install_chunks, **dn),
+                extract=jax.jit(functools.partial(
+                    host_tier.extract_chunks, cfg, slab)),
+                commit=jax.jit(host_tier.demote_commit, **dn),
+                drop=jax.jit(functools.partial(
+                    host_tier.drop_dead_rows, cfg), **dn),
+                extract_slab_chunks=slab,
+                obs_facade=self._obs_facade)
+
     # -- batched operations --------------------------------------------------
     def apply(self, keys, ops, vals=None):
         keys = jnp.asarray(keys, jnp.int32)
@@ -87,7 +123,14 @@ class KV:
             vals = jnp.zeros((keys.shape[0], self.cfg.value_width), jnp.int32)
         else:
             vals = jnp.asarray(vals, jnp.int32)
+        if self._ht is not None:
+            # pre-fault every host chunk this batch would touch: writes
+            # cannot defer mid-step, so the committed apply must run clean
+            self.state = self._ht.ensure(
+                self.state, lambda st: self._plan_fetch(st, keys, ops))
         self.state, status, rvals = self._apply(self.state, keys, ops, vals)
+        if self._ht is not None:
+            self._ht.end_batch()
         self.maybe_compact()
         return status, rvals
 
@@ -98,7 +141,33 @@ class KV:
     def read(self, keys):
         keys = jnp.asarray(keys, jnp.int32)
         active = jnp.ones((keys.shape[0],), jnp.bool_)
-        self.state, status, vals = self._read(self.state, keys, active)
+        if self._ht is None:
+            self.state, status, vals = self._read(self.state, keys, active)
+            return status, vals
+        # miss-with-deferral: lanes that need an absent host chunk park with
+        # ST_NONE; promote the chunks and re-run only those lanes
+        b = keys.shape[0]
+        status = jnp.zeros((b,), jnp.int32)
+        vals = jnp.zeros((b, self.cfg.value_width), jnp.int32)
+        remaining = active
+        for _ in range(self._ht.max_rounds):
+            self.state, st_r, v_r, missed = self._read_host(self.state, keys,
+                                                            remaining)
+            hmiss = missed >= 0
+            served = remaining & ~hmiss
+            status = jnp.where(served, st_r, status)
+            vals = jnp.where(served[:, None], v_r, vals)
+            remaining = remaining & hmiss
+            needs = self._ht.collect(missed)
+            if not self._ht.any_missing(needs):
+                break
+            # partial: promote what fits now and pin it; still-parked lanes
+            # just go around again (pins guarantee forward progress because
+            # the read walk restarts from the chain head each round)
+            self.state = self._ht.promote(self.state, needs, partial=True)
+        else:
+            raise RuntimeError("host tier: read deferral did not converge")
+        self._ht.end_batch()
         return status, vals
 
     def rmw(self, keys, deltas):
@@ -129,7 +198,12 @@ class KV:
             return
         if self.hot_fill() > self.trigger:
             self.compact_hot_cold()
-        if self.cold_fill() > self.trigger:
+        # with the host tier, device-ring pressure is relieved by demotion,
+        # not compaction: a spilled store's span sits above cold_capacity
+        # permanently, so cold-cold GC keys off the host log budget instead
+        # (or it would churn the whole log through the cache every batch)
+        cold_budget = self.cfg.host_log_factor if self._ht is not None else 1.0
+        if self.cold_fill() / cold_budget > self.trigger:
             self.compact_cold_cold()
         if self.chunklog_fill() > self.trigger:
             with obs.span("compact.chunk_gc", cat="compaction"):
@@ -150,6 +224,12 @@ class KV:
         until = jnp.int32(begin + n)
         with obs.span("compact.hot_cold", cat="compaction", records=n):
             for start in range(begin, begin + n, self.compact_batch):
+                if self._ht is not None:
+                    # each step appends <= compact_batch cold records; keep
+                    # that much ring headroom by demoting first
+                    self.state = self._ht.demote_if_needed(
+                        self.state,
+                        self.compact_batch + self.cfg.host_chunk_records)
                 self.state, _ = self._hc_step(self.state, jnp.int32(start),
                                               until)
             self.state = self._hot_trunc(self.state, until)
@@ -166,14 +246,55 @@ class KV:
         until = jnp.int32(begin + n)
         with obs.span("compact.cold_cold", cat="compaction", records=n):
             for start in range(begin, begin + n, self.compact_batch):
-                self.state, _ = self._cc_step(self.state, jnp.int32(start),
-                                              until)
+                if self._ht is not None:
+                    self._ccstep_host(jnp.int32(start), until)
+                else:
+                    self.state, _ = self._cc_step(self.state,
+                                                  jnp.int32(start), until)
             self.state = self._cold_trunc(self.state, until)
+            if self._ht is not None:
+                self._ht.end_batch()
+                self.state = self._ht.gc(self.state)
         self.compactions += 1
         obs.journal.emit("compaction.cold_cold", facade=self._obs_facade,
                          records=n)
         obs.count("f2_compactions_total", facade=self._obs_facade,
                   kind="cold_cold")
+
+    def _ccstep_host(self, start, until):
+        """One cold-cold step under the host tier: demote for headroom, pin
+        the frontier, drain the resumable liveness walk (parked lanes promote
+        partially — no pins — and resume), then commit bit-exactly."""
+        # demotion step of the cold-cold pass: survivors append at the tail
+        # while the frontier reads demoted chunks, so make headroom first
+        self._ht.end_batch()
+        self.state = self._ht.demote_if_needed(
+            self.state, self.compact_batch + self.cfg.host_chunk_records)
+        # pin the below-floor frontier chunks for the whole step: `ensure`
+        # only pins what it installs, but the commit re-reads the frontier,
+        # so already-resident chunks must survive the walk promotes too
+        cold = self.state.cold
+        shift = self.cfg.host_chunk_records.bit_length() - 1
+        lo = max(int(start), int(cold.begin))
+        hi = min(int(until), int(cold.tail), int(start) + self.compact_batch,
+                 int(cold.floor))
+        if lo < hi:
+            self._ht.pin_chunks(
+                [set(range(lo >> shift, ((hi - 1) >> shift) + 1))])
+        self.state = self._ht.ensure(
+            self.state, lambda st: self._cc_fplan(st, start, until))
+        carry = self._cc_winit(self.state, start, until)
+        self.state, carry = self._cc_walk(self.state, start, until, carry)
+        for _ in range(self.compact_batch * self.cfg.chain_max + 8):
+            needs = self._ht.collect(carry.missed)
+            if not self._ht.any_missing(needs):
+                break
+            self.state = self._ht.promote(self.state, needs, partial=True,
+                                          pin=False)
+            self.state, carry = self._cc_walk(self.state, start, until, carry)
+        else:
+            raise RuntimeError("host tier: cold-cold walk did not converge")
+        self.state, _ = self._cc_commit(self.state, start, until, carry)
 
     def compact_single_log(self, n_records: Optional[int] = None):
         begin = int(self.state.hot.begin)
@@ -212,7 +333,10 @@ class KV:
     def _stats_tree(self) -> dict:
         """The raw nested telemetry tree; `stats()` folds it through the
         metrics registry (identity when observability is disabled)."""
-        return dict(io=self.io_stats())
+        t = dict(io=self.io_stats())
+        if self._ht is not None:
+            t["host"] = self._ht.stats()
+        return t
 
     def stats(self) -> dict:
         """The nested KVProtocol telemetry shape (`io` / `shards` /
@@ -246,8 +370,14 @@ class KV:
             cold_log_mem=(c.cold_mem if self.mode == "f2" else 0) * c.record_bytes,
             chunk_index=(c.n_chunks if self.mode == "f2" else 0) * 8,
             chunklog_mem=(c.chunklog_mem if self.mode == "f2" else 0) * c.chunk_bytes,
+            host_chunk_cache=(c.host_cache_chunks * c.host_chunk_records
+                              * c.record_bytes if c.host_tier else 0),
         )
         out["total"] = sum(out.values())
+        if self._ht is not None:
+            # host-resident chunks are *not* device memory — reported
+            # alongside, never summed into the device total
+            out["host_store_bytes"] = self._ht.host_bytes()
         return out
 
     def check_invariants(self):
@@ -258,3 +388,9 @@ class KV:
         assert not bool(st.walk_exhausted), "hash chain exceeded chain_max"
         assert int(st.hot.begin) <= int(st.hot.tail)
         assert int(st.cold.begin) <= int(st.cold.tail)
+        if self.cfg.host_tier:
+            assert not bool(st.host.missed_in_step), \
+                "host chunk miss on a committed path (pre-fault bug)"
+            floor = int(st.cold.floor)
+            assert floor % self.cfg.host_chunk_records == 0, floor
+            assert 0 <= floor <= int(st.cold.tail)

@@ -24,8 +24,8 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import cold_index, groups, hybrid_log, probe_engine, read_cache
-from .store import F2State, hot_slots, _merge_walk_io
+from . import cold_index, groups, host_tier, hybrid_log, probe_engine, read_cache
+from .store import F2State, hot_slots, _cold_probe, _fold_host, _merge_walk_io
 from .types import (META_INVALID, META_TOMBSTONE, NULL_ADDR, RC_FLAG,
                     F2Config, IoStats, is_rc, rc_untag, records_to_blocks)
 
@@ -38,6 +38,31 @@ def _frontier(log: hybrid_log.LogState, start: jax.Array, until: jax.Array,
     k, v, p, meta = hybrid_log.gather(log, addrs)
     m = m & ((meta & META_INVALID) == 0)
     return addrs, m, k, v, meta
+
+
+def _cold_frontier(cfg: F2Config, state: F2State, start: jax.Array,
+                   until: jax.Array, B: int):
+    """Cold-log frontier, floor-aware: with the host tier on the frontier
+    region [start, start+B) is typically *below* the floor (that is what
+    gets compacted first), so records resolve through the chunk cache.
+    Returns the `_frontier` tuple plus (missed[B] chunk ids, touch[R])."""
+    addrs = start + jnp.arange(B, dtype=jnp.int32)
+    m = (addrs < until) & (addrs < state.cold.tail) & (addrs >= state.cold.begin)
+    if not cfg.host_tier:
+        k, v, _, meta = hybrid_log.gather(state.cold, addrs)
+        missed = jnp.full((B,), -1, jnp.int32)
+        touch = jnp.zeros((state.host.chunk.shape[0],), jnp.int32)
+    else:
+        k, v, _, meta, missing, crow = host_tier.gather_translated(
+            cfg, state.cold, state.host, addrs)
+        shift = host_tier.chunk_shift(cfg)
+        missed = jnp.where(m & missing, addrs >> shift, jnp.int32(-1))
+        m = m & ~missing
+        r_rows = state.host.chunk.shape[0]
+        touch = jnp.zeros((r_rows,), jnp.int32).at[
+            jnp.where(m, crow, r_rows)].add(1, mode="drop")
+    m = m & ((meta & META_INVALID) == 0)
+    return addrs, m, k, v, meta, missed, touch
 
 
 def _charge_sequential_read(stats: IoStats, n_records: jax.Array,
@@ -162,23 +187,12 @@ def hot_truncate(cfg: F2Config, state: F2State, until: jax.Array) -> F2State:
 # Cold -> Cold compaction (paper S5.2 "Cold-Cold Compaction")
 # ---------------------------------------------------------------------------
 
-def cold_cold_step(cfg: F2Config, state: F2State, start: jax.Array,
-                   until: jax.Array, B: int) -> Tuple[F2State, jax.Array]:
-    """ConditionalInsert live cold records to the cold tail.  Live tombstones
-    are dropped entirely (everything older dies with the truncation)."""
-    addrs, m, k, v, meta = _frontier(state.cold, start, until, B)
-    stats = _charge_sequential_read(state.stats, jnp.sum(m.astype(jnp.int32)),
-                                    cfg.record_bytes)
-
-    entries, stats = cold_index.find_entries(state.cold_idx, cfg, k, m, stats)
-    cold_head = hybrid_log.head_addr(state.cold, cfg.cold_mem)
-    # target mode: entries == addrs resolves in-engine with zero I/O
-    res = probe_engine.probe(cfg, k, state.cold, addrs, cold_head, m,
-                             heads=entries, rc=None, target=addrs)
-    stats = _merge_walk_io(stats, res)
-    live = m & res.found & (res.addr == addrs)
-    live = live & ((meta & META_TOMBSTONE) == 0)      # drop dead keys for good
-
+def _cc_append(cfg: F2Config, state: F2State, stats: IoStats, live: jax.Array,
+               k: jax.Array, v: jax.Array, meta: jax.Array,
+               entries: jax.Array, exhausted_any: jax.Array,
+               B: int) -> Tuple[F2State, jax.Array]:
+    """Shared cold-cold commit tail: append the live frontier records at the
+    cold tail with intra-batch chaining and splice the cold index."""
     g, _, _ = cold_index.slot_coords(cfg, k)
     ginfo = groups.group_info(live, g)
     l32 = live.astype(jnp.int32)
@@ -196,8 +210,33 @@ def cold_cold_step(cfg: F2Config, state: F2State, start: jax.Array,
                                           cfg.record_bytes)
     state = state._replace(
         cold=cold, cold_idx=ci, stats=stats,
-        walk_exhausted=state.walk_exhausted | jnp.any(res.exhausted))
+        walk_exhausted=state.walk_exhausted | exhausted_any)
     return state, jnp.sum(l32)
+
+
+def cold_cold_step(cfg: F2Config, state: F2State, start: jax.Array,
+                   until: jax.Array, B: int) -> Tuple[F2State, jax.Array]:
+    """ConditionalInsert live cold records to the cold tail.  Live tombstones
+    are dropped entirely (everything older dies with the truncation)."""
+    addrs, m, k, v, meta, miss_f, touch_f = _cold_frontier(cfg, state, start,
+                                                           until, B)
+    stats = _charge_sequential_read(state.stats, jnp.sum(m.astype(jnp.int32)),
+                                    cfg.record_bytes)
+
+    entries, stats = cold_index.find_entries(state.cold_idx, cfg, k, m, stats)
+    cold_head = hybrid_log.head_addr(state.cold, cfg.cold_mem)
+    # target mode: entries == addrs resolves in-engine with zero I/O
+    res = _cold_probe(cfg, state, k, addrs, cold_head, m, entries,
+                      target=addrs)
+    stats = _merge_walk_io(stats, res)
+    # this one-shot step is the tier-off path; with the tier on the facade
+    # uses the resumable protocol below, so a miss here latches the tripwire
+    state = _fold_host(cfg, state, touch_f + res.touch,
+                       jnp.maximum(miss_f, res.missed), latch_miss=True)
+    live = m & res.found & (res.addr == addrs)
+    live = live & ((meta & META_TOMBSTONE) == 0)      # drop dead keys for good
+    return _cc_append(cfg, state, stats, live, k, v, meta, entries,
+                      jnp.any(res.exhausted), B)
 
 
 def cold_truncate(cfg: F2Config, state: F2State, until: jax.Array) -> F2State:
@@ -208,6 +247,152 @@ def cold_truncate(cfg: F2Config, state: F2State, until: jax.Array) -> F2State:
     cold = hybrid_log.truncate(state.cold, until)
     cold = cold._replace(flushed_upto=jnp.maximum(cold.flushed_upto, cold.begin))
     return state._replace(cold=cold, cold_truncs=state.cold_truncs + 1)
+
+
+# ---------------------------------------------------------------------------
+# Resumable cold-cold step (host tier on)
+#
+# A cold-cold step's chunk working set — the B/C frontier chunks *plus* every
+# chunk its liveness walks traverse — is unbounded, so it cannot be pinned
+# into the device chunk cache all at once.  With the host tier on, the facade
+# runs each step as a resumable protocol instead of the one-shot
+# `cold_cold_step`:
+#
+#   1. ensure the frontier chunks (bounded: <= B/C + 1 rows, pinned),
+#   2. walk the liveness chains in rounds (`cc_walk_round`): a lane that
+#      needs an absent chunk *parks*, the facade promotes the parked chunks
+#      with partial, pin-free promotion (already-passed chunks become
+#      evictable again), and the next round resumes every lane from its
+#      carried cursor,
+#   3. commit (`cc_commit`): recompute the frontier, merge the carried walk
+#      accounting into IoStats exactly once, and run the same append tail.
+#
+# Hop/I-O accounting is bit-exact with the one-shot step: each chain address
+# is gathered and charged exactly once (a parked lane charges nothing for
+# the absent chunk and re-charges it after promotion), and `hops <
+# chain_max` bounds the total walk exactly like the one-shot fori count.
+# ---------------------------------------------------------------------------
+
+class CcWalkCarry(NamedTuple):
+    """Per-lane walk cursor carried across promote rounds."""
+
+    cur: jax.Array     # int32 [B] next address to examine
+    done: jax.Array    # bool  [B] key match found
+    faddr: jax.Array   # int32 [B] matched address
+    hops: jax.Array    # int32 [B] chain hops consumed (bounded by chain_max)
+    io_b: jax.Array    # int32 scalar: accumulated stable-tier block reads
+    io_o: jax.Array    # int32 scalar: accumulated read ops
+    mem_h: jax.Array   # int32 scalar: accumulated memory-tier hits
+    missed: jax.Array  # int32 [B] chunk the lane is parked on (-1 = walking)
+
+
+def plan_cc_frontier(cfg: F2Config, state: F2State, start: jax.Array,
+                     until: jax.Array, B: int) -> jax.Array:
+    """Absent host chunks holding the frontier region itself.  The facade
+    ensures (and pins) these before starting the walk rounds."""
+    _, _, _, _, _, miss_f, _ = _cold_frontier(cfg, state, start, until, B)
+    return miss_f
+
+
+def _cc_walk_ctx(cfg: F2Config, state: F2State, start: jax.Array,
+                 until: jax.Array, B: int):
+    """(addrs, keys, entries, fast, walk_active) for one step — recomputed
+    per round; deterministic while the frontier chunks stay pinned."""
+    addrs, m, keys, _, _, _, _ = _cold_frontier(cfg, state, start, until, B)
+    entries, _ = cold_index.find_entries(state.cold_idx, cfg, keys, m,
+                                         IoStats.zeros())
+    fast = m & (entries == addrs)
+    return addrs, m, keys, entries, fast, m & ~fast
+
+
+def cc_walk_init(cfg: F2Config, state: F2State, start: jax.Array,
+                 until: jax.Array, B: int) -> CcWalkCarry:
+    """Fresh carry for one step: every walk lane starts at its chain head."""
+    _, _, _, entries, _, _ = _cc_walk_ctx(cfg, state, start, until, B)
+    return CcWalkCarry(
+        cur=entries,
+        done=jnp.zeros((B,), jnp.bool_),
+        faddr=jnp.full((B,), NULL_ADDR, jnp.int32),
+        hops=jnp.zeros((B,), jnp.int32),
+        io_b=jnp.int32(0), io_o=jnp.int32(0), mem_h=jnp.int32(0),
+        missed=jnp.full((B,), -1, jnp.int32))
+
+
+def cc_walk_round(cfg: F2Config, state: F2State, start: jax.Array,
+                  until: jax.Array, carry: CcWalkCarry,
+                  B: int) -> Tuple[F2State, CcWalkCarry]:
+    """One bounded round of the resumable liveness walk.  Parked lanes
+    re-check their chunk (the facade promoted between rounds) and resume;
+    lanes that hit a newly absent chunk park with its id in ``missed``.
+    Cache traffic folds into the eviction signals per round; the I/O model
+    sums accumulate in the carry and are charged once at `cc_commit`."""
+    r_rows = state.host.chunk.shape[0]
+    shift = host_tier.chunk_shift(cfg)
+    addrs, _, keys, _, _, walk_active = _cc_walk_ctx(cfg, state, start,
+                                                     until, B)
+    head_boundary = hybrid_log.head_addr(state.cold, cfg.cold_mem)
+    lower = addrs
+
+    def body(_, c):
+        cur, done, faddr, hops, io_b, io_o, mem_h, missed, touch = c
+        in_range = (cur != NULL_ADDR) & (cur >= lower)
+        searching = (walk_active & ~done & (missed < 0) & in_range
+                     & (hops < cfg.chain_max))
+        k, _, p, m, missing, crow = host_tier.gather_translated(
+            cfg, state.cold, state.host, cur)
+        newly_missed = searching & missing
+        missed = jnp.where(newly_missed, cur >> shift, missed)
+        live = searching & ~missing
+        valid = (m & META_INVALID) == 0
+        key_match = live & valid & (k == keys)
+        is_io = live & (cur < head_boundary)
+        n_io = jnp.sum(is_io.astype(jnp.int32))
+        io_b = io_b + n_io
+        io_o = io_o + n_io
+        mem_h = mem_h + jnp.sum((live & ~is_io).astype(jnp.int32))
+        hops = hops + live.astype(jnp.int32)
+        touch = touch.at[jnp.where(live, crow, r_rows)].add(1, mode="drop")
+        faddr = jnp.where(key_match, cur, faddr)
+        done = done | key_match
+        nxt = jnp.where(live & ~key_match, p, cur)
+        return nxt, done, faddr, hops, io_b, io_o, mem_h, missed, touch
+
+    init = (carry.cur, carry.done, carry.faddr, carry.hops,
+            carry.io_b, carry.io_o, carry.mem_h,
+            jnp.full((B,), -1, jnp.int32),          # parked lanes re-check
+            jnp.zeros((r_rows,), jnp.int32))
+    cur, done, faddr, hops, io_b, io_o, mem_h, missed, touch = \
+        jax.lax.fori_loop(0, cfg.chain_max, body, init)
+    state = _fold_host(cfg, state, touch, missed, latch_miss=False)
+    return state, CcWalkCarry(cur=cur, done=done, faddr=faddr, hops=hops,
+                              io_b=io_b, io_o=io_o, mem_h=mem_h,
+                              missed=missed)
+
+
+def cc_commit(cfg: F2Config, state: F2State, start: jax.Array,
+              until: jax.Array, carry: CcWalkCarry,
+              B: int) -> Tuple[F2State, jax.Array]:
+    """Commit one resumable cold-cold step from a drained walk carry:
+    bit-exact with `cold_cold_step` on liveness, appends and IoStats."""
+    addrs, m, k, v, meta, miss_f, touch_f = _cold_frontier(cfg, state, start,
+                                                           until, B)
+    stats = _charge_sequential_read(state.stats, jnp.sum(m.astype(jnp.int32)),
+                                    cfg.record_bytes)
+    entries, stats = cold_index.find_entries(state.cold_idx, cfg, k, m, stats)
+    fast = m & (entries == addrs)
+    walk_active = m & ~fast
+    stats = stats.add_reads(carry.io_b, carry.io_o).add_mem_hits(carry.mem_h)
+    found = (carry.done & walk_active) | fast
+    res_addr = jnp.where(fast, entries, carry.faddr)
+    in_range = (carry.cur != NULL_ADDR) & (carry.cur >= addrs)
+    exhausted = walk_active & ~carry.done & in_range
+    # an undrained carry (parked lane at commit) latches the tripwire
+    state = _fold_host(cfg, state, touch_f,
+                       jnp.maximum(miss_f, carry.missed), latch_miss=True)
+    live = m & found & (res_addr == addrs)
+    live = live & ((meta & META_TOMBSTONE) == 0)
+    return _cc_append(cfg, state, stats, live, k, v, meta, entries,
+                      jnp.any(exhausted), B)
 
 
 # ---------------------------------------------------------------------------

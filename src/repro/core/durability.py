@@ -415,6 +415,12 @@ class DurableKV:
         }
         if hasattr(self.kv, "alive"):
             meta["alive"] = self.kv.alive.copy()
+        ht = getattr(self.kv, "_ht", None)
+        if ht is not None:
+            # host-resident cold chunks travel in the snapshot meta: the
+            # floor is a state leaf, so a restore without the host store
+            # would leave below-floor addresses unreadable
+            meta.update(ht.export_snapshot())
         return meta
 
     def snapshot(self, blocking: Optional[bool] = None) -> int:
@@ -680,10 +686,18 @@ def recover(directory: str, make_kv: Callable[[], Any],
         }
         if hasattr(kv, "alive"):
             meta_like["alive"] = kv.alive.copy()
+        ht = getattr(kv, "_ht", None)
+        if ht is not None:
+            # placeholders only fix the treedef; restore takes shapes
+            # (i.e. the demoted-chunk count) from the manifest
+            for k, a in ht.export_snapshot().items():
+                meta_like[k] = a[:0]
         payload, _ = ckpt.restore({"state": kv.state, "meta": meta_like},
                                   step=snap_epoch)
         kv.state = jax.tree.map(jnp.asarray, payload["state"])
         meta = payload["meta"]
+        if ht is not None:
+            ht.import_snapshot(meta)
         start_map = np.asarray(meta["bucket_map"], np.int32)
         kv.bucket_map = start_map.copy()
         kv._bucket_map_dev = jnp.asarray(start_map)

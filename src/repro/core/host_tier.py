@@ -1,0 +1,708 @@
+"""Host-resident cold tier: larger-than-memory operation for the cold log.
+
+The cold HybridLog's ring buffer is the device-resident window.  This
+module adds a third tier *below* it: whole chunks of ``host_chunk_records``
+cold records are demoted off-device into pinned host numpy arrays, and the
+device keeps only a small associative **chunk cache** (``host_cache_chunks``
+rows) for the demoted region.  The split point is ``LogState.floor``:
+
+    [begin, floor)  -> host tier (numpy dicts, keyed by chunk id)
+    [floor, tail)   -> device ring (unchanged)
+
+    chunk id = addr >> log2(host_chunk_records)
+
+Key property making this safe: records below ``floor`` are **immutable**.
+In-place updates only happen in the hot log's mutable region, and cold-cold
+compaction rewrites survivors at the tail — it never mutates the region it
+reads.  So demoted chunks never need write-back, cache eviction is a plain
+drop, and demote -> promote round-trips are byte-identical by construction.
+
+Movement across the host/device boundary happens only at the stores'
+host-side fold points (the facades' plan/promote loops), never inside jit:
+
+* reads:  ``store.read_batch_host`` reports needed-but-absent chunks as a
+  per-lane ``missed`` chunk id; the facade promotes and re-runs the round
+  (miss-with-deferral, sharing the router's multi-round machinery).
+* writes: the facade runs a pure ``store.plan_fetch`` pass first and
+  promotes every chunk the mutate pipeline would touch (RMW cold bases
+  interleave with appends, so writes cannot defer mid-step).
+* compaction: ``compaction.plan_cc_step`` pre-faults the cold-cold
+  frontier; a demotion check before every step keeps the ring from
+  overflowing while survivors append at the tail.
+
+Eviction is age/traffic: victims are empty rows first, then unpinned rows
+ranked by (last-touch tick, lifetime hits, row index).  Chunks a facade
+round currently depends on are pinned until ``end_batch``.  Prefetch warms
+neighbor chunks and the hottest absent chunks by per-chunk miss EWMA.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.testing import faults
+
+from . import hybrid_log
+from .types import META_INVALID, NULL_ADDR, F2Config
+
+
+def chunk_shift(cfg: F2Config) -> int:
+    """log2(host_chunk_records): addr >> shift is the chunk id."""
+    c = cfg.host_chunk_records
+    assert c > 0 and (c & (c - 1)) == 0, c
+    return c.bit_length() - 1
+
+
+class HostCacheState(NamedTuple):
+    """Device-side associative cache over demoted chunks (R rows x C records).
+
+    Record columns are stored flat ([R*C]) so gathers are 1-D like the log's.
+    ``chunk[r]`` names the chunk resident in row r (-1 = empty).  ``tick`` /
+    ``hits`` feed the age/traffic eviction policy and are folded host-side.
+    ``missed_in_step`` is a tripwire: committed mutate/compaction steps must
+    never observe an absent chunk (the facade pre-faults them), so the flag
+    is asserted False by check_invariants.
+    """
+
+    chunk: jax.Array          # int32 [R] resident chunk id, -1 empty
+    key: jax.Array            # int32 [R*C]
+    val: jax.Array            # int32 [R*C, V]
+    prev: jax.Array           # int32 [R*C]
+    meta: jax.Array           # int32 [R*C]
+    tick: jax.Array           # int32 [R] clock value at last touch/install
+    hits: jax.Array           # int32 [R] lifetime record touches
+    clock: jax.Array          # int32 scalar, bumped per fold
+    missed_in_step: jax.Array  # bool scalar (see docstring)
+
+
+def create(cfg: F2Config) -> HostCacheState:
+    # dummy 1x1 cache when the tier is off: keeps F2State's treedef static
+    r = cfg.host_cache_chunks if cfg.host_tier else 1
+    c = cfg.host_chunk_records if cfg.host_tier else 1
+    return HostCacheState(
+        chunk=jnp.full((r,), -1, jnp.int32),
+        key=jnp.full((r * c,), -1, jnp.int32),
+        val=jnp.zeros((r * c, cfg.value_width), jnp.int32),
+        prev=jnp.full((r * c,), NULL_ADDR, jnp.int32),
+        meta=jnp.zeros((r * c,), jnp.int32),
+        tick=jnp.zeros((r,), jnp.int32),
+        hits=jnp.zeros((r,), jnp.int32),
+        clock=jnp.int32(0),
+        missed_in_step=jnp.bool_(False),
+    )
+
+
+def gather_translated(
+    cfg: F2Config,
+    cold: hybrid_log.LogState,
+    host: HostCacheState,
+    addr: jax.Array,  # int32 [B] logical cold-log addresses
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Gather (key, val, prev, meta) across the floor boundary.
+
+    Addresses >= floor resolve from the ring; below-floor addresses resolve
+    from the chunk cache by associative match on the chunk id.  Returns
+    ``(k, v, p, m, missing, crow)`` where ``missing`` marks below-floor
+    addresses whose chunk is not cached (caller defers / pre-faults) and
+    ``crow`` is the serving cache row (R when served from the ring or
+    missing — a drop-mode scatter sentinel for touch accounting).
+    """
+    shift = chunk_shift(cfg)
+    c = cfg.host_chunk_records
+    r_rows = host.chunk.shape[0]
+    a = jnp.maximum(addr, 0)
+    in_ring = a >= cold.floor
+    cid = a >> shift
+    eq = (host.chunk[None, :] == cid[:, None]) & (host.chunk[None, :] >= 0)
+    hit = jnp.any(eq, axis=1)
+    row = jnp.argmax(eq, axis=1).astype(jnp.int32)
+    fidx = row * jnp.int32(c) + (a & jnp.int32(c - 1))
+    k_r, v_r, p_r, m_r = hybrid_log.gather(cold, a)
+    use_cache = ~in_ring & hit
+    k = jnp.where(use_cache, host.key[fidx], k_r)
+    v = jnp.where(use_cache[:, None], host.val[fidx], v_r)
+    p = jnp.where(use_cache, host.prev[fidx], p_r)
+    m = jnp.where(use_cache, host.meta[fidx], m_r)
+    missing = ~in_ring & ~hit
+    crow = jnp.where(use_cache, row, jnp.int32(r_rows))
+    return k, v, p, m, missing, crow
+
+
+class HostProbeResult(NamedTuple):
+    """`probe_engine.ProbeResult` plus the host-tier miss/traffic outputs."""
+
+    found: jax.Array      # bool  [B]
+    addr: jax.Array       # int32 [B]
+    heads: jax.Array      # int32 [B]
+    value: jax.Array      # int32 [B, V]
+    meta: jax.Array       # int32 [B]
+    hops: jax.Array       # int32 [B]
+    io_blocks: jax.Array  # int32 scalar
+    io_ops: jax.Array     # int32 scalar
+    mem_hits: jax.Array   # int32 scalar
+    exhausted: jax.Array  # bool  [B]
+    missed: jax.Array     # int32 [B] first absent chunk id hit (-1 = none)
+    touch: jax.Array      # int32 [R] cache-row record touches this pass
+
+
+def probe_cold(
+    cfg: F2Config,
+    keys: jax.Array,            # int32 [B]
+    cold: hybrid_log.LogState,
+    host: HostCacheState,
+    lower: jax.Array,           # int32 [B] per-lane lower bound
+    head_boundary: jax.Array,   # int32 scalar (I/O model boundary)
+    active: jax.Array,          # bool [B]
+    heads: jax.Array,           # int32 [B] resolved chain heads
+    target: Optional[jax.Array] = None,
+) -> HostProbeResult:
+    """Floor-aware cold-chain walk: `probe_engine.probe(heads=...)` with
+    translated gathers.  A lane that needs an absent chunk parks with
+    ``missed`` = that chunk id and stops walking (its statuses/values are
+    garbage until the facade promotes the chunk and re-probes).  When no
+    lane misses, the result is bit-exact with the ring-only probe including
+    the modeled I/O: cache-served touches charge exactly what the same
+    below-head ring touch would (the cache is a window, not a new tier in
+    the cost model).
+    """
+    b = keys.shape[0]
+    r_rows = host.chunk.shape[0]
+    shift = chunk_shift(cfg)
+    if target is not None:
+        fast = active & (heads == target)
+        walk_active = active & ~fast
+    else:
+        fast = jnp.zeros_like(active)
+        walk_active = active
+
+    def body(_, carry):
+        cur, done, faddr, io_b, io_o, mem_h, hops, missed, touch = carry
+        in_range = (cur != NULL_ADDR) & (cur >= lower)
+        searching = walk_active & ~done & (missed < 0) & in_range
+        k, _, p, m, missing, crow = gather_translated(cfg, cold, host, cur)
+        newly_missed = searching & missing
+        missed = jnp.where(newly_missed, cur >> shift, missed)
+        live = searching & ~missing
+        valid = (m & META_INVALID) == 0
+        key_match = live & valid & (k == keys)
+        is_io = live & (cur < head_boundary)
+        n_io = jnp.sum(is_io.astype(jnp.int32))
+        io_b = io_b + n_io
+        io_o = io_o + n_io
+        mem_h = mem_h + jnp.sum((live & ~is_io).astype(jnp.int32))
+        hops = hops + live.astype(jnp.int32)
+        touch = touch.at[jnp.where(live, crow, r_rows)].add(1, mode="drop")
+        faddr = jnp.where(key_match, cur, faddr)
+        done = done | key_match
+        nxt = jnp.where(live & ~key_match, p, cur)
+        return nxt, done, faddr, io_b, io_o, mem_h, hops, missed, touch
+
+    init = (
+        heads,
+        jnp.zeros((b,), jnp.bool_),
+        jnp.full((b,), NULL_ADDR, jnp.int32),
+        jnp.int32(0), jnp.int32(0), jnp.int32(0),
+        jnp.zeros((b,), jnp.int32),
+        jnp.full((b,), -1, jnp.int32),
+        jnp.zeros((r_rows,), jnp.int32),
+    )
+    cur, done, faddr, io_b, io_o, mem_h, hops, missed, touch = \
+        jax.lax.fori_loop(0, cfg.chain_max, body, init)
+    in_range_end = (cur != NULL_ADDR) & (cur >= lower)
+    exhausted = walk_active & ~done & in_range_end & (missed < 0)
+    found = (done & walk_active) | fast
+    addr = jnp.where(fast, heads, faddr)
+    # final value/meta gather at the found address — it too can cross the
+    # floor (target-mode fast lanes never walked), so its misses fold in
+    _, v2, _, m2, miss2, crow2 = gather_translated(
+        cfg, cold, host, jnp.where(found, addr, 0))
+    newly = found & miss2
+    missed = jnp.where(newly, addr >> shift, missed)
+    found = found & ~miss2
+    touch = touch.at[jnp.where(found, crow2, r_rows)].add(1, mode="drop")
+    value = jnp.where(found[:, None], v2, 0)
+    meta = jnp.where(found, m2, 0)
+    return HostProbeResult(found=found, addr=addr, heads=heads, value=value,
+                           meta=meta, hops=hops, io_blocks=io_b, io_ops=io_o,
+                           mem_hits=mem_h, exhausted=exhausted,
+                           missed=missed, touch=touch)
+
+
+def fold_touch(host: HostCacheState, touch: jax.Array,
+               any_missed: jax.Array) -> HostCacheState:
+    """Fold one pass's cache traffic into the eviction signals: touched
+    rows take the current clock as their tick, hits accumulate, and the
+    miss tripwire latches."""
+    touched = touch > 0
+    return host._replace(
+        hits=host.hits + touch,
+        tick=jnp.where(touched, host.clock, host.tick),
+        clock=host.clock + 1,
+        missed_in_step=host.missed_in_step | any_missed,
+    )
+
+
+# ---------------------------------------------------------------------------
+# state-level kernels (duck-typed over any NamedTuple with .cold / .host so
+# this module never imports store.py; the facades jit + donate these)
+# ---------------------------------------------------------------------------
+
+def install_chunks(state, cids: jax.Array, rows: jax.Array, keyb: jax.Array,
+                   valb: jax.Array, prevb: jax.Array, metab: jax.Array,
+                   mask: jax.Array):
+    """Scatter promoted chunks into their assigned cache rows.
+
+    Slab shapes are [P] / [P, C] / [P, C, V] with P fixed (= R) for stable
+    jit signatures; unmasked slots are dropped.  Installed rows start with
+    tick = clock and zero hits.
+    """
+    host = state.host
+    r_rows = host.chunk.shape[0]
+    c = keyb.shape[1]
+    ridx = jnp.where(mask, rows, jnp.int32(r_rows))
+    fidx = jnp.where(mask[:, None],
+                     rows[:, None] * jnp.int32(c) + jnp.arange(c, dtype=jnp.int32)[None, :],
+                     jnp.int32(r_rows * c)).reshape(-1)
+    host = host._replace(
+        chunk=host.chunk.at[ridx].set(cids, mode="drop"),
+        key=host.key.at[fidx].set(keyb.reshape(-1), mode="drop"),
+        val=host.val.at[fidx].set(valb.reshape(-1, valb.shape[-1]), mode="drop"),
+        prev=host.prev.at[fidx].set(prevb.reshape(-1), mode="drop"),
+        meta=host.meta.at[fidx].set(metab.reshape(-1), mode="drop"),
+        tick=host.tick.at[ridx].set(host.clock, mode="drop"),
+        hits=host.hits.at[ridx].set(0, mode="drop"),
+    )
+    return state._replace(host=host)
+
+
+def extract_chunks(cfg: F2Config, max_chunks: int, state,
+                   first_chunk: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Gather ``max_chunks`` consecutive ring-resident chunks starting at
+    ``first_chunk`` as [K, C] / [K, C, V] slabs (the demotion copy source).
+    Chunks past the caller's real demotion range gather ring garbage the
+    host side ignores."""
+    c = cfg.host_chunk_records
+    addrs = (first_chunk * jnp.int32(c)
+             + jnp.arange(max_chunks * c, dtype=jnp.int32))
+    k, v, p, m = hybrid_log.gather(state.cold, addrs)
+    return (k.reshape(max_chunks, c), v.reshape(max_chunks, c, -1),
+            p.reshape(max_chunks, c), m.reshape(max_chunks, c))
+
+
+def demote_commit(state, new_floor: jax.Array):
+    """Advance the demotion frontier (the publish step of a demote pass —
+    only after the host copies are durable in the manager's store)."""
+    cold = state.cold
+    return state._replace(
+        cold=cold._replace(floor=jnp.maximum(cold.floor, new_floor)))
+
+
+def drop_dead_rows(cfg: F2Config, state):
+    """Empty cache rows whose chunk fell wholly below cold BEGIN (post-
+    truncation GC); their record columns become unreachable garbage."""
+    host = state.host
+    c = cfg.host_chunk_records
+    dead = (host.chunk >= 0) & ((host.chunk + 1) * jnp.int32(c) <= state.cold.begin)
+    return state._replace(
+        host=host._replace(chunk=jnp.where(dead, jnp.int32(-1), host.chunk)))
+
+
+def clear_miss_flag(state):
+    return state._replace(
+        host=state.host._replace(missed_in_step=jnp.bool_(False)))
+
+
+# ---------------------------------------------------------------------------
+# host-side manager
+# ---------------------------------------------------------------------------
+
+_Chunk = Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
+
+# EWMA decay per promote round for the per-chunk miss-traffic signal
+_EWMA_DECAY = 0.8
+
+
+class HostTier:
+    """Host-side chunk store + placement policy for one facade.
+
+    Owns the numpy chunk dicts (the actual host tier), the pin set for
+    in-flight facade rounds, the miss EWMAs driving prefetch, and the
+    promotion/demotion counters.  All device movement goes through the
+    four jitted kernels the facade injects (``install`` / ``extract`` /
+    ``commit`` / ``drop``) — flat facades pass per-shard kernels, sharded
+    facades pass vmapped ones and set ``n_shards``.
+    """
+
+    def __init__(self, cfg: F2Config, *,
+                 n_shards: Optional[int] = None,
+                 install: Callable, extract: Callable,
+                 commit: Callable, drop: Callable,
+                 extract_slab_chunks: int = 8,
+                 obs_facade: str = "kv"):
+        assert cfg.host_tier
+        self.cfg = cfg
+        self.n_shards = n_shards
+        self.lead = 1 if n_shards is None else n_shards
+        self._install = install
+        self._extract = extract
+        self._commit = commit
+        self._drop = drop
+        self.slab_chunks = extract_slab_chunks
+        self._obs_facade = obs_facade
+        ln = self.lead
+        self.store: List[Dict[int, _Chunk]] = [dict() for _ in range(ln)]
+        self.pinned: List[Set[int]] = [set() for _ in range(ln)]
+        self.prefetched: List[Set[int]] = [set() for _ in range(ln)]
+        self.ewma: List[Dict[int, float]] = [dict() for _ in range(ln)]
+        self.promotions = 0
+        self.demotions = 0
+        self.prefetch_hits = 0
+        # facade retry budget: every round either finishes or pins at least
+        # one new chunk, and pins are capped by the cache rows
+        self.max_rounds = cfg.host_cache_chunks + cfg.chain_max + 8
+
+    # -- shape normalization ------------------------------------------------
+
+    def _np_lead(self, x) -> np.ndarray:
+        """Normalize a device value to a host array with a lead shard axis."""
+        a = np.asarray(jax.device_get(x))
+        if self.n_shards is None:
+            return a[None, ...]
+        return a
+
+    def _strip(self, a: np.ndarray):
+        """Undo the lead axis for flat-facade kernel calls."""
+        return a[0] if self.n_shards is None else a
+
+    # -- miss collection ----------------------------------------------------
+
+    def collect(self, missed) -> List[Set[int]]:
+        """Turn a ``missed`` output ([B] flat or [S, W] slab of chunk ids,
+        -1 = none) into per-shard demand sets."""
+        arr = self._np_lead(missed)
+        if self.n_shards is None:
+            arr = arr.reshape(1, -1)
+        return [set(int(c) for c in row[row >= 0]) for row in arr]
+
+    def any_missing(self, needs: Sequence[Set[int]]) -> bool:
+        return any(len(s) for s in needs)
+
+    def pin_chunks(self, needs: Sequence[Set[int]]) -> None:
+        """Pin chunk ids (per shard) until ``end_batch`` without promoting.
+        `ensure` only pins what it installs — a caller whose working set may
+        already be resident (e.g. the cold-cold frontier, re-read at commit
+        time) pins it explicitly so pin-free partial promotes in between
+        cannot evict it."""
+        for s in range(self.lead):
+            self.pinned[s].update(needs[s])
+
+    # -- promotion ----------------------------------------------------------
+
+    def promote(self, state, needs: Sequence[Set[int]], *,
+                partial: bool = False, pin: bool = True):
+        """Install demanded chunks (plus prefetch extras) into the cache,
+        evicting by (empty, tick, hits, row) among unprotected rows.
+        Resident chunks of the current demand are always protected from
+        eviction; `pin=True` additionally pins the satisfied demand until
+        ``end_batch`` (restart-from-head retry loops need survivors across
+        rounds; the resumable compaction walk does not and passes False).
+        With `partial=True` the install shrinks to the available rows (the
+        caller loops; progress >= 1 chunk per call is still enforced),
+        otherwise the full demand must fit.  Raises KeyError for a chunk
+        that was never demoted (a walk below floor found a hole — a real
+        bug, not an operational condition) and RuntimeError on cache
+        thrash."""
+        cfg = self.cfg
+        c = cfg.host_chunk_records
+        r_rows = cfg.host_cache_chunks
+        res_chunk = self._np_lead(state.host.chunk).copy()  # mutated below
+        res_hits = self._np_lead(state.host.hits)
+        res_tick = self._np_lead(state.host.tick)
+        self._absorb_prefetch_hits(res_chunk, res_hits)
+
+        plan: List[List[Tuple[int, int]]] = []   # per shard: (row, cid)
+        total = 0
+        for s in range(self.lead):
+            demand = sorted(needs[s])
+            for cid in demand:
+                ew = self.ewma[s]
+                ew[cid] = ew.get(cid, 0.0) * _EWMA_DECAY + 1.0
+            resident = {int(cd): r for r, cd in enumerate(res_chunk[s]) if cd >= 0}
+            for cid in demand:
+                if cid not in self.store[s] and cid not in resident:
+                    raise KeyError(
+                        f"chunk {cid} (shard {s}) demanded but never demoted")
+            todo = [cid for cid in demand if cid not in resident]
+            protect = self.pinned[s] | set(demand)
+            # prefetch rides along on real installs only: a fully-resident
+            # demand is a no-op (promote is idempotent), not an excuse to
+            # churn the cache warming neighbors
+            extras = (self._prefetch_extras(s, demand, resident, todo)
+                      if todo else [])
+            victims = self._pick_victims(s, res_chunk[s], res_tick[s],
+                                         res_hits[s], len(todo), len(extras),
+                                         protect, partial)
+            if partial and len(victims) < len(todo):
+                todo = todo[:len(victims)]
+                extras = []
+            assign = []
+            for cid, row in zip(todo + extras, victims):
+                assign.append((row, cid))
+                resident.pop(int(res_chunk[s][row]), None)
+                res_chunk[s][row] = cid          # keep the view coherent
+            plan.append(assign)
+            total += len(assign)
+            if pin:
+                installed = set(todo)
+                self.pinned[s].update(
+                    cid for cid in demand
+                    if cid in installed or cid in resident)
+            self.prefetched[s].update(extras)
+
+        if total:
+            faults.maybe_crash("host.mid_promote")
+            cids = np.full((self.lead, r_rows), -1, np.int32)
+            rows = np.zeros((self.lead, r_rows), np.int32)
+            mask = np.zeros((self.lead, r_rows), np.bool_)
+            keyb = np.zeros((self.lead, r_rows, c), np.int32)
+            valb = np.zeros((self.lead, r_rows, c, cfg.value_width), np.int32)
+            prevb = np.zeros((self.lead, r_rows, c), np.int32)
+            metab = np.zeros((self.lead, r_rows, c), np.int32)
+            for s, assign in enumerate(plan):
+                for i, (row, cid) in enumerate(assign):
+                    k, v, p, m = self.store[s][cid]
+                    cids[s, i], rows[s, i], mask[s, i] = cid, row, True
+                    keyb[s, i], valb[s, i] = k, v
+                    prevb[s, i], metab[s, i] = p, m
+            state = self._install(state, *(self._strip(a) for a in
+                                           (cids, rows, keyb, valb, prevb,
+                                            metab, mask)))
+            self.promotions += total
+            obs.count("f2_host_promotions_total", total,
+                      facade=self._obs_facade)
+            obs.journal.emit("host.promoted", facade=self._obs_facade,
+                             chunks=total)
+        return state
+
+    def _prefetch_extras(self, s: int, demand: List[int],
+                         resident: Dict[int, int],
+                         todo: List[int]) -> List[int]:
+        """Pick up to host_prefetch * len(demand) warm-up chunks: demand
+        neighbors first (sequential-walk locality), then the hottest
+        absent chunks by miss EWMA."""
+        budget = self.cfg.host_prefetch * len(demand)
+        if budget <= 0:
+            return []
+        chosen: List[int] = []
+        taken = set(todo)
+
+        def take(cid: int) -> None:
+            if (len(chosen) < budget and cid not in taken
+                    and cid not in resident and cid in self.store[s]):
+                chosen.append(cid)
+                taken.add(cid)
+
+        for cid in demand:
+            take(cid + 1)
+            take(cid - 1)
+        for cid, _ in sorted(self.ewma[s].items(),
+                             key=lambda kv: (-kv[1], kv[0])):
+            take(cid)
+        return chosen
+
+    def _pick_victims(self, s: int, chunks: np.ndarray, ticks: np.ndarray,
+                      hits: np.ndarray, n_demand: int, n_extra: int,
+                      protect: Set[int], partial: bool) -> List[int]:
+        """Rows to overwrite: empty rows first, then non-protected rows by
+        (tick asc, hits asc, row asc).  Non-partial demand must all fit;
+        partial demand shrinks but must make progress.  Prefetch extras
+        silently shrink to the leftovers."""
+        empty = [r for r, cd in enumerate(chunks) if cd < 0]
+        evictable = sorted(
+            (r for r, cd in enumerate(chunks)
+             if cd >= 0 and int(cd) not in protect),
+            key=lambda r: (int(ticks[r]), int(hits[r]), r))
+        order = empty + evictable
+        short = len(order) < n_demand
+        if (short and not partial) or (partial and n_demand and not order):
+            raise RuntimeError(
+                f"chunk cache thrash: shard {s} needs {n_demand} rows but "
+                f"only {len(order)} are evictable "
+                f"(host_cache_chunks={self.cfg.host_cache_chunks}, "
+                f"pinned={len(self.pinned[s])}) — raise host_cache_chunks")
+        return order[:n_demand + (0 if short else n_extra)]
+
+    def _absorb_prefetch_hits(self, res_chunk: np.ndarray,
+                              res_hits: np.ndarray) -> None:
+        """Count a prefetched chunk as a prefetch hit the first time a
+        device view shows traffic on its row; drop evicted ones."""
+        for s in range(self.lead):
+            if not self.prefetched[s]:
+                continue
+            resident = {int(cd): r for r, cd in enumerate(res_chunk[s])
+                        if cd >= 0}
+            hit = {cid for cid in self.prefetched[s]
+                   if cid in resident and res_hits[s][resident[cid]] > 0}
+            gone = {cid for cid in self.prefetched[s] if cid not in resident}
+            if hit:
+                self.prefetch_hits += len(hit)
+                obs.count("f2_prefetch_hits_total", len(hit),
+                          facade=self._obs_facade)
+            self.prefetched[s] -= hit | gone
+
+    def ensure(self, state, plan: Callable):
+        """Drive ``plan`` (a pure pass over ``state`` returning a missed
+        chunk-id array) to a clean fixpoint, promoting between rounds."""
+        for _ in range(self.max_rounds):
+            needs = self.collect(plan(state))
+            if not self.any_missing(needs):
+                return state
+            state = self.promote(state, needs)
+        raise RuntimeError("host tier: plan/promote loop did not converge")
+
+    def end_batch(self) -> None:
+        """Release the pins taken for the current facade round."""
+        for s in range(self.lead):
+            self.pinned[s].clear()
+
+    # -- demotion -----------------------------------------------------------
+
+    def demote_if_needed(self, state, slack: int):
+        """Demote cold chunks to host memory when the ring-resident region
+        plus ``slack`` upcoming appends would not fit the ring.  Moves
+        whole chunks [floor_eff, new_floor) host-side, then publishes the
+        new floor on-device (crash window between the two = the
+        ``host.mid_demote`` fault point)."""
+        cfg = self.cfg
+        c = cfg.host_chunk_records
+        cap = cfg.cold_capacity
+        begins = self._np_lead(state.cold.begin)
+        tails = self._np_lead(state.cold.tail)
+        floors = self._np_lead(state.cold.floor)
+        new_floors = floors.copy()
+        spans: List[Tuple[int, int]] = []        # per shard: (first, n) chunks
+        total = 0
+        for s in range(self.lead):
+            begin, tail, floor = int(begins[s]), int(tails[s]), int(floors[s])
+            floor_eff = max(floor, (begin // c) * c)
+            if (tail - floor_eff) + slack <= cap:
+                spans.append((0, 0))
+                continue
+            target = int(cfg.host_resident_frac * cap)
+            want = ((tail - target) // c) * c
+            new_floor = max(floor_eff, min(want, (tail // c) * c))
+            n = (new_floor - floor_eff) // c
+            spans.append((floor_eff // c, n))
+            new_floors[s] = new_floor
+            total += n
+        if not total:
+            return state
+
+        max_n = max(n for _, n in spans)
+        for off in range(0, max_n, self.slab_chunks):
+            firsts = np.asarray(
+                [first + min(off, n) for first, n in spans], np.int32)
+            slab = self._extract(state, self._strip(firsts))
+            kb, vb, pb, mb = (self._np_lead(a) for a in slab)
+            for s, (first, n) in enumerate(spans):
+                for j in range(min(self.slab_chunks, n - off)):
+                    cid = first + off + j
+                    self.store[s][cid] = (kb[s, j].copy(), vb[s, j].copy(),
+                                          pb[s, j].copy(), mb[s, j].copy())
+        faults.maybe_crash("host.mid_demote")
+        state = self._commit(state, self._strip(np.asarray(new_floors,
+                                                           np.int32)))
+        self.demotions += total
+        obs.count("f2_host_demotions_total", total, facade=self._obs_facade)
+        obs.journal.emit("host.demoted", facade=self._obs_facade,
+                         chunks=total)
+        return state
+
+    def gc(self, state):
+        """Post-truncation cleanup: forget host chunks wholly below cold
+        BEGIN and drop their cache rows on-device."""
+        begins = self._np_lead(state.cold.begin)
+        changed = False
+        for s in range(self.lead):
+            begin = int(begins[s])
+            dead = [cid for cid in self.store[s]
+                    if (cid + 1) * self.cfg.host_chunk_records <= begin]
+            for cid in dead:
+                del self.store[s][cid]
+                self.ewma[s].pop(cid, None)
+                self.prefetched[s].discard(cid)
+                changed = True
+        if changed:
+            state = self._drop(state)
+        return state
+
+    # -- durability ---------------------------------------------------------
+
+    def export_snapshot(self) -> Dict[str, np.ndarray]:
+        """Flatten the host store into fixed-key variable-length arrays for
+        the checkpoint meta tree (rows sorted shard asc, chunk asc; the
+        device cache is a replica and is not exported)."""
+        cfg = self.cfg
+        c = cfg.host_chunk_records
+        items = [(s, cid) for s in range(self.lead)
+                 for cid in sorted(self.store[s])]
+        n = len(items)
+        out = {
+            "host_shard": np.zeros((n,), np.int32),
+            "host_ids": np.zeros((n,), np.int32),
+            "host_key": np.zeros((n, c), np.int32),
+            "host_val": np.zeros((n, c, cfg.value_width), np.int32),
+            "host_prev": np.zeros((n, c), np.int32),
+            "host_meta": np.zeros((n, c), np.int32),
+        }
+        for i, (s, cid) in enumerate(items):
+            k, v, p, m = self.store[s][cid]
+            out["host_shard"][i] = s
+            out["host_ids"][i] = cid
+            out["host_key"][i], out["host_val"][i] = k, v
+            out["host_prev"][i], out["host_meta"][i] = p, m
+        return out
+
+    def import_snapshot(self, meta: Dict[str, np.ndarray]) -> None:
+        """Rebuild the host store from a checkpoint meta tree (inverse of
+        ``export_snapshot``); resets pins/prefetch/EWMA state."""
+        ln = self.lead
+        self.store = [dict() for _ in range(ln)]
+        self.pinned = [set() for _ in range(ln)]
+        self.prefetched = [set() for _ in range(ln)]
+        self.ewma = [dict() for _ in range(ln)]
+        shards = np.asarray(meta["host_shard"], np.int64)
+        ids = np.asarray(meta["host_ids"], np.int64)
+        for i in range(shards.shape[0]):
+            s, cid = int(shards[i]), int(ids[i])
+            self.store[s][cid] = (
+                np.asarray(meta["host_key"][i], np.int32).copy(),
+                np.asarray(meta["host_val"][i], np.int32).copy(),
+                np.asarray(meta["host_prev"][i], np.int32).copy(),
+                np.asarray(meta["host_meta"][i], np.int32).copy(),
+            )
+
+    # -- reporting ----------------------------------------------------------
+
+    def host_chunks(self) -> int:
+        return sum(len(d) for d in self.store)
+
+    def host_bytes(self) -> int:
+        cfg = self.cfg
+        per = cfg.host_chunk_records * 4 * (3 + cfg.value_width)
+        return self.host_chunks() * per
+
+    def stats(self) -> Dict[str, int]:
+        n = self.host_chunks()
+        obs.gauge_set("f2_host_chunks", n, facade=self._obs_facade)
+        return {
+            "chunks": n,
+            "promotions_total": self.promotions,
+            "demotions_total": self.demotions,
+            "prefetch_hits_total": self.prefetch_hits,
+        }

@@ -33,6 +33,11 @@ class LogState(NamedTuple):
     tail: jax.Array       # int32 scalar
     flushed_upto: jax.Array  # int32 scalar: stable-tier write accounting mark
     overflowed: jax.Array    # bool scalar: live region exceeded capacity
+    floor: jax.Array         # int32 scalar: host-tier demotion frontier —
+                             # records in [begin, floor) live host-side
+                             # (core.host_tier); the ring only holds
+                             # [floor, tail).  Always 0 unless the store
+                             # runs with F2Config.host_tier.
 
 
 def create(capacity: int, value_width: int) -> LogState:
@@ -45,6 +50,7 @@ def create(capacity: int, value_width: int) -> LogState:
         tail=jnp.int32(0),
         flushed_upto=jnp.int32(0),
         overflowed=jnp.bool_(False),
+        floor=jnp.int32(0),
     )
 
 
@@ -108,7 +114,10 @@ def append(
         meta=log.meta.at[idx].set(metas, mode="drop"),
         tail=log.tail + n,
     )
-    log = log._replace(overflowed=log.overflowed | ((log.tail - log.begin) > jnp.int32(cap)))
+    # only the ring-resident suffix [max(begin, floor), tail) consumes slots;
+    # demoted records below floor live host-side (core.host_tier)
+    ring_base = jnp.maximum(log.begin, log.floor)
+    log = log._replace(overflowed=log.overflowed | ((log.tail - ring_base) > jnp.int32(cap)))
     return log, new_addrs
 
 

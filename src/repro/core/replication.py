@@ -173,6 +173,9 @@ class ReplicatedKV(ShardedKV):
     ):
         assert n_replicas >= 1
         assert read_selector in shard_router.REPLICA_POLICIES, read_selector
+        assert not cfg.host_tier, \
+            "host_tier is not supported under replication (the host chunk " \
+            "stores would need a replica axis and resync integration)"
         # hooks used inside super().__init__ need these first
         self.R = int(n_replicas)
         self.read_selector = read_selector

@@ -71,7 +71,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
-from . import compaction, rebalance, shard_router, store
+from . import compaction, host_tier, rebalance, shard_router, store
 from . import cold_index as _cold_index
 from .rebalance import RebalanceConfig
 from repro import obs
@@ -119,6 +119,26 @@ def _masked_cold_trunc(cfg, state, until, do):
 
 def _masked_full_scan(cfg, state, do):
     return _select(do, compaction.charge_full_scan(cfg, state), state)
+
+
+# masked resumable cold-cold kernels (host tier; see compaction.cc_commit):
+# unselected shards keep a clean all(-1) demand and pass state through
+# untouched, so idle shards stay byte-identical
+
+def _masked_cc_fplan(cfg, B, state, start, until, do):
+    miss = compaction.plan_cc_frontier(cfg, state, start, until, B)
+    return jnp.where(do, miss, jnp.int32(-1))
+
+
+def _masked_cc_walk(cfg, B, state, start, until, carry, do):
+    s2, c2 = compaction.cc_walk_round(cfg, state, start, until, carry, B)
+    c2 = c2._replace(missed=jnp.where(do, c2.missed, jnp.int32(-1)))
+    return _select(do, s2, state), c2
+
+
+def _masked_cc_commit(cfg, B, state, start, until, carry, do):
+    s2, n = compaction.cc_commit(cfg, state, start, until, carry, B)
+    return _select(do, s2, state), jnp.where(do, n, 0)
 
 
 def _masked_chunk_gc(cfg, state, do):
@@ -251,6 +271,40 @@ class ShardedKV:
         self._chunk_gc = jax.jit(self._lift(functools.partial(
             _masked_chunk_gc, cfg), n_in=2), **dn)
 
+        # -- host tier: lifted movement kernels + per-shard chunk stores ----
+        self._ht = None
+        if cfg.host_tier:
+            assert mode == "f2", "host_tier requires mode='f2'"
+            assert rebalance_cfg is None, \
+                "host_tier is incompatible with live rebalancing (bucket " \
+                "migration would have to move host-resident chunks)"
+            assert (cfg.host_cache_chunks * cfg.host_chunk_records
+                    >= compact_batch + 4 * cfg.host_chunk_records), (
+                "host_cache_chunks * host_chunk_records must cover "
+                "compact_batch plus chain headroom (>= compact_batch + "
+                "4 * host_chunk_records)")
+            self._cc_fplan = jax.jit(self._lift(functools.partial(
+                _masked_cc_fplan, cfg, compact_batch), n_in=4))
+            self._cc_winit = jax.jit(self._lift(functools.partial(
+                compaction.cc_walk_init, cfg, B=compact_batch), n_in=3))
+            self._cc_walk = jax.jit(self._lift(functools.partial(
+                _masked_cc_walk, cfg, compact_batch), n_in=5), **dn)
+            self._cc_commit = jax.jit(self._lift(functools.partial(
+                _masked_cc_commit, cfg, compact_batch), n_in=5), **dn)
+            slab = 8
+            self._ht = host_tier.HostTier(
+                cfg, n_shards=n_shards,
+                install=jax.jit(self._lift(host_tier.install_chunks,
+                                           n_in=8), **dn),
+                extract=jax.jit(self._lift(functools.partial(
+                    host_tier.extract_chunks, cfg, slab), n_in=2)),
+                commit=jax.jit(self._lift(host_tier.demote_commit,
+                                          n_in=2), **dn),
+                drop=jax.jit(self._lift(functools.partial(
+                    host_tier.drop_dead_rows, cfg), n_in=1), **dn),
+                extract_slab_chunks=slab,
+                obs_facade=self._obs_facade)
+
     # -- subclass hooks (the replica axis lives in core.replication) ----------
     @property
     def _lead_shape(self) -> tuple:
@@ -321,6 +375,43 @@ class ShardedKV:
                     rt.occupancy, bucket_counts(rt, nb))
 
         self._read_step = jax.jit(routed_read, **dn)
+
+        if not cfg.host_tier:
+            return
+
+        # pure pre-fault planner for a routed write round: same router,
+        # per-shard `store.plan_fetch`; never donates (plan then promote)
+        plan_lifted = self._lift(
+            functools.partial(store.plan_fetch, cfg), n_in=3)
+
+        def routed_plan(state, keys, ops, vals, bmap):
+            W = self.lanes or keys.shape[0]
+            skeys, sops, _, _rt = shard_router.route(
+                keys, ops, vals, self.S, W, bucket_map=bmap)
+            return plan_lifted(state, skeys, sops)
+
+        self._plan_routed = jax.jit(routed_plan)
+
+        # deferring read path: per-shard missed slabs come back for the
+        # promote loop, plus a lane-level view to pick the served lanes
+        readh_lifted = self._lift(
+            functools.partial(store.read_batch_host, cfg, admit_rc=admit),
+            n_in=3)
+
+        def routed_read_host(state, keys, ops, bmap):
+            W = self.lanes or keys.shape[0]
+            vals = jnp.zeros((keys.shape[0], cfg.value_width), jnp.int32)
+            skeys, sops, _, rt = shard_router.route(
+                keys, ops, vals, self.S, W, bucket_map=bmap)
+            state, sstatus, srvals, smissed = readh_lifted(
+                state, skeys, sops == OP_READ)
+            status, rvals = shard_router.unroute(rt, sstatus, srvals)
+            lane_miss, _ = shard_router.unroute(rt, smissed, srvals)
+            lane_miss = jnp.where(rt.placed, lane_miss, jnp.int32(-1))
+            return (state, status, rvals, smissed, lane_miss, rt.placed,
+                    rt.deferred, rt.occupancy, bucket_counts(rt, nb))
+
+        self._read_step_host = jax.jit(routed_read_host, **dn)
 
     def _lift(self, fn, n_in: int):
         """vmap over the shard axis; under shard_map additionally partition
@@ -409,11 +500,19 @@ class ShardedKV:
             # it reconstructs data the log already covers; `apply` logs
             # its whole batch itself and re-derives the deferral rounds)
             self.wal.log_slab(keys, ops, vals, self.map_version)
+        if self._ht is not None:
+            # pre-fault every host chunk this round would touch (routed
+            # writes cannot defer mid-step, exactly like KV.apply)
+            self.state = self._ht.ensure(
+                self.state, lambda st: self._plan_routed(
+                    st, keys, ops, vals, self._bucket_map_dev))
         with obs.span("sharded.apply_round", cat="serve",
                       B=int(keys.shape[0])):
             (self.state, status, rvals, placed, deferred,
              occ, bc) = self._step(self.state, keys, ops, vals,
                                    self._bucket_map_dev)
+            if self._ht is not None:
+                self._ht.end_batch()
             self._note_round(occ, bc)
             self.maybe_compact()
         return status, rvals, placed, deferred
@@ -487,6 +586,8 @@ class ShardedKV:
         B = keys.shape[0]
         bmap = self._bucket_map_dev     # re-uploaded only at a map flip
         cur_ops = jnp.full((B,), OP_READ, jnp.int32)
+        if self._ht is not None:
+            return self._read_host_loop(keys, cur_ops, bmap)
         if self.lanes is None or self.lanes >= B:
             with obs.span("sharded.read", cat="serve", B=B):
                 (self.state, status, rvals, _placed, _deferred,
@@ -515,6 +616,46 @@ class ShardedKV:
                                 jnp.int32(OP_READ), jnp.int32(OP_NOOP))
         obs.observe("f2_deferral_rounds", n_rounds,
                     buckets=obs.COUNT_BUCKETS,
+                    help="routed rounds needed per client batch",
+                    facade=self._obs_facade, path="read")
+        return jnp.asarray(status), jnp.asarray(rvals)
+
+    def _read_host_loop(self, keys, cur_ops, bmap):
+        """Routed reads under the host tier: router deferral and host-chunk
+        miss-with-deferral share one retry loop.  A placed lane whose cold
+        walk parked on an absent chunk comes back unserved (`lane_miss` >=
+        0); the parked chunks are promoted (partial, pinned) and only the
+        unserved lanes re-run."""
+        B = keys.shape[0]
+        status = np.zeros(B, np.int32)
+        rvals = np.zeros((B, self.cfg.value_width), np.int32)
+        n_rounds = 0
+        for _ in range(B + self._ht.max_rounds + 8):
+            with obs.span("sharded.read", cat="serve", B=B):
+                (self.state, st_r, rv_r, smissed, lane_miss, placed,
+                 deferred, occ, bc) = self._read_step_host(
+                    self.state, keys, cur_ops, bmap)
+                self._note_round(occ, bc)
+            n_rounds += 1
+            placed_np = np.asarray(placed)
+            hmiss = placed_np & (np.asarray(lane_miss) >= 0)
+            served = placed_np & ~hmiss
+            status = np.where(served, np.asarray(st_r), status)
+            rvals = np.where(served[:, None], np.asarray(rv_r), rvals)
+            redo = np.asarray(deferred) | hmiss
+            if not redo.any():
+                break
+            needs = self._ht.collect(smissed)
+            if self._ht.any_missing(needs):
+                self.state = self._ht.promote(self.state, needs,
+                                              partial=True)
+            cur_ops = jnp.where(jnp.asarray(redo), jnp.int32(OP_READ),
+                                jnp.int32(OP_NOOP))
+        else:
+            raise RuntimeError(
+                "host tier: sharded read deferral did not converge")
+        self._ht.end_batch()
+        obs.observe("f2_deferral_rounds", n_rounds, buckets=obs.COUNT_BUCKETS,
                     help="routed rounds needed per client batch",
                     facade=self._obs_facade, path="read")
         return jnp.asarray(status), jnp.asarray(rvals)
@@ -573,7 +714,12 @@ class ShardedKV:
             self.compact_hot_cold(shards=hot_over)
             # hot->cold appends cold records AND chunk-index versions
             _, _, cb, ct, ib, it = self._bounds()
-        cold_over = (ct - cb) / self.cfg.cold_capacity > self.trigger
+        # mirror KV.maybe_compact: under the host tier cold-cold GC fires
+        # on total span vs the host log budget, not device-ring occupancy
+        # (demotion handles ring pressure)
+        cold_budget = self.cfg.cold_capacity * (
+            self.cfg.host_log_factor if self._ht is not None else 1.0)
+        cold_over = (ct - cb) / cold_budget > self.trigger
         if cold_over.any():
             self.compact_cold_cold(shards=cold_over)
             *_, ib, it = self._bounds()
@@ -612,6 +758,11 @@ class ShardedKV:
         for i in range(n_steps):
             starts = begins + i * cb
             do = shards & (starts < begins + n)
+            if self._ht is not None:
+                # each step appends <= compact_batch cold records per shard;
+                # keep that much ring headroom by demoting first
+                self.state = self._ht.demote_if_needed(
+                    self.state, cb + self.cfg.host_chunk_records)
             self.state, n_live = step(self.state,
                                       jnp.asarray(starts, jnp.int32), until,
                                       jnp.asarray(do))
@@ -643,14 +794,75 @@ class ShardedKV:
         n_sh = int(shards.sum())
         n = self._regions(cb, ct, n_records, shards)
         with obs.span("compact.cold_cold", cat="compaction", shards=n_sh):
-            until, _ = self._masked_steps(self._cc_step, cb, n, shards)
+            if self._ht is None:
+                until, _ = self._masked_steps(self._cc_step, cb, n, shards)
+            else:
+                until = self._cc_steps_host(cb, n, shards)
             self.state = self._cold_trunc(self.state, until,
                                           jnp.asarray(shards))
+            if self._ht is not None:
+                self._ht.end_batch()
+                self.state = self._ht.gc(self.state)
         self.compactions += shards.astype(np.int64)
         obs.journal.emit("compaction.cold_cold", facade=self._obs_facade,
                          shards=n_sh)
         obs.count("f2_compactions_total", facade=self._obs_facade,
                   kind="cold_cold")
+
+    def _cc_steps_host(self, begins, n, shards):
+        """Masked cold-cold copying phase under the host tier: per masked
+        step, demote for headroom, pin + ensure each live shard's frontier
+        chunks, drain the resumable liveness walk (parked chunks promote
+        partial/pin-free between rounds), then commit — the vectorized
+        twin of `api.KV._ccstep_host`."""
+        until = jnp.asarray(begins + n, jnp.int32)
+        until_np = begins + n
+        cb = self.compact_batch
+        n_steps = int(-(-int(n.max()) // cb)) if n.max() > 0 else 0
+        shift = self.cfg.host_chunk_records.bit_length() - 1
+        for i in range(n_steps):
+            starts = begins + i * cb
+            do = shards & (starts < until_np)
+            do_dev = jnp.asarray(do)
+            sj = jnp.asarray(starts, jnp.int32)
+            self._ht.end_batch()
+            self.state = self._ht.demote_if_needed(
+                self.state, cb + self.cfg.host_chunk_records)
+            # pin each live shard's below-floor frontier chunks: `ensure`
+            # only pins what it installs, but the commit re-reads the
+            # frontier after pin-free walk promotes
+            cbg, ctl, cfl = (np.asarray(x).astype(np.int64)
+                             for x in jax.device_get(
+                                 (self.state.cold.begin,
+                                  self.state.cold.tail,
+                                  self.state.cold.floor)))
+            pins = []
+            for s in range(self.S):
+                lo = max(int(starts[s]), int(cbg[s]))
+                hi = min(int(until_np[s]), int(ctl[s]),
+                         int(starts[s]) + cb, int(cfl[s]))
+                pins.append(set(range(lo >> shift, ((hi - 1) >> shift) + 1))
+                            if do[s] and lo < hi else set())
+            self._ht.pin_chunks(pins)
+            self.state = self._ht.ensure(
+                self.state, lambda st: self._cc_fplan(st, sj, until, do_dev))
+            carry = self._cc_winit(self.state, sj, until)
+            self.state, carry = self._cc_walk(self.state, sj, until, carry,
+                                              do_dev)
+            for _ in range(cb * self.cfg.chain_max + 8):
+                needs = self._ht.collect(carry.missed)
+                if not self._ht.any_missing(needs):
+                    break
+                self.state = self._ht.promote(self.state, needs,
+                                              partial=True, pin=False)
+                self.state, carry = self._cc_walk(self.state, sj, until,
+                                                  carry, do_dev)
+            else:
+                raise RuntimeError(
+                    "host tier: cold-cold walk did not converge")
+            self.state, _ = self._cc_commit(self.state, sj, until, carry,
+                                            do_dev)
+        return until
 
     def compact_single_log(self, n_records: Optional[int] = None,
                            shards: Optional[np.ndarray] = None):
@@ -703,7 +915,7 @@ class ShardedKV:
     def _stats_tree(self) -> dict:
         """The raw nested telemetry tree; `stats()` folds it through the
         metrics registry (identity when observability is disabled)."""
-        return dict(
+        t = dict(
             io=self.io_stats(),
             shards=dict(
                 n_shards=self.S,
@@ -715,6 +927,9 @@ class ShardedKV:
                 migrated_records=self.migrated_records,
             ),
         )
+        if self._ht is not None:
+            t["host"] = self._ht.stats()
+        return t
 
     def stats(self) -> dict:
         """The ONE nested telemetry shape every facade speaks (KVProtocol):
@@ -782,6 +997,8 @@ class ShardedKV:
         flip -> replay.  See `core.rebalance` for the protocol; shards
         with no moving bucket stay byte-identical through every step.
         Returns the number of records replayed into their new shards."""
+        assert self._ht is None, \
+            "host_tier does not support live bucket migration"
         new_map = np.asarray(new_map, np.int32)
         assert new_map.shape == (self.n_buckets,), new_map.shape
         assert ((new_map >= 0) & (new_map < self.S)).all(), new_map
@@ -921,8 +1138,15 @@ class ShardedKV:
             chunklog_mem=(c.chunklog_mem if self.mode == "f2" else 0)
             * c.chunk_bytes,
         )
+        if self.cfg.host_tier:
+            per["host_chunk_cache"] = (
+                c.host_cache_chunks * c.host_chunk_records
+                * 4 * (3 + c.value_width))
         out = {k: v * self.S for k, v in per.items()}
         out["total"] = sum(out.values())
+        if self._ht is not None:
+            # the host store is NOT device memory; reported, not totaled
+            out["host_store_bytes"] = self._ht.host_bytes()
         return out
 
     def check_invariants(self):
@@ -941,3 +1165,14 @@ class ShardedKV:
                 f"shard {s}: hash chain exceeded chain_max"
             assert int(hb[s]) <= int(ht[s]), f"shard {s}: hot begin > tail"
             assert int(cb[s]) <= int(ct[s]), f"shard {s}: cold begin > tail"
+        if self.cfg.host_tier:
+            mis, fl = jax.device_get((st.host.missed_in_step, st.cold.floor))
+            c = self.cfg.host_chunk_records
+            for s in range(self.S):
+                assert not bool(np.ravel(mis)[s]), \
+                    f"shard {s}: host chunk miss on a committed path " \
+                    f"(pre-fault bug)"
+                f = int(np.ravel(fl)[s])
+                assert f % c == 0, f"shard {s}: floor {f} not chunk-aligned"
+                assert 0 <= f <= int(np.ravel(ct)[s]), \
+                    f"shard {s}: floor {f} outside [0, tail]"

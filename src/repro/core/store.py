@@ -17,11 +17,11 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import (cold_index, hybrid_log, probe_engine, read_cache,
+from . import (cold_index, host_tier, hybrid_log, probe_engine, read_cache,
                write_engine)
-from .types import (META_TOMBSTONE, NULL_ADDR, OP_DELETE, OP_READ, OP_RMW,
-                    OP_UPSERT, ST_CREATED, ST_NONE, ST_NOT_FOUND, ST_OK,
-                    F2Config, IoStats, hash32, is_rc, rc_untag)
+from .types import (META_TOMBSTONE, NULL_ADDR, OP_DELETE, OP_NOOP, OP_READ,
+                    OP_RMW, OP_UPSERT, ST_CREATED, ST_NONE, ST_NOT_FOUND,
+                    ST_OK, F2Config, IoStats, hash32, is_rc, rc_untag)
 
 
 class F2State(NamedTuple):
@@ -34,6 +34,7 @@ class F2State(NamedTuple):
     hot_truncs: jax.Array         # int32: hot-log truncation counter
     cold_truncs: jax.Array        # int32: num_truncs of paper S5.4
     walk_exhausted: jax.Array     # bool: some chain walk hit chain_max (guard)
+    host: host_tier.HostCacheState  # device chunk cache over demoted chunks
 
 
 def create(cfg: F2Config) -> F2State:
@@ -47,6 +48,7 @@ def create(cfg: F2Config) -> F2State:
         hot_truncs=jnp.int32(0),
         cold_truncs=jnp.int32(0),
         walk_exhausted=jnp.bool_(False),
+        host=host_tier.create(cfg),
     )
 
 
@@ -60,15 +62,50 @@ def _merge_walk_io(stats: IoStats, res) -> IoStats:
     return stats.add_mem_hits(res.mem_hits)
 
 
+def _cold_probe(cfg: F2Config, state: F2State, keys, lower_c, cold_head,
+                active, entries, target=None) -> host_tier.HostProbeResult:
+    """Cold-chain probe, floor-aware when the host tier is on.  Always
+    returns a `HostProbeResult`; with the tier off the `missed`/`touch`
+    fields are all-clear and the configured probe engine runs unchanged."""
+    if cfg.host_tier:
+        return host_tier.probe_cold(cfg, keys, state.cold, state.host,
+                                    lower_c, cold_head, active, entries,
+                                    target=target)
+    res = probe_engine.probe(cfg, keys, state.cold, lower_c, cold_head,
+                             active, heads=entries, rc=None, target=target)
+    return host_tier.HostProbeResult(
+        *res,
+        missed=jnp.full(keys.shape, -1, jnp.int32),
+        touch=jnp.zeros((state.host.chunk.shape[0],), jnp.int32))
+
+
+def _fold_host(cfg: F2Config, state: F2State, touch, missed,
+               latch_miss: bool) -> F2State:
+    """Fold a cold probe's cache traffic into the eviction signals.  On
+    committed paths (`latch_miss=True`) an observed miss also latches the
+    `missed_in_step` tripwire — the facade should have pre-faulted."""
+    if not cfg.host_tier:
+        return state
+    any_missed = jnp.any(missed >= 0) if latch_miss else jnp.bool_(False)
+    return state._replace(
+        host=host_tier.fold_touch(state.host, touch, any_missed))
+
+
 # ---------------------------------------------------------------------------
 # Read path (paper S5.3 Read + S7.2 with read cache)
 # ---------------------------------------------------------------------------
 
-def read_batch(
+def _read_core(
     cfg: F2Config, state: F2State, keys: jax.Array, active: jax.Array,
-    admit_rc: bool = True,
-) -> Tuple[F2State, jax.Array, jax.Array]:
-    """Returns (state, status[B], values[B, V])."""
+    admit_rc: bool, latch_miss: bool,
+) -> Tuple[F2State, jax.Array, jax.Array, jax.Array]:
+    """Shared read body; returns (state, status[B], values[B, V], missed[B]).
+
+    `missed` carries the first absent host chunk per lane (-1 = none).
+    Missed lanes report ST_NONE and are excluded from RC admission — the
+    caller either re-runs them after promoting (`read_batch_host`, the
+    miss-with-deferral protocol) or treats any miss as a pre-fault bug
+    (`read_batch` on committed paths, latching the tripwire)."""
     B = keys.shape[0]
     hot_head = hybrid_log.head_addr(state.hot, cfg.hot_mem)
     lower = jnp.broadcast_to(state.hot.begin, (B,))
@@ -92,16 +129,19 @@ def read_batch(
                                              cold_active, stats)
     cold_head = hybrid_log.head_addr(state.cold, cfg.cold_mem)
     lower_c = jnp.broadcast_to(state.cold.begin, (B,))
-    res_c = probe_engine.probe(cfg, keys, state.cold, lower_c, cold_head,
-                               cold_active, heads=entries, rc=None)
+    res_c = _cold_probe(cfg, state, keys, lower_c, cold_head, cold_active,
+                        entries)
     stats = _merge_walk_io(stats, res_c)
+    state = _fold_host(cfg, state, res_c.touch, res_c.missed, latch_miss)
+    hmiss = res_c.missed >= 0
     tomb_cold = res_c.found & ((res_c.meta & META_TOMBSTONE) != 0)
     ok_cold = res_c.found & ~tomb_cold
 
     vals = jnp.where(ok_hot[:, None], res_h.value,
                      jnp.where(ok_cold[:, None], res_c.value, 0))
     found = ok_hot | ok_cold
-    status = jnp.where(found, ST_OK, jnp.where(active, ST_NOT_FOUND, ST_NONE))
+    status = jnp.where(found, ST_OK,
+                       jnp.where(active & ~hmiss, ST_NOT_FOUND, ST_NONE))
 
     hot = state.hot
     rc = state.rc
@@ -126,7 +166,27 @@ def read_batch(
         hot=hot, rc=rc, hot_index=hot_index, stats=stats,
         walk_exhausted=state.walk_exhausted | jnp.any(res_h.exhausted) | jnp.any(res_c.exhausted),
     )
+    return state, status, vals, res_c.missed
+
+
+def read_batch(
+    cfg: F2Config, state: F2State, keys: jax.Array, active: jax.Array,
+    admit_rc: bool = True,
+) -> Tuple[F2State, jax.Array, jax.Array]:
+    """Returns (state, status[B], values[B, V])."""
+    state, status, vals, _ = _read_core(cfg, state, keys, active, admit_rc,
+                                        latch_miss=True)
     return state, status, vals
+
+
+def read_batch_host(
+    cfg: F2Config, state: F2State, keys: jax.Array, active: jax.Array,
+    admit_rc: bool = True,
+) -> Tuple[F2State, jax.Array, jax.Array, jax.Array]:
+    """Host-tier read round: like `read_batch` but misses defer instead of
+    latching — returns the extra missed[B] chunk-id vector for the facade's
+    promote-and-retry loop."""
+    return _read_core(cfg, state, keys, active, admit_rc, latch_miss=False)
 
 
 def probe_hops(cfg: F2Config, state: F2State, keys: jax.Array) -> jax.Array:
@@ -148,8 +208,8 @@ def probe_hops(cfg: F2Config, state: F2State, keys: jax.Array) -> jax.Array:
                                          cold_active, state.stats)
     cold_head = hybrid_log.head_addr(state.cold, cfg.cold_mem)
     lower_c = jnp.broadcast_to(state.cold.begin, (B,))
-    res_c = probe_engine.probe(cfg, keys, state.cold, lower_c, cold_head,
-                               cold_active, heads=entries, rc=None)
+    res_c = _cold_probe(cfg, state, keys, lower_c, cold_head, cold_active,
+                        entries)
     return res_h.hops + res_c.hops
 
 
@@ -185,9 +245,14 @@ def write_batch(
                                              plan.need_cold, stats)
     cold_head = hybrid_log.head_addr(state.cold, cfg.cold_mem)
     lower_c = jnp.broadcast_to(state.cold.begin, (B,))
-    res_c = probe_engine.probe(cfg, keys, state.cold, lower_c, cold_head,
-                               plan.need_cold, heads=entries, rc=None)
+    res_c = _cold_probe(cfg, state, keys, lower_c, cold_head, plan.need_cold,
+                        entries)
     stats = _merge_walk_io(stats, res_c)
+    # writes cannot defer mid-step (appends interleave with the cold base
+    # resolution), so the facade must have pre-faulted via plan_fetch;
+    # a miss here latches the tripwire check_invariants asserts against
+    state = _fold_host(cfg, state, res_c.touch, res_c.missed,
+                       latch_miss=True)
     cold_ok = res_c.found & ((res_c.meta & META_TOMBSTONE) == 0)
     use_cold = plan.need_cold & cold_ok
     final_val = plan.val_nocold + jnp.where(use_cold[:, None], res_c.value, 0)
@@ -293,9 +358,11 @@ def read_finish(cfg: F2Config, state: F2State, snap: ReadSnapshot
     cold_active = active & ~res_h.found
     cold_head = hybrid_log.head_addr(state.cold, cfg.cold_mem)
     lower_c = jnp.broadcast_to(state.cold.begin, (B,))
-    res_c = probe_engine.probe(cfg, keys, state.cold, lower_c, cold_head,
-                               cold_active, heads=snap.cold_entries, rc=None)
+    res_c = _cold_probe(cfg, state, keys, lower_c, cold_head, cold_active,
+                        snap.cold_entries)
     stats = _merge_walk_io(stats, res_c)
+    state = _fold_host(cfg, state, res_c.touch, res_c.missed,
+                       latch_miss=True)
 
     # --- the anomaly fix: recheck the new tail segment on miss ---------------
     truncated_since = state.cold_truncs != snap.num_truncs
@@ -303,9 +370,11 @@ def read_finish(cfg: F2Config, state: F2State, snap: ReadSnapshot
     entries2, stats = cold_index.find_entries(state.cold_idx, cfg, keys,
                                               retry, stats)
     lower_retry = jnp.broadcast_to(snap.cold_tail, (B,))  # only the new part
-    res_r = probe_engine.probe(cfg, keys, state.cold, lower_retry, cold_head,
-                               retry, heads=entries2, rc=None)
+    res_r = _cold_probe(cfg, state, keys, lower_retry, cold_head, retry,
+                        entries2)
     stats = _merge_walk_io(stats, res_r)
+    state = _fold_host(cfg, state, res_r.touch, res_r.missed,
+                       latch_miss=True)
 
     cold_found = res_c.found | res_r.found
     v_cold = jnp.where(res_c.found[:, None], res_c.value, res_r.value)
@@ -318,3 +387,57 @@ def read_finish(cfg: F2Config, state: F2State, snap: ReadSnapshot
     found = ok_hot | ok_cold
     status = jnp.where(found, ST_OK, jnp.where(active, ST_NOT_FOUND, ST_NONE))
     return state._replace(stats=stats), status, vals
+
+
+# ---------------------------------------------------------------------------
+# Host-tier pre-fault planning (core.host_tier)
+# ---------------------------------------------------------------------------
+
+def plan_fetch(cfg: F2Config, state: F2State, keys: jax.Array,
+               ops: jax.Array) -> jax.Array:
+    """Pure pre-fault pass: which absent host chunks would `apply(keys,
+    ops)` touch?  Returns missed[B] chunk ids (-1 = none); no state change,
+    no I/O charged.
+
+    The cold-active set here is a superset of the committed batch's: the
+    hot probe skips read-cache replicas (`rc_match=False`, matching the
+    write path's locate walk), so a lane whose read would RC-hit still
+    pre-faults its cold chain, and every write op that misses the hot log
+    plans a cold walk, not just the pure-RMW groups.  Over-fetching is
+    safe (extra promotions); under-fetching would trip `missed_in_step`.
+    A round only reveals each lane's *first* absent chunk — the facade
+    loops plan -> promote to a fixpoint (`HostTier.ensure`)."""
+    B = keys.shape[0]
+    active = ops != OP_NOOP
+    hot_head = hybrid_log.head_addr(state.hot, cfg.hot_mem)
+    lower = jnp.broadcast_to(state.hot.begin, (B,))
+    res_h = probe_engine.probe(cfg, keys, state.hot, lower, hot_head, active,
+                               index=state.hot_index, rc=state.rc,
+                               rc_match=False)
+    cold_active = active & ~res_h.found
+    entries, _ = cold_index.find_entries(state.cold_idx, cfg, keys,
+                                         cold_active, IoStats.zeros())
+    cold_head = hybrid_log.head_addr(state.cold, cfg.cold_mem)
+    lower_c = jnp.broadcast_to(state.cold.begin, (B,))
+    res_c = host_tier.probe_cold(cfg, keys, state.cold, state.host, lower_c,
+                                 cold_head, cold_active, entries)
+    return res_c.missed
+
+
+def plan_finish(cfg: F2Config, state: F2State, snap: ReadSnapshot
+                ) -> jax.Array:
+    """Pre-fault pass for `read_finish`: replays its cold walks (snapshot
+    heads + truncation-retry segment) in pure form and returns missed[B]."""
+    B = snap.keys.shape[0]
+    keys, active = snap.keys, snap.active
+    hot_head = hybrid_log.head_addr(state.hot, cfg.hot_mem)
+    lower = jnp.broadcast_to(state.hot.begin, (B,))
+    res_h = probe_engine.probe(cfg, keys, state.hot, lower, hot_head, active,
+                               heads=snap.hot_heads, rc=state.rc,
+                               rc_match=False)
+    cold_active = active & ~res_h.found
+    cold_head = hybrid_log.head_addr(state.cold, cfg.cold_mem)
+    lower_c = jnp.broadcast_to(state.cold.begin, (B,))
+    res_c = host_tier.probe_cold(cfg, keys, state.cold, state.host, lower_c,
+                                 cold_head, cold_active, snap.cold_entries)
+    return res_c.missed

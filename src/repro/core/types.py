@@ -128,6 +128,20 @@ class F2Config:
     # read cache
     rc_capacity: int = 1 << 14             # 0 disables the read cache
     rc_mutable_frac: float = 0.5
+    # host tier (core.host_tier): cold-log chunks below LogState.floor are
+    # demoted to host memory; the device ring only holds [floor, tail)
+    host_tier: bool = False
+    host_chunk_records: int = 256          # records per demotable cold chunk
+    host_cache_chunks: int = 16            # device chunk-cache rows
+    host_resident_frac: float = 0.5        # demote target: resident/capacity
+    host_prefetch: int = 1                 # extra chunks warmed per miss
+    host_log_factor: float = 8.0           # cold-log GC budget as a multiple
+                                           # of cold_capacity: with the host
+                                           # tier, ring pressure is relieved
+                                           # by demotion, so cold-cold GC
+                                           # fires on total span (live +
+                                           # garbage, host included) vs this
+                                           # budget — not the device ring
     # execution
     value_width: int = 2                   # int32 words per value
     chain_max: int = 24                    # bounded hash-chain walk length
@@ -168,6 +182,19 @@ class F2Config:
         assert self.chunklog_mem <= self.chunklog_capacity
         assert self.engine in ("jnp", "fused", "fused_ref", "fused_pallas"), \
             f"unknown engine {self.engine!r}"
+        if self.host_tier:
+            c = self.host_chunk_records
+            assert c > 0 and (c & (c - 1)) == 0, \
+                f"host_chunk_records={c} not a power of 2"
+            assert c <= self.cold_capacity
+            assert self.host_cache_chunks >= 1
+            assert 0.0 < self.host_resident_frac < 1.0
+            assert self.host_prefetch >= 0
+            assert self.host_log_factor >= 1.0
+            # the demote target must leave real headroom below capacity,
+            # or every compaction step would re-demote
+            assert int(self.host_resident_frac * self.cold_capacity) + 2 * c \
+                <= self.cold_capacity, "host_resident_frac leaves no headroom"
 
 
 def records_to_blocks(n_records: jax.Array, record_bytes: int) -> jax.Array:

@@ -26,6 +26,10 @@ CRASH_POINTS = (
     "wal.mid_append",              # WAL record half-written (torn tail)
     "migrate.after_flip",          # bucket map flipped, drained replay pending
     "resync.mid_replay",           # replica reset + drained, replay half-done
+    "host.mid_demote",             # cold chunks copied to host, floor not yet
+    #                                committed on device (core.host_tier)
+    "host.mid_promote",            # host chunks staged for the device cache,
+    #                                install scatter pending (core.host_tier)
 )
 
 

@@ -542,3 +542,161 @@ def test_session_service_snapshots_and_recovers(tmp_path):
         else:
             assert st[i] == ST_NOT_FOUND, k
     rec.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# host-resident cold tier: crash mid-demotion / mid-promotion
+# ---------------------------------------------------------------------------
+
+def make_host_store(lanes=32):
+    """Sharded store with the host-resident cold tier on, and hot+cold
+    rings small enough that a uniform mixed workload spills within ~20
+    batches (skewed traffic updates the hot mutable region in place and
+    barely grows the log — the host tests use `skew=False` batches)."""
+    cfg = tiny_cfg(hot_capacity=1 << 8, hot_mem=1 << 5,
+                   cold_capacity=1 << 8, host_tier=True,
+                   host_chunk_records=16, host_cache_chunks=48,
+                   host_resident_frac=0.5, host_prefetch=1)
+    return ShardedKV(cfg, S, lanes=lanes, compact_batch=128,
+                     compact_frac=0.25, donate=False)
+
+
+def _spilled(kv):
+    return bool(np.asarray(jax.device_get(kv.state.cold.floor)).any())
+
+
+def check_host_kill_restore_replay(seed, crash_point, tmp, *,
+                                   snapshot_every=6, n_batches=40):
+    """Host-tier kill-restore-replay: drive until the cold log spills to
+    host, arm a host fault point, crash inside `apply`, recover, replay.
+
+    Unlike the event crash points, the host points fire *inside* a batch
+    whose SLAB record is already durable (write-ahead), so the crashed
+    batch replays during recovery and the twin runs it uninterrupted."""
+    d = str(tmp)
+    mk = make_host_store
+    # fsync="always": the host crash points fire *after* the batch's WAL
+    # append, inside the store's own maintenance — per-append fsync pins
+    # the crash model to "record durable, execution interrupted" (in
+    # "batch" mode the record would still sit in the writer's buffer and
+    # its durability would depend on buffer-boundary luck)
+    dkv = DurableKV(mk(), DurabilityConfig(
+        dir=d, snapshot_every_rounds=snapshot_every, fsync="always"))
+    twin = mk()
+    batches = gen_batches(seed, n_batches, skew=False)
+    i = 0
+    while i < n_batches - 8 and not _spilled(dkv.kv):
+        ks, ops, vs = batches[i]
+        st_d, rv_d = dkv.apply(ks, ops, vs)
+        st_t, rv_t = twin.apply(ks, ops, vs)
+        np.testing.assert_array_equal(np.asarray(st_d), np.asarray(st_t))
+        np.testing.assert_array_equal(np.asarray(rv_d), np.asarray(rv_t))
+        i += 1
+    assert _spilled(dkv.kv), "workload never spilled to host"
+
+    faults.arm(crash_point)
+    fired = False
+    try:
+        while i < n_batches:
+            ks, ops, vs = batches[i]
+            try:
+                dkv.apply(ks, ops, vs)
+            except faults.InjectedCrash:
+                fired = True
+                break
+            twin.apply(ks, ops, vs)
+            i += 1
+    finally:
+        faults.reset()
+    assert fired, f"{crash_point} never fired after spill"
+    # write-ahead: the crashed batch is durable and replays in recovery —
+    # the twin runs it to completion
+    twin.apply(*batches[i])
+    i += 1
+
+    rec = recover(d, mk)
+    rec.check_invariants()
+    for ks, ops, vs in batches[i:]:
+        st_r, rv_r = rec.apply(ks, ops, vs)
+        st_t, rv_t = twin.apply(ks, ops, vs)
+        np.testing.assert_array_equal(np.asarray(st_r), np.asarray(st_t))
+        np.testing.assert_array_equal(np.asarray(rv_r), np.asarray(rv_t))
+    probe = np.arange(1, N_KEYS + 1, dtype=np.int32)
+    st_r, rv_r = rec.read(probe)
+    st_t, rv_t = twin.read(probe)
+    np.testing.assert_array_equal(np.asarray(st_r), np.asarray(st_t))
+    np.testing.assert_array_equal(np.asarray(rv_r), np.asarray(rv_t))
+    rec.check_invariants()
+    assert _spilled(rec.kv)     # the recovered store still operates spilled
+    rec.close()
+
+
+def test_kill_mid_demotion(tmp_path):
+    # the crash lands between the host-side chunk copy and the floor
+    # commit: the interrupted demotion is invisible, recovery re-runs it
+    check_host_kill_restore_replay(121, "host.mid_demote", tmp_path)
+
+
+def test_kill_mid_promotion(tmp_path):
+    # the crash lands after victim selection, before the device install:
+    # the cache is a pure replica, recovery rebuilds it on demand
+    check_host_kill_restore_replay(131, "host.mid_promote", tmp_path)
+
+
+def test_kill_mid_demotion_wal_only(tmp_path):
+    # no snapshot ever lands: the host store is rebuilt purely by
+    # replaying the log through live re-demotions
+    check_host_kill_restore_replay(141, "host.mid_demote", tmp_path,
+                                   snapshot_every=1000)
+
+
+def test_journal_pins_demote_crash_recover_sequence(tmp_path):
+    """The lifecycle journal must record the host-tier story in order:
+    chunks demoted to host, a snapshot capturing them, the armed point
+    firing mid-demotion, then recovery completing from disk — and the
+    recovery replay must itself re-demote (the interrupted demotion
+    re-runs between `crashpoint.hit` and `recovery.completed`)."""
+    from repro import obs
+    obs.configure(enabled=True, reset=True)
+    try:
+        d = str(tmp_path)
+        mk = make_host_store
+        dkv = DurableKV(mk(), DurabilityConfig(
+            dir=d, snapshot_every_rounds=0, fsync="always"))
+        batches = gen_batches(151, 40, skew=False)
+        i = 0
+        while i < len(batches) and not _spilled(dkv.kv):
+            dkv.apply(*batches[i])
+            i += 1
+        assert _spilled(dkv.kv), "workload never spilled to host"
+        dkv.snapshot(blocking=True)
+        faults.arm("host.mid_demote")
+        fired = False
+        while i < len(batches):
+            try:
+                dkv.apply(*batches[i])
+                i += 1
+            except faults.InjectedCrash:
+                fired = True
+                break
+        faults.reset()
+        assert fired, "host.mid_demote never fired after spill"
+        rec = recover(d, mk)
+        rec.check_invariants()
+
+        kinds = obs.journal.kinds()
+        expected = ["host.demoted", "snapshot.taken", "crashpoint.armed",
+                    "crashpoint.hit", "recovery.completed"]
+        it = iter(kinds)
+        assert all(k in it for k in expected), (expected, kinds)
+        hit = obs.journal.events("crashpoint.hit")
+        assert hit[-1]["point"] == "host.mid_demote"
+        done = obs.journal.events("recovery.completed")
+        assert len(done) == 1
+        # the demotion the crash interrupted re-runs during replay
+        demos = [e["seq"] for e in obs.journal.events("host.demoted")]
+        assert any(hit[-1]["seq"] < s < done[0]["seq"] for s in demos), \
+            (hit[-1]["seq"], done[0]["seq"], demos)
+        rec.close()
+    finally:
+        obs.configure(enabled=False, reset=True)

@@ -1,0 +1,306 @@
+"""Host-resident cold tier: larger-than-memory operation proven by
+differential spill oracles, plus chunk-cache properties.
+
+The central oracle: a store whose cold ring is several times SMALLER
+than the live log it serves (the overflow lives in host-memory chunks,
+paged through a small device chunk cache) must be observationally
+IDENTICAL to an all-device twin — statuses and values bit-exact on every
+mixed batch and on a full-keyspace readback, with a dict reference as
+the third witness.  The twin compacts on its own schedule, so only the
+*served* results are compared, never internal state.
+
+The chunk-cache properties pin the mechanics underneath: victim order
+(empty rows, then coldest by access tick / touch count), pinned chunks
+surviving arbitrary promotion pressure within a batch, promotion
+idempotence, and byte-identity of a chunk across its demote -> promote
+round trip.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import KV, F2Config
+from repro.core.sharded import ShardedKV
+from repro.core.types import (OP_DELETE, OP_READ, OP_RMW, OP_UPSERT,
+                              ST_NOT_FOUND, ST_OK)
+
+C = 16          # host_chunk_records
+V = 2
+B = 64
+N_KEYS = 4096
+
+
+def host_cfg(**kw):
+    """Cold ring of 512 records under a ~4k-key uniform workload: the
+    live log outgrows the device ring ~5x by 400 steps."""
+    base = dict(hot_index_size=1 << 10, hot_capacity=1 << 12,
+                hot_mem=1 << 9, cold_capacity=1 << 9, cold_mem=1 << 7,
+                n_chunks=1 << 8, chunk_slots=16, chunklog_capacity=1 << 12,
+                chunklog_mem=1 << 8, rc_capacity=1 << 8,
+                host_tier=True, host_chunk_records=C, host_cache_chunks=48,
+                host_resident_frac=0.5, host_prefetch=1,
+                value_width=V, chain_max=24, engine="jnp")
+    base.update(kw)
+    return F2Config(**base)
+
+
+def twin_cfg(**kw):
+    """The all-device reference: identical logs except a cold ring big
+    enough that nothing ever demotes."""
+    base = dict(hot_index_size=1 << 10, hot_capacity=1 << 12,
+                hot_mem=1 << 9, cold_capacity=1 << 14, cold_mem=1 << 7,
+                n_chunks=1 << 8, chunk_slots=16, chunklog_capacity=1 << 12,
+                chunklog_mem=1 << 8, rc_capacity=1 << 8,
+                value_width=V, chain_max=24, engine="jnp")
+    base.update(kw)
+    return F2Config(**base)
+
+
+def drive_differential(kv, tw, *, seed, n_steps, n_keys=N_KEYS,
+                       p=(.5, .3, .15, .05), check_every=50):
+    """Drive identical mixed batches into the spilled store and the
+    all-device twin; statuses/values must match batch by batch.  A dict
+    reference shadows every write (lanes chain intra-batch, the FASTER
+    batch contract) and is returned for the final readback."""
+    rng = np.random.default_rng(seed)
+    ref = {}
+    for step in range(n_steps):
+        keys = rng.integers(1, n_keys + 1, size=B).astype(np.int64)
+        ops = rng.choice([OP_READ, OP_UPSERT, OP_RMW, OP_DELETE], size=B,
+                         p=list(p)).astype(np.int32)
+        vals = np.stack([keys * 3 + step, keys * 5 + 1],
+                        axis=1).astype(np.int32)
+        keys = keys.astype(np.int32)
+        st_a, rv_a = kv.apply(keys, ops, vals)
+        st_b, rv_b = tw.apply(keys, ops, vals)
+        np.testing.assert_array_equal(np.asarray(st_a), np.asarray(st_b),
+                                      err_msg=f"status diverged @ {step}")
+        np.testing.assert_array_equal(np.asarray(rv_a), np.asarray(rv_b),
+                                      err_msg=f"values diverged @ {step}")
+        for i in range(B):
+            k, op = int(keys[i]), int(ops[i])
+            if op == OP_UPSERT:
+                ref[k] = vals[i].copy()
+            elif op == OP_RMW:
+                ref[k] = ref[k] + vals[i] if k in ref else vals[i].copy()
+            elif op == OP_DELETE:
+                ref.pop(k, None)
+        if step % check_every == 0:
+            kv.check_invariants()
+    kv.check_invariants()
+    return ref
+
+
+def readback_all(kv, tw, ref, n_keys=N_KEYS, slice_=32):
+    """Full-keyspace readback: spilled store == twin == dict.  Small
+    slices: one read batch's below-floor walk paths must fit the device
+    chunk cache together (the documented host_cache_chunks contract), and
+    a full-keyspace sweep is the worst case."""
+    all_keys = np.arange(1, n_keys + 1, dtype=np.int32)
+    for off in range(0, n_keys, slice_):
+        ks = all_keys[off:off + slice_]
+        sa, va = kv.read(ks)
+        sb, vb = tw.read(ks)
+        sa, va, sb, vb = map(np.asarray, (sa, va, sb, vb))
+        np.testing.assert_array_equal(sa, sb, err_msg=f"readback @ {off}")
+        np.testing.assert_array_equal(va, vb, err_msg=f"readback @ {off}")
+        for j, k in enumerate(ks):
+            k = int(k)
+            if k in ref:
+                assert sa[j] == ST_OK, (k, sa[j])
+                np.testing.assert_array_equal(va[j], ref[k])
+            else:
+                assert sa[j] == ST_NOT_FOUND, (k, sa[j])
+
+
+def spill_factor(kv):
+    """How many device cold rings the live log spans (max over shards)."""
+    c = jax.device_get(kv.state.cold)
+    return float(np.max(np.asarray(c.tail) - np.asarray(c.begin))
+                 / kv.cfg.cold_capacity)
+
+
+# ---------------------------------------------------------------------------
+# the spilled store every test in this module shares (module-scoped: the
+# 400-step differential drive is the expensive part; the cache property
+# tests below only perturb cache state, never logical content)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def spilled():
+    kv = KV(host_cfg(), compact_batch=128, donate=False)
+    tw = KV(twin_cfg(), compact_batch=128, donate=False)
+    ref = drive_differential(kv, tw, seed=7, n_steps=400)
+    return kv, tw, ref
+
+
+# ---------------------------------------------------------------------------
+# differential spill oracles
+# ---------------------------------------------------------------------------
+
+def test_spill_oracle_bit_exact(spilled):
+    """>= 4x spill, demote/promote cycles exercised, and the spilled
+    store serves the exact same statuses/values as the all-device twin
+    and the dict reference."""
+    kv, tw, ref = spilled
+    assert spill_factor(kv) >= 4.0, spill_factor(kv)
+    st = kv._ht.stats()
+    assert st["chunks"] > 0
+    assert st["demotions_total"] > 0 and st["promotions_total"] > 0
+    readback_all(kv, tw, ref)
+    kv.check_invariants()
+
+
+def test_spill_oracle_sharded_masked_compactions():
+    """Sharded variant: per-shard pressure triggers fire on different
+    rounds, so demotions and cold-cold passes run MASKED (idle shards
+    byte-frozen) — still bit-exact against an all-device sharded twin."""
+    # halved hot ring: each shard sees half the traffic, and spill has to
+    # arrive within the test budget
+    kv = ShardedKV(host_cfg(hot_capacity=1 << 11, hot_mem=1 << 8), 2,
+                   compact_batch=128, donate=False)
+    tw = ShardedKV(twin_cfg(hot_capacity=1 << 11, hot_mem=1 << 8), 2,
+                   compact_batch=128, donate=False)
+    ref = drive_differential(kv, tw, seed=11, n_steps=300)
+    floors = np.asarray(jax.device_get(kv.state.cold.floor))
+    assert (floors > 0).all(), floors       # every shard actually spilled
+    assert spill_factor(kv) >= 2.0, spill_factor(kv)
+    readback_all(kv, tw, ref)
+    kv.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# chunk-cache properties
+# ---------------------------------------------------------------------------
+
+def test_victim_order_empty_then_coldest(spilled):
+    """Eviction picks empty rows first, then resident chunks coldest
+    first by (last-touch tick, touch count, row); protected chunks are
+    never victims; demand beyond the evictable set is a thrash error on
+    a full promote and a shrunk install on a partial one."""
+    ht = spilled[0]._ht
+    chunks = np.array([3, -1, 7, 9, 11], np.int32)
+    ticks = np.array([5, 0, 2, 2, 9], np.int32)
+    hits = np.array([1, 0, 4, 2, 0], np.int32)
+    pick = ht._pick_victims
+    # empty row 1 first, then row 3 (tick 2, hits 2) before row 2
+    # (tick 2, hits 4) before row 0 (tick 5) before row 4 (tick 9)
+    assert pick(0, chunks, ticks, hits, 3, 0, set(), False) == [1, 3, 2]
+    # protection removes rows 2 (chunk 7) and 3 (chunk 9) from the pool
+    assert pick(0, chunks, ticks, hits, 3, 0, {7, 9}, False) == [1, 0, 4]
+    # prefetch rows ride along only when demand is fully servable
+    assert pick(0, chunks, ticks, hits, 1, 2, set(), False) == [1, 3, 2]
+    with pytest.raises(RuntimeError, match="thrash"):
+        pick(0, chunks, ticks, hits, 5, 0, {3, 7, 9, 11}, False)
+    # partial: install what fits, the resumable walk re-demands the rest
+    assert pick(0, chunks, ticks, hits, 5, 0, {3, 7, 9, 11}, True) == [1]
+    # ... but zero installable rows cannot advance the walk: still thrash
+    with pytest.raises(RuntimeError, match="thrash"):
+        pick(0, np.array([3, 7], np.int32), ticks[:2], hits[:2], 1, 0,
+             {3, 7}, True)
+
+
+def test_pinned_chunk_survives_promotion_pressure(spilled):
+    """A chunk pinned for the in-flight batch is never evicted by later
+    promotions in the same batch, no matter the pressure; `end_batch`
+    releases it."""
+    kv, _, _ = spilled
+    ht = kv._ht
+    ht.end_batch()
+    demoted = sorted(ht.store[0])
+    r_rows = kv.cfg.host_cache_chunks
+    assert len(demoted) > r_rows        # enough chunks to cycle the cache
+    target = demoted[0]
+    kv.state = ht.promote(kv.state, [{target}])       # pin=True default
+    group = (r_rows - 1) // 2
+    for off in range(0, len(demoted[1:]), group):
+        need = set(demoted[1:][off:off + group])
+        kv.state = ht.promote(kv.state, [need], pin=False)
+        resident = {int(x) for x in np.asarray(kv.state.host.chunk)
+                    if int(x) >= 0}
+        assert target in resident, (off, target)
+        assert need <= resident, (off, need - resident)
+    ht.end_batch()
+
+
+def test_promotion_idempotent(spilled):
+    """Promoting an already-resident demand (and its prefetch wake) is a
+    byte-level no-op on the device cache."""
+    kv, _, _ = spilled
+    ht = kv._ht
+    ht.end_batch()
+    demoted = sorted(ht.store[0])
+    need = {demoted[1], demoted[3]}
+    kv.state = ht.promote(kv.state, [need])
+    before = jax.device_get(kv.state.host)
+    p0, f0 = ht.promotions, ht.prefetch_hits
+    kv.state = ht.promote(kv.state, [need])
+    after = jax.device_get(kv.state.host)
+    assert ht.promotions == p0
+    for a, b in zip(jax.tree_util.tree_leaves(before),
+                    jax.tree_util.tree_leaves(after)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ht.prefetch_hits >= f0
+    ht.end_batch()
+
+
+def test_demote_promote_byte_identical(spilled):
+    """A chunk read back through the device cache is byte-identical to
+    its host copy (which `extract_chunks` captured from the cold ring at
+    demotion): the demote -> promote round trip loses nothing."""
+    kv, _, _ = spilled
+    ht = kv._ht
+    ht.end_batch()
+    demoted = sorted(ht.store[0])
+    for cid in demoted[:4] + demoted[-4:]:
+        kv.state = ht.promote(kv.state, [{cid}])
+        rows = np.asarray(kv.state.host.chunk)
+        r = int(np.flatnonzero(rows == cid)[0])
+        hk, hv, hp, hm = ht.store[0][cid]
+        np.testing.assert_array_equal(
+            np.asarray(kv.state.host.key).reshape(-1, C)[r], hk)
+        np.testing.assert_array_equal(
+            np.asarray(kv.state.host.val).reshape(-1, C, V)[r], hv)
+        np.testing.assert_array_equal(
+            np.asarray(kv.state.host.prev).reshape(-1, C)[r], hp)
+        np.testing.assert_array_equal(
+            np.asarray(kv.state.host.meta).reshape(-1, C)[r], hm)
+    ht.end_batch()
+
+
+def test_promote_never_demoted_chunk_raises(spilled):
+    kv, _, _ = spilled
+    with pytest.raises(KeyError):
+        kv._ht.promote(kv.state, [{10 ** 6}])
+    kv._ht.end_batch()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property (the seeded oracles above are the fallback when
+# hypothesis is not installed, per repo convention)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=3, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_spill_differential_property(seed):
+        kv = KV(host_cfg(cold_capacity=1 << 8, host_cache_chunks=32),
+                compact_batch=64, donate=False)
+        tw = KV(twin_cfg(), compact_batch=64, donate=False)
+        ref = drive_differential(kv, tw, seed=seed, n_steps=100,
+                                 n_keys=1024, check_every=25)
+        assert spill_factor(kv) > 1.0   # the run genuinely spilled
+        readback_all(kv, tw, ref, n_keys=1024)
+else:
+    @pytest.mark.skip(
+        reason="hypothesis not installed (pip install '.[test]')")
+    def test_spill_differential_property():
+        pass
