@@ -1,0 +1,284 @@
+"""Request-level latency benchmark: per-phase p50/p99 through the full
+serving stack, plus the obs-enabled vs. obs-disabled throughput gate.
+
+Drives an identical YCSB-A stream through two identically-built serving
+stacks — `KVSessionService` over `DurableKV` over a host-tier
+`ShardedKV` — one with `repro.obs` armed, one with the kill-switch off.
+The store is first loaded until the live log spills the device cold ring
+>= 2x (so promotes and deferral rounds are real, not synthetic), then a
+ticketed session lap exercises queue/pack/apply/fsync/e2e and a
+full-keyspace wide read exercises deferral/promote.
+
+`--tiny` is the CI gate:
+
+* enabled/disabled throughput ratio >= 0.95,
+* the two sides' collected outputs are bit-exact (kill-switch contract),
+* all seven `f2_latency_seconds` phases report p99 >= p50 > 0,
+* host-tier spill factor >= 2,
+* the demo threshold rule provably fires (journaled `alert.fired`).
+
+    PYTHONPATH=src python benchmarks/bench_latency.py [--tiny] \
+        [--out BENCH_latency.json] [--alerts-out alerts.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro import obs
+from repro.core import F2Config
+from repro.core.durability import DurabilityConfig
+from repro.core.types import OP_DELETE, OP_READ, OP_RMW, OP_UPSERT
+from repro.obs import export, latency, rules
+from repro.serve.serve_step import ServiceConfig, make_session_service
+
+try:                                    # python benchmarks/bench_latency.py
+    from bench_mixed import MIXES, mixed_batches
+except ImportError:                     # python -m benchmarks.bench_latency
+    from benchmarks.bench_mixed import MIXES, mixed_batches
+
+PHASES = ("queue", "pack", "apply", "deferral", "promote", "fsync", "e2e")
+GATE_RATIO = 0.95          # enabled must keep >= 95% of disabled throughput
+SPILL_FLOOR = 2.0          # live log must span >= 2 device cold rings
+
+
+def _cfg(tiny: bool) -> F2Config:
+    """Host-tier store geometry: a cold ring the live log outgrows, so
+    reads genuinely promote from host memory (the spilled-test regime)."""
+    if tiny:
+        return F2Config(hot_index_size=1 << 10, hot_capacity=1 << 12,
+                        hot_mem=1 << 9, cold_capacity=1 << 9,
+                        cold_mem=1 << 7, n_chunks=1 << 8, chunk_slots=16,
+                        chunklog_capacity=1 << 12, chunklog_mem=1 << 8,
+                        rc_capacity=1 << 8, host_tier=True,
+                        host_chunk_records=16, host_cache_chunks=48,
+                        host_resident_frac=0.5, host_prefetch=1,
+                        value_width=2, chain_max=24, engine="jnp")
+    return F2Config(hot_index_size=1 << 12, hot_capacity=1 << 14,
+                    hot_mem=1 << 11, cold_capacity=1 << 11,
+                    cold_mem=1 << 9, n_chunks=1 << 9, chunk_slots=16,
+                    chunklog_capacity=1 << 14, chunklog_mem=1 << 10,
+                    rc_capacity=1 << 10, host_tier=True,
+                    host_chunk_records=16, host_cache_chunks=96,
+                    host_resident_frac=0.5, host_prefetch=1,
+                    value_width=2, chain_max=24, engine="jnp")
+
+
+def _wal_dir() -> str:
+    base = "/dev/shm" if os.path.isdir("/dev/shm") else None
+    return tempfile.mkdtemp(prefix="bench_latency_wal_", dir=base)
+
+
+def _spill_factor(store) -> float:
+    c = jax.device_get(store.state.cold)
+    return float(np.max(np.asarray(c.tail) - np.asarray(c.begin))
+                 / store.cfg.cold_capacity)
+
+
+def _load(store, n_keys: int, n_steps: int, B: int) -> None:
+    """Uniform mixed-op drive until the log spills the cold ring (the
+    write-heavy-but-not-pure mix keeps each batch's chain pins inside
+    the chunk cache); every batch fsyncs, feeding the fsync phase."""
+    rng = np.random.default_rng(7)
+    for step in range(n_steps):
+        keys = rng.integers(1, n_keys + 1, size=B).astype(np.int32)
+        ops = rng.choice([OP_READ, OP_UPSERT, OP_RMW, OP_DELETE], size=B,
+                         p=[.5, .3, .15, .05]).astype(np.int32)
+        vals = np.stack([keys * 3 + step, keys * 5 + 1],
+                        axis=1).astype(np.int32)
+        store.apply(keys, ops, vals)
+
+
+LAPS_PER_WINDOW = 3         # a single ~ms lap is too noisy a timing unit
+
+
+def _build_side(enabled: bool, tiny: bool, n_keys: int, B: int,
+                load_steps: int, batches) -> dict:
+    """Build, load and warm one serving stack under the given obs mode.
+    The obs kill-switch is process-global, so the caller flips it per
+    timing window afterwards; each side keeps its own store + WAL dir."""
+    obs.configure(enabled=enabled)
+    svc = make_session_service(
+        _cfg(tiny),
+        ServiceConfig(n_shards=1, pack_lanes=32, max_sessions=4,
+                      session_depth=128,
+                      durability=DurabilityConfig(dir=_wal_dir()),
+                      store_kwargs=dict(compact_batch=128, donate=False)))
+    store = svc.kv                          # DurableKV over ShardedKV
+    _load(store, n_keys, load_steps, B)
+    spill = _spill_factor(store)
+
+    keys, ops, vals = batches
+    sessions = [svc.open_session() for _ in range(2)]
+    # untimed warmup lap: compiles the pack/commit/ticket-gather kernels
+    # (and creates the metric families) so the timed laps are steady-state
+    for b in range(keys.shape[0]):
+        sessions[b % len(sessions)].enqueue(keys[b], ops[b], vals[b])
+        svc.step()
+    svc.run_until_idle()
+    for s in sessions:
+        s.drain()
+    return dict(enabled=enabled, svc=svc, store=store, spill=spill,
+                sessions=sessions, outputs=[], best=float("inf"))
+
+
+def _lap(side: dict, batches) -> None:
+    """One full session lap on `side`, appending drained outputs."""
+    keys, ops, vals = batches
+    svc, sessions = side["svc"], side["sessions"]
+    for b in range(keys.shape[0]):
+        s = sessions[b % len(sessions)]
+        s.enqueue(keys[b], ops[b], vals[b])
+        svc.step()
+    svc.run_until_idle()
+    for s in sessions:
+        _tk, st, v = s.drain()
+        side["outputs"].append((np.asarray(st).tolist(),
+                                np.asarray(v).tolist()))
+
+
+def run_ab(tiny: bool, n_keys: int, B: int, load_steps: int, batches,
+           repeats: int) -> tuple[dict, dict]:
+    """Build both stacks, then alternate timed windows between them,
+    flipping only the obs kill-switch per window.  Interleaving makes
+    the two sides sample the same machine conditions — sequential sides
+    minutes apart measure load drift, not instrumentation overhead."""
+    obs.configure(enabled=True, reset=True)
+    # demo rules: the first provably fires once tickets complete, the
+    # second stays quiet (sanity that firing is not vacuous)
+    rules.add_rule("e2e-traffic",
+                   "count(f2_latency_seconds{phase=e2e}) >= 1")
+    rules.add_rule("e2e-slow",
+                   "p99(f2_latency_seconds{phase=e2e}) > 10.0")
+    on = _build_side(True, tiny, n_keys, B, load_steps, batches)
+    # no reset: the enabled side's registry/clock state must survive
+    off = _build_side(False, tiny, n_keys, B, load_steps, batches)
+
+    for _ in range(repeats):
+        for side in (off, on):          # both sides sampled every round
+            obs.configure(enabled=side["enabled"])
+            t0 = time.perf_counter()
+            for _ in range(LAPS_PER_WINDOW):
+                _lap(side, batches)
+            side["best"] = min(side["best"], time.perf_counter() - t0)
+
+    # the wide read: every key in one batch — below-floor lanes defer and
+    # promote through the host tier (splitting the batch if the walk
+    # paths outgrow the chunk cache)
+    all_keys = np.arange(1, n_keys + 1, dtype=np.int32)
+    for side in (off, on):
+        obs.configure(enabled=side["enabled"])
+        st, v = side["store"].read(all_keys)
+        side["outputs"].append((np.asarray(st).tolist(),
+                                np.asarray(v).tolist()))
+
+    obs.configure(enabled=True)
+    on["stats"] = on["svc"].stats()         # fold point: drains obs queues
+    rules.evaluate()                        # final explicit alert pass
+    n_ops = batches[0].shape[0] * B * LAPS_PER_WINDOW
+    for side in (off, on):
+        side["n_ops"] = n_ops
+        side["ops_per_s"] = n_ops / side["best"]
+    on["phases"] = latency.summary()
+    on["alerts"] = rules.ENGINE.snapshot()
+    on["alert_events"] = obs.journal.events("alert.")
+    return off, on
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI gate mode: minimal sizes, asserts the "
+                         f"{GATE_RATIO:.0%} throughput floor, bit-exact "
+                         "outputs, all-phase coverage, spill >= "
+                         f"{SPILL_FLOOR:g}x and a firing alert")
+    ap.add_argument("--out", default=None, help="write BENCH JSON here")
+    ap.add_argument("--alerts-out", default=None,
+                    help="write the alert engine snapshot + journaled "
+                         "alert events here")
+    ap.add_argument("--repeats", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    if args.tiny:
+        n_keys, B, n_batches, load_steps, repeats = 4096, 64, 6, 320, 4
+    else:
+        n_keys, B, n_batches, load_steps, repeats = 1 << 14, 128, 16, 640, 3
+    if args.repeats:
+        repeats = args.repeats
+
+    rng = np.random.default_rng(23)
+    batches = mixed_batches(rng, MIXES["A"], n_keys, 0.99, B, n_batches,
+                            _cfg(args.tiny).value_width)
+
+    off, on = run_ab(args.tiny, n_keys, B, load_steps, batches, repeats)
+    ratio = on["ops_per_s"] / off["ops_per_s"]
+    outputs_match = on["outputs"] == off["outputs"]
+    fired = [r["name"] for r in on["alerts"]["rules"] if r["fired_total"]]
+
+    print(f"disabled: {off['ops_per_s'] / 1e3:9.2f} kops/s  "
+          f"(spill {off['spill']:.2f}x)")
+    print(f"enabled:  {on['ops_per_s'] / 1e3:9.2f} kops/s  "
+          f"(spill {on['spill']:.2f}x)")
+    print(f"enabled/disabled throughput ratio: {ratio:.3f}")
+    print(f"outputs bit-exact across sides: {outputs_match}")
+    print(f"alerts fired: {fired}  "
+          f"(journaled: {len(on['alert_events'])} events)")
+    print(f"{'phase':>9}  {'count':>7}  {'mean':>10}  {'p50':>10}  "
+          f"{'p99':>10}")
+    for ph in PHASES:
+        s = on["phases"].get(ph)
+        if s:
+            print(f"{ph:>9}  {s['count']:>7}  {s['mean']:>10.3e}  "
+                  f"{s['p50']:>10.3e}  {s['p99']:>10.3e}")
+        else:
+            print(f"{ph:>9}  {'-':>7}")
+
+    results = dict(
+        backend=jax.default_backend(), n_keys=n_keys, batch=B,
+        n_batches=n_batches, tiny=bool(args.tiny),
+        disabled=off["ops_per_s"], enabled=on["ops_per_s"], ratio=ratio,
+        spill=on["spill"], outputs_match=outputs_match,
+        alerts_fired=fired, phases=on["phases"])
+    if args.out:
+        # written while the enabled side's registry is still live, so the
+        # envelope's metrics_snapshot carries the full metric catalog
+        export.write_bench_json(args.out, bench="latency",
+                                config=vars(args), results=results)
+        print(f"wrote {args.out}")
+    if args.alerts_out:
+        with open(args.alerts_out, "w") as f:
+            json.dump({"engine": on["alerts"],
+                       "journal": on["alert_events"]}, f, indent=2,
+                      default=str)
+        print(f"wrote {args.alerts_out}")
+    obs.configure(enabled=False)
+
+    assert outputs_match, \
+        "collected outputs differ between obs enabled and disabled"
+    if args.tiny:
+        assert on["spill"] >= SPILL_FLOOR, \
+            f"host tier not spilled: {on['spill']:.2f}x < {SPILL_FLOOR}x"
+        for ph in PHASES:
+            s = on["phases"].get(ph)
+            assert s and s["count"] > 0, f"phase {ph!r} recorded no samples"
+            assert s["p99"] >= s["p50"] > 0, (ph, s)
+        assert "e2e-traffic" in fired and on["alert_events"], \
+            "threshold alert did not fire through the fold points"
+        assert ratio >= GATE_RATIO, (
+            f"latency-instrumentation overhead gate failed: "
+            f"enabled/disabled = {ratio:.3f} < {GATE_RATIO}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -144,9 +144,20 @@ class KV:
         if self._ht is None:
             self.state, status, vals = self._read(self.state, keys, active)
             return status, vals
-        # miss-with-deferral: lanes that need an absent host chunk park with
-        # ST_NONE; promote the chunks and re-run only those lanes
+        return self._read_host_lanes(keys, active)
+
+    def _read_host_lanes(self, keys, active):
+        """Host-tier read loop over one lane subset.  Miss-with-deferral:
+        lanes that need an absent host chunk park with ST_NONE; promote
+        the chunks and re-run only those lanes.  When the subset's
+        combined pinned walk paths outgrow the chunk cache
+        (`CacheThrash`), the pins are dropped and the unserved lanes
+        retry as cache-sized slices; only a single-lane subset whose own
+        path exceeds the cache escalates to the hard error (one unserved
+        lane may be blocked by its batchmates' pins, so it retries alone
+        with the whole cache before the error is final)."""
         b = keys.shape[0]
+        n_active = int(np.asarray(active).sum())
         status = jnp.zeros((b,), jnp.int32)
         vals = jnp.zeros((b, self.cfg.value_width), jnp.int32)
         remaining = active
@@ -164,7 +175,26 @@ class KV:
             # partial: promote what fits now and pin it; still-parked lanes
             # just go around again (pins guarantee forward progress because
             # the read walk restarts from the chain head each round)
-            self.state = self._ht.promote(self.state, needs, partial=True)
+            try:
+                self.state = self._ht.promote(self.state, needs,
+                                              partial=True)
+            except host_tier.CacheThrash:
+                unserved = np.flatnonzero(np.asarray(remaining))
+                if n_active <= 1:
+                    raise
+                self._ht.end_batch()
+                self._ht.note_contract_split()
+                parts = (np.array_split(unserved, 2)
+                         if len(unserved) > 1 else [unserved])
+                for half in parts:
+                    hmask = np.zeros(b, np.bool_)
+                    hmask[half] = True
+                    st_h, v_h = self._read_host_lanes(keys,
+                                                      jnp.asarray(hmask))
+                    hj = jnp.asarray(hmask)
+                    status = jnp.where(hj, st_h, status)
+                    vals = jnp.where(hj[:, None], v_h, vals)
+                return status, vals
         else:
             raise RuntimeError("host tier: read deferral did not converge")
         self._ht.end_batch()

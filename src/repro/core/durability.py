@@ -350,7 +350,12 @@ class DurableKV:
         """Group-commit barrier ("batch" mode): fsync the rounds this
         batch buffered before its statuses reach the caller."""
         if self.dcfg.fsync == "batch":
-            self._wal.sync()
+            if obs.enabled():   # fsync-to-ack: the durability ack stall
+                t0 = time.perf_counter()
+                self._wal.sync()
+                obs.observe_phase("fsync", time.perf_counter() - t0)
+            else:
+                self._wal.sync()
 
     def apply(self, keys, ops, vals=None):
         out = self.kv.apply(keys, ops, vals)

@@ -37,6 +37,7 @@ neighbor chunks and the hottest absent chunks by per-chunk miss EWMA.
 """
 from __future__ import annotations
 
+import time
 from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Set, Tuple
 
 import jax
@@ -327,6 +328,14 @@ _Chunk = Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
 _EWMA_DECAY = 0.8
 
 
+class CacheThrash(RuntimeError):
+    """The chunk cache cannot hold a promotion demand: every row is
+    pinned or protected.  Facade read loops catch this and split the
+    batch into cache-sized slices (`note_contract_split`); it escapes as
+    a hard error only when a single lane's own walk path exceeds the
+    cache — the one true capacity-contract breach."""
+
+
 class HostTier:
     """Host-side chunk store + placement policy for one facade.
 
@@ -362,6 +371,7 @@ class HostTier:
         self.promotions = 0
         self.demotions = 0
         self.prefetch_hits = 0
+        self.contract_splits = 0
         # facade retry budget: every round either finishes or pins at least
         # one new chunk, and pins are capped by the cache rows
         self.max_rounds = cfg.host_cache_chunks + cfg.chain_max + 8
@@ -392,6 +402,17 @@ class HostTier:
     def any_missing(self, needs: Sequence[Set[int]]) -> bool:
         return any(len(s) for s in needs)
 
+    def note_contract_split(self) -> None:
+        """A facade split one batch into cache-sized slices after a
+        `CacheThrash` — graceful degradation, counted so operators see
+        an undersized cache before it becomes a hard error."""
+        self.contract_splits += 1
+        obs.count("f2_cache_contract_splits_total",
+                  help="batches split into cache-sized slices after a "
+                       "chunk-cache thrash", facade=self._obs_facade)
+        obs.journal.emit("host.contract_split", facade=self._obs_facade,
+                         splits=self.contract_splits)
+
     def pin_chunks(self, needs: Sequence[Set[int]]) -> None:
         """Pin chunk ids (per shard) until ``end_batch`` without promoting.
         `ensure` only pins what it installs — a caller whose working set may
@@ -417,6 +438,7 @@ class HostTier:
         that was never demoted (a walk below floor found a hole — a real
         bug, not an operational condition) and RuntimeError on cache
         thrash."""
+        t0 = time.perf_counter() if obs.enabled() else 0.0
         cfg = self.cfg
         c = cfg.host_chunk_records
         r_rows = cfg.host_cache_chunks
@@ -487,6 +509,8 @@ class HostTier:
                       facade=self._obs_facade)
             obs.journal.emit("host.promoted", facade=self._obs_facade,
                              chunks=total)
+        if obs.enabled():       # promotion stall = the facade's wait here
+            obs.observe_phase("promote", time.perf_counter() - t0)
         return state
 
     def _prefetch_extras(self, s: int, demand: List[int],
@@ -530,7 +554,7 @@ class HostTier:
         order = empty + evictable
         short = len(order) < n_demand
         if (short and not partial) or (partial and n_demand and not order):
-            raise RuntimeError(
+            raise CacheThrash(
                 f"chunk cache thrash: shard {s} needs {n_demand} rows but "
                 f"only {len(order)} are evictable "
                 f"(host_cache_chunks={self.cfg.host_cache_chunks}, "
@@ -705,4 +729,5 @@ class HostTier:
             "promotions_total": self.promotions,
             "demotions_total": self.demotions,
             "prefetch_hits_total": self.prefetch_hits,
+            "contract_splits_total": self.contract_splits,
         }

@@ -62,6 +62,7 @@ involved in a migration stay byte-identical (`core.rebalance`).
 from __future__ import annotations
 
 import functools
+import time
 from typing import Optional
 
 import jax
@@ -461,6 +462,7 @@ class ShardedKV:
             obs.gauge_set("f2_routed_lanes", self._routed_lanes.tolist(),
                           help="cumulative routed lanes per shard",
                           facade=self._obs_facade)
+            obs.rules.maybe_evaluate()  # alert pass at the fold point
 
     @property
     def traffic_ewma(self) -> np.ndarray:
@@ -544,6 +546,7 @@ class ShardedKV:
         cur_ops = ops
         self._wal_defer = True
         n_rounds = 0
+        t_defer = None          # set when round 1 leaves lanes deferred
         try:
             for _ in range(B + 1):      # each round places >= 1 lane
                 st_r, rv_r, placed, deferred = self.apply_round(keys,
@@ -557,10 +560,14 @@ class ShardedKV:
                 deferred_np = np.asarray(deferred)
                 if not deferred_np.any():
                     break
+                if t_defer is None and obs.enabled():
+                    t_defer = time.perf_counter()
                 cur_ops = jnp.where(jnp.asarray(deferred_np), ops,
                                     jnp.int32(OP_NOOP))
         finally:
             self._wal_defer = False
+        if t_defer is not None:
+            obs.observe_phase("deferral", time.perf_counter() - t_defer)
         obs.observe("f2_deferral_rounds", n_rounds,
                     buckets=obs.COUNT_BUCKETS,
                     help="routed rounds needed per client batch",
@@ -600,6 +607,7 @@ class ShardedKV:
         status = np.zeros(B, np.int32)
         rvals = np.zeros((B, self.cfg.value_width), np.int32)
         n_rounds = 0
+        t_defer = None
         for _ in range(B + 1):
             with obs.span("sharded.read", cat="serve", B=B):
                 (self.state, st_r, rv_r, placed, deferred,
@@ -612,8 +620,12 @@ class ShardedKV:
             deferred_np = np.asarray(deferred)
             if not deferred_np.any():
                 break
+            if t_defer is None and obs.enabled():
+                t_defer = time.perf_counter()
             cur_ops = jnp.where(jnp.asarray(deferred_np),
                                 jnp.int32(OP_READ), jnp.int32(OP_NOOP))
+        if t_defer is not None:
+            obs.observe_phase("deferral", time.perf_counter() - t_defer)
         obs.observe("f2_deferral_rounds", n_rounds,
                     buckets=obs.COUNT_BUCKETS,
                     help="routed rounds needed per client batch",
@@ -625,11 +637,16 @@ class ShardedKV:
         miss-with-deferral share one retry loop.  A placed lane whose cold
         walk parked on an absent chunk comes back unserved (`lane_miss` >=
         0); the parked chunks are promoted (partial, pinned) and only the
-        unserved lanes re-run."""
+        unserved lanes re-run.  A batch whose combined pinned paths exceed
+        `host_cache_chunks` splits into two retried slices instead of
+        failing (`f2_cache_contract_splits_total`); the thrash error is
+        reserved for a single lane whose own path exceeds the cache."""
         B = keys.shape[0]
+        n_active = int((np.asarray(cur_ops) == OP_READ).sum())
         status = np.zeros(B, np.int32)
         rvals = np.zeros((B, self.cfg.value_width), np.int32)
         n_rounds = 0
+        t_defer = None
         for _ in range(B + self._ht.max_rounds + 8):
             with obs.span("sharded.read", cat="serve", B=B):
                 (self.state, st_r, rv_r, smissed, lane_miss, placed,
@@ -645,16 +662,55 @@ class ShardedKV:
             redo = np.asarray(deferred) | hmiss
             if not redo.any():
                 break
+            if t_defer is None and obs.enabled():
+                t_defer = time.perf_counter()
             needs = self._ht.collect(smissed)
             if self._ht.any_missing(needs):
-                self.state = self._ht.promote(self.state, needs,
-                                              partial=True)
+                try:
+                    self.state = self._ht.promote(self.state, needs,
+                                                  partial=True)
+                except host_tier.CacheThrash:
+                    # graceful degradation: the batch's combined pinned
+                    # walk paths outgrew the chunk cache.  Drop this
+                    # batch's pins and serve the unserved lanes in
+                    # cache-sized slices — only a SINGLE-lane batch whose
+                    # own path exceeds the cache is a real contract breach
+                    # (even one unserved lane may be blocked by pins that
+                    # belong to its batchmates, so it retries alone with
+                    # the whole cache before the error is final).
+                    unserved = np.flatnonzero(redo)
+                    if n_active <= 1:
+                        raise
+                    self._ht.end_batch()
+                    self._ht.note_contract_split()
+                    parts = (np.array_split(unserved, 2)
+                             if len(unserved) > 1 else [unserved])
+                    for half in parts:
+                        hmask = np.zeros(B, np.bool_)
+                        hmask[half] = True
+                        h_ops = jnp.where(jnp.asarray(hmask),
+                                          jnp.int32(OP_READ),
+                                          jnp.int32(OP_NOOP))
+                        st_h, rv_h = self._read_host_loop(keys, h_ops, bmap)
+                        status = np.where(hmask, np.asarray(st_h), status)
+                        rvals = np.where(hmask[:, None], np.asarray(rv_h),
+                                         rvals)
+                    if t_defer is not None:
+                        obs.observe_phase("deferral",
+                                          time.perf_counter() - t_defer)
+                    obs.observe("f2_deferral_rounds", n_rounds,
+                                buckets=obs.COUNT_BUCKETS,
+                                help="routed rounds needed per client batch",
+                                facade=self._obs_facade, path="read")
+                    return jnp.asarray(status), jnp.asarray(rvals)
             cur_ops = jnp.where(jnp.asarray(redo), jnp.int32(OP_READ),
                                 jnp.int32(OP_NOOP))
         else:
             raise RuntimeError(
                 "host tier: sharded read deferral did not converge")
         self._ht.end_batch()
+        if t_defer is not None:
+            obs.observe_phase("deferral", time.perf_counter() - t_defer)
         obs.observe("f2_deferral_rounds", n_rounds, buckets=obs.COUNT_BUCKETS,
                     help="routed rounds needed per client batch",
                     facade=self._obs_facade, path="read")

@@ -19,7 +19,8 @@ the stores' existing lazy folding points (`_fold_traffic`, `_fold_read`,
 `_fold_fill`, the bounds reads), never inside jitted code."""
 from __future__ import annotations
 
-from . import _flags, export, journal, metrics, trace
+from . import _flags, export, journal, latency, metrics, rules, trace
+from .latency import observe_phase, observe_phase_many
 from .metrics import (COUNT_BUCKETS, LATENCY_BUCKETS, MetricError,
                       fold_stats, get_registry)
 from .trace import NOOP_SPAN, instant, span, traced
@@ -27,8 +28,9 @@ from .trace import NOOP_SPAN, instant, span, traced
 __all__ = [
     "COUNT_BUCKETS", "LATENCY_BUCKETS", "MetricError", "NOOP_SPAN",
     "configure", "count", "enabled", "export", "fold_stats", "gauge_set",
-    "get_registry", "instant", "journal", "metrics", "observe",
-    "reset_all", "span", "trace", "traced",
+    "get_registry", "instant", "journal", "latency", "metrics", "observe",
+    "observe_phase", "observe_phase_many", "reset_all", "rules", "span",
+    "trace", "traced",
 ]
 
 
@@ -48,6 +50,8 @@ def reset_all() -> None:
     metrics.REGISTRY.clear()
     trace.TRACER.clear()
     journal.JOURNAL.clear()
+    latency.reset()
+    rules.reset()
 
 
 # -- one-line guarded instrumentation helpers --------------------------------

@@ -21,6 +21,7 @@ from typing import Optional
 
 from . import journal as _journal
 from . import metrics as _metrics
+from . import rules as _rules
 from . import trace as _trace
 
 SCHEMA_VERSION = 1
@@ -40,6 +41,7 @@ def snapshot() -> dict:
         "journal": _journal.JOURNAL.snapshot(),
         "trace": {"events": len(_trace.TRACER),
                   "dropped": _trace.TRACER.dropped},
+        "alerts": _rules.ENGINE.snapshot(),
     }
 
 

@@ -23,6 +23,10 @@ Event kinds emitted by the instrumented subsystems:
     recovery.completed               {records, snapshot_epoch}
     crashpoint.armed                 {point, at}
     crashpoint.hit                   {point}
+    host.promoted / host.demoted     {facade, chunks}
+    host.contract_split              {facade, splits}
+    alert.fired                      {rule, value, threshold, expr}
+    alert.resolved                   {rule, value, threshold}
 
 Each event carries a monotone `seq` and a wall-clock `ts`.  The buffer
 is a fixed-capacity deque: old events evict, `dropped` counts them, and

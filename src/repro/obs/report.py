@@ -1,11 +1,19 @@
-"""One-shot text summarizer for observability snapshots:
+"""One-shot text summarizer and regression differ for observability
+snapshots:
 
     python -m repro.obs.report <snapshot.json>
+    python -m repro.obs.report --diff A.json B.json
 
-Accepts any of the three JSON shapes this package writes — a raw
-`metrics_snapshot()`, a full `export.snapshot()` (metrics + journal),
-or a `BENCH_*.json` envelope (whose `metrics_snapshot` field it
-summarizes, with the bench name and git sha in the header)."""
+Summarize accepts any of the three JSON shapes this package writes — a
+raw `metrics_snapshot()`, a full `export.snapshot()` (metrics +
+journal), or a `BENCH_*.json` envelope (whose `metrics_snapshot` field
+it summarizes, with the bench name and git sha in the header).
+
+`--diff` compares two BENCH envelopes (A = baseline, B = candidate):
+every numeric leaf under `results` prints as `a -> b (+x.x%)` by dotted
+path, leaves present on only one side are called out, and differing
+`config` keys are listed as drift — so CI bench artifacts from two
+commits regression-diff with no extra tooling."""
 from __future__ import annotations
 
 import argparse
@@ -84,12 +92,81 @@ def summarize(doc: dict) -> str:
     return "\n".join(lines)
 
 
+def _leaves(node, prefix: str = "") -> dict:
+    """Flatten nested dicts/lists to {dotted.path: leaf}; list entries
+    index as `path[i]`."""
+    out: dict = {}
+    if isinstance(node, dict):
+        for k in sorted(node, key=str):
+            out.update(_leaves(node[k], f"{prefix}.{k}" if prefix else str(k)))
+    elif isinstance(node, (list, tuple)):
+        for i, item in enumerate(node):
+            out.update(_leaves(item, f"{prefix}[{i}]"))
+    else:
+        out[prefix] = node
+    return out
+
+
+def _is_num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def diff(a: dict, b: dict) -> str:
+    """Regression-diff two bench envelopes: numeric `results` leaves
+    with deltas and % change, one-sided leaves, and config drift."""
+    lines = [f"A: bench={a.get('bench')}  git_sha={a.get('git_sha')}",
+             f"B: bench={b.get('bench')}  git_sha={b.get('git_sha')}"]
+    ra, rb = _leaves(a.get("results") or {}), _leaves(b.get("results") or {})
+    num, other = [], []
+    for k in sorted(set(ra) | set(rb)):
+        if k not in ra or k not in rb:
+            side = "A" if k in ra else "B"
+            other.append(f"  {k}: only in {side} "
+                         f"({ra.get(k, rb.get(k))!r})")
+            continue
+        va, vb = ra[k], rb[k]
+        if _is_num(va) and _is_num(vb):
+            if va == vb:
+                continue
+            pct = (f" ({(vb - va) / abs(va) * 100.0:+.1f}%)" if va
+                   else "")
+            num.append(f"  {k}: {va:g} -> {vb:g}{pct}")
+        elif va != vb:
+            other.append(f"  {k}: {va!r} -> {vb!r}")
+    lines.append("results:" if (num or other) else
+                 "results: identical")
+    lines += num + other
+    ca, cb = _leaves(a.get("config") or {}), _leaves(b.get("config") or {})
+    drift = [k for k in sorted(set(ca) | set(cb))
+             if ca.get(k, "<absent>") != cb.get(k, "<absent>")]
+    if drift:
+        lines.append("config drift:")
+        lines += [f"  {k}: {ca.get(k, '<absent>')!r} -> "
+                  f"{cb.get(k, '<absent>')!r}" for k in drift]
+    else:
+        lines.append("config drift: none")
+    return "\n".join(lines)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.obs.report",
-        description="Summarize a repro.obs snapshot / bench envelope.")
-    ap.add_argument("snapshot", help="path to the JSON file")
+        description="Summarize a repro.obs snapshot / bench envelope, "
+                    "or regression-diff two envelopes.")
+    ap.add_argument("snapshot", nargs="?",
+                    help="path to the JSON file (summarize mode)")
+    ap.add_argument("--diff", nargs=2, metavar=("A.json", "B.json"),
+                    help="diff two bench envelopes (A=baseline)")
     args = ap.parse_args(argv)
+    if args.diff:
+        docs = []
+        for path in args.diff:
+            with open(path) as f:
+                docs.append(json.load(f))
+        print(diff(*docs))
+        return 0
+    if args.snapshot is None:
+        ap.error("need a snapshot path or --diff A.json B.json")
     with open(args.snapshot) as f:
         doc = json.load(f)
     print(summarize(doc))

@@ -70,6 +70,7 @@ class ServiceConfig:
     durability: Any = None          # set: wrap the store in DurableKV
     # -- observability (repro.obs): arm metrics/trace/journal process-wide --
     obs_enabled: bool = False
+    obs_port: Optional[int] = None  # set: serve /metrics etc. on this port
     # -- pass-through store knobs (mode/trigger/compact_batch/...) --
     store_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
@@ -129,6 +130,9 @@ def make_kv_service(kv_cfg, service: Optional[ServiceConfig] = None, **kw):
     if sc.obs_enabled:
         from repro import obs
         obs.configure(enabled=True)
+    if sc.obs_port is not None:
+        from repro.obs import serve as obs_serve
+        obs_serve.start(port=sc.obs_port)   # daemon thread; port 0 = ephemeral
     if sc.n_replicas > 1:
         from ..core.replication import ReplicatedKV
         kv = ReplicatedKV(kv_cfg, sc.n_shards, n_replicas=sc.n_replicas,

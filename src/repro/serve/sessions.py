@@ -53,6 +53,7 @@ pool is packed every round, so no op — and no session — can starve.
 from __future__ import annotations
 
 import functools
+import time
 from typing import NamedTuple, Optional, Sequence
 
 import jax
@@ -250,6 +251,10 @@ class KVSessionService:
         self.trace_schedule = False             # test hook: record rounds
         self.schedule: list = []    # [(sess, valid, bkeys, bops, bvals,
         #                              status, rvals, ticket)] per round
+        # ticket lifecycle stamps (enqueue -> packed -> applied ->
+        # collected); round gathers queue device-side and fold with the
+        # fill queue, so the armed path adds no hot-path sync either
+        self._clock = obs.latency.TicketClock(fetch=jax.device_get)
 
         S, W = kv.S, self.W
 
@@ -262,6 +267,14 @@ class KVSessionService:
         self._enqueue_j = jax.jit(_enqueue_kernel)
         self._commit_j = jax.jit(_commit_kernel)
         self._free_j = jax.jit(_free_kernel)
+
+        def round_tickets(pool, sess, slot, valid):
+            return jnp.where(valid, pool.ticket[jnp.maximum(sess, 0),
+                                                jnp.maximum(slot, 0)],
+                             jnp.int32(-1))
+
+        # one fused dispatch instead of four eager ones per armed round
+        self._round_tickets_j = jax.jit(round_tickets)
 
     # -- session lifecycle ----------------------------------------------------
     def open_session(self) -> Session:
@@ -298,9 +311,12 @@ class KVSessionService:
         -> per-batch rebalance check.  With `sync=False` (the serving hot
         path) nothing round-trips to the host; `sync=True` returns the
         number of lanes packed (0 = the pool had nothing pending)."""
+        armed = obs.enabled()
+        t_pack0 = time.perf_counter() if armed else 0.0
         with obs.span("sessions.step", cat="serve"):
             (bkeys, bops, bvals, sess, slot, valid,
              fill) = self._pack_j(self.pool, self.kv._bucket_map_dev)
+            t_pack1 = time.perf_counter() if armed else 0.0
             status, rvals, placed, _deferred = self.kv.apply_round(
                 bkeys, bops, bvals)
             # by construction the packer never exceeds a shard's slab
@@ -309,6 +325,7 @@ class KVSessionService:
             # result
             self.pool = self._commit_j(self.pool, sess, slot,
                                        valid & placed, status, rvals)
+            t_applied = time.perf_counter() if armed else 0.0
             self.kv.maybe_rebalance()
             # durability hook: a DurableKV backing store snapshots on its
             # configured cadence at packed-round boundaries (between rounds
@@ -319,11 +336,13 @@ class KVSessionService:
                 snap()
         self.pack_rounds += 1
         self._pending_fill.append(fill)
-        if self.trace_schedule:
-            tkt = jnp.where(valid, self.pool.ticket[
-                jnp.maximum(sess, 0), jnp.maximum(slot, 0)], jnp.int32(-1))
-            self.schedule.append((sess, valid, bkeys, bops, bvals,
-                                  status, rvals, tkt))
+        if armed or self.trace_schedule:
+            tkt = self._round_tickets_j(self.pool, sess, slot, valid)
+            if armed:       # queued device-side; folded with the fills
+                self._clock.note_round(tkt, t_pack0, t_pack1, t_applied)
+            if self.trace_schedule:
+                self.schedule.append((sess, valid, bkeys, bops, bvals,
+                                      status, rvals, tkt))
         if len(self._pending_fill) >= 128:
             self._fold_fill()
         if sync:
@@ -372,6 +391,8 @@ class KVSessionService:
         self._next_ticket += n_acc
         self.tickets_issued += n_acc
         self.tickets_rejected += B - n_acc
+        if n_acc and obs.enabled():
+            self._clock.note_enqueue(t0, n_acc, time.perf_counter())
         for i in range(n_acc):
             t = t0 + i
             s._slot_of[t] = s._tail + i     # monotone cursor, slot = mod C
@@ -409,6 +430,8 @@ class KVSessionService:
                 s._freed.remove(s._head)
                 s._head += 1
             self.collected += len(tickets)
+            if obs.enabled():   # collection is already a sync point
+                self._clock.note_collected(tickets, time.perf_counter())
         return out_st, out_v
 
     def _poll(self, s: Session, tickets: np.ndarray):
@@ -468,6 +491,8 @@ class KVSessionService:
             obs.count_total("f2_packed_lanes_total", self._packed_lanes,
                             help="lanes packed into routed rounds",
                             facade=self._obs_facade)
+            self._clock.fold()          # queued ticket rounds ride along
+            obs.rules.maybe_evaluate()  # alert pass at the fold point
 
     @property
     def packed_lanes(self) -> int:

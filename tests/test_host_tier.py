@@ -276,6 +276,96 @@ def test_promote_never_demoted_chunk_raises(spilled):
 
 
 # ---------------------------------------------------------------------------
+# cache-contract graceful degradation: batches wider than the cache
+# split into retried slices; only a single over-wide lane hard-errors
+# ---------------------------------------------------------------------------
+
+def test_contract_split_wide_read(spilled):
+    """One read batch over the WHOLE keyspace — far more below-floor
+    walk paths than host_cache_chunks rows — must split into cache-sized
+    slices and still serve bit-exact results, instead of raising the
+    thrash error the old contract mandated."""
+    kv, tw, ref = spilled
+    ht = kv._ht
+    before = ht.contract_splits
+    all_keys = np.arange(1, N_KEYS + 1, dtype=np.int32)
+    sa, va = kv.read(all_keys)
+    sb, vb = tw.read(all_keys)
+    np.testing.assert_array_equal(np.asarray(sa), np.asarray(sb))
+    np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+    assert ht.contract_splits > before      # the degradation really ran
+    assert ht.stats()["contract_splits_total"] == ht.contract_splits
+    kv.check_invariants()
+
+
+def test_contract_split_sharded_wide_read():
+    """Sharded variant of the split contract: the routed host-tier read
+    loop slices the batch per the same rule."""
+    n_keys = 2 * N_KEYS         # ~N_KEYS live keys per shard, the same
+    kv = ShardedKV(host_cfg(host_prefetch=0), 2,    # regime as `spilled`;
+                   compact_batch=128, donate=False)  # writes must fit cache
+    rng = np.random.default_rng(23)
+    ref = {}
+    for step in range(400):
+        keys = rng.integers(1, n_keys + 1, size=B).astype(np.int32)
+        vals = np.stack([keys * 3 + step, keys * 5 + 1],
+                        axis=1).astype(np.int32)
+        kv.upsert(keys, vals)
+        for i, k in enumerate(keys):
+            ref[int(k)] = vals[i].copy()
+    assert spill_factor(kv) > 1.0
+    all_keys = np.arange(1, n_keys + 1, dtype=np.int32)
+    st, v = kv.read(all_keys)
+    st, v = np.asarray(st), np.asarray(v)
+    for j, k in enumerate(all_keys):
+        k = int(k)
+        if k in ref:
+            assert st[j] == ST_OK, (k, st[j])
+            np.testing.assert_array_equal(v[j], ref[k])
+        else:
+            assert st[j] == ST_NOT_FOUND, (k, st[j])
+    assert kv._ht.contract_splits > 0
+    kv.check_invariants()
+
+
+def test_single_lane_thrash_still_hard_errors(spilled):
+    """The capacity contract survives for the case that genuinely cannot
+    degrade: with the whole cache full and pinned, a one-lane read that
+    must promote has no slice to retry — CacheThrash escapes (and no
+    split is counted)."""
+    from repro.core.host_tier import CacheThrash
+    kv, _, _ = spilled
+    ht = kv._ht
+    ht.end_batch()
+    # fill any empty rows, then pin every resident chunk
+    resident = {int(x) for x in np.asarray(kv.state.host.chunk) if x >= 0}
+    absent = [cid for cid in sorted(ht.store[0]) if cid not in resident]
+    room = kv.cfg.host_cache_chunks - len(resident)
+    if room > 0:
+        kv.state = ht.promote(kv.state, [set(absent[:room])], pin=False)
+        resident = {int(x) for x in np.asarray(kv.state.host.chunk)
+                    if x >= 0}
+    assert len(resident) == kv.cfg.host_cache_chunks
+    splits_before = ht.contract_splits
+    raised = False
+    rng = np.random.default_rng(3)
+    for k in rng.permutation(np.arange(1, N_KEYS + 1, dtype=np.int32)):
+        # a successful read's end_batch clears pins: re-arm every attempt
+        resident = {int(x) for x in np.asarray(kv.state.host.chunk)
+                    if x >= 0}
+        ht.pin_chunks([resident])
+        try:
+            kv.read(np.asarray([k], np.int32))
+        except CacheThrash:
+            raised = True
+            break
+    assert raised       # some key's walk needed an absent chunk
+    assert ht.contract_splits == splits_before
+    ht.end_batch()
+    kv.check_invariants()
+
+
+# ---------------------------------------------------------------------------
 # hypothesis property (the seeded oracles above are the fallback when
 # hypothesis is not installed, per repo convention)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,402 @@
+"""Request-level latency layer (`repro.obs.latency` + `rules` +
+`serve`): quantile-estimator accuracy against numpy, decaying live
+windows under injected clocks, the ticket lifecycle clock, the alert
+rule grammar and engine transitions, and the HTTP endpoint surface.
+
+The estimator contract: `quantile()` over log-bucketed counts is within
+one bucket ratio (10^(1/per_decade)) of `numpy.percentile` on the raw
+samples, for any sample set inside the bucket range.  Seeded oracles
+always run; the hypothesis property rides on top when installed, per
+repo convention.
+"""
+import json
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import latency, rules, serve
+from repro.obs.latency import (LATENCY_LOG_BUCKETS, DecayingQuantile,
+                               TicketClock, log_buckets, quantile,
+                               quantiles)
+from repro.obs.rules import AlertEngine, Rule, RuleError
+
+
+@pytest.fixture(autouse=True)
+def _obs_clean():
+    obs.configure(enabled=False, reset=True)
+    yield
+    obs.configure(enabled=False, reset=True)
+
+
+def _bin_counts(values, edges):
+    """Bucket raw samples the way the histogram would."""
+    counts = [0] * (len(edges) + 1)
+    for v in values:
+        i = 0
+        for e in edges:
+            if v <= e:
+                break
+            i += 1
+        counts[i] += 1
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# quantile estimator vs numpy.percentile
+# ---------------------------------------------------------------------------
+
+def _check_estimator(values, per_decade=5, qs=(0.5, 0.95, 0.99, 0.999)):
+    edges = log_buckets(1e-6, 10.0, per_decade)
+    counts = _bin_counts(values, edges)
+    ratio = 10.0 ** (1.0 / per_decade)
+    for q in qs:
+        est = quantile(edges, counts, q)
+        true = float(np.percentile(values, q * 100.0,
+                                   method="inverted_cdf"))
+        assert est is not None
+        # within one bucket ratio of the true order statistic (the
+        # geometric-midpoint guarantee), with float slack
+        assert true / ratio * (1 - 1e-9) <= est <= true * ratio * (1 + 1e-9), \
+            (q, est, true, ratio)
+
+
+def test_quantile_matches_numpy_seeded():
+    rng = np.random.default_rng(11)
+    for _ in range(5):
+        vals = np.exp(rng.normal(-6.0, 1.5, size=500))
+        vals = np.clip(vals, 2e-6, 9.0)
+        _check_estimator(vals)
+
+
+def test_quantile_uniform_and_heavy_tail():
+    rng = np.random.default_rng(12)
+    _check_estimator(rng.uniform(1e-4, 1e-1, 300))
+    _check_estimator(np.clip(rng.pareto(1.2, 300) * 1e-4, 2e-6, 9.0))
+
+
+def test_quantile_empty_and_degenerate():
+    edges = LATENCY_LOG_BUCKETS
+    assert quantile(edges, [0] * (len(edges) + 1), 0.5) is None
+    counts = _bin_counts([1e-3] * 10, edges)
+    est = quantile(edges, counts, 0.5)
+    assert est == pytest.approx(1e-3, rel=0.6)      # same bucket
+    qs = quantiles(edges, counts)
+    assert set(qs) == {"p50", "p95", "p99", "p999"}
+    assert all(v == est for v in qs.values())       # one bucket only
+
+
+def test_quantile_overflow_bucket():
+    edges = (1e-3, 1e-2)
+    # everything above the last edge lands in the overflow bucket, whose
+    # estimate is pinned to the last edge (no upper bound to midpoint)
+    assert quantile(edges, [0, 0, 7], 0.5) == 1e-2
+
+
+def test_log_buckets_strictly_increasing():
+    for per_decade in (1, 3, 5, 9):
+        e = log_buckets(1e-6, 10.0, per_decade)
+        assert all(b > a for a, b in zip(e, e[1:]))
+        assert e[0] == pytest.approx(1e-6) and e[-1] == pytest.approx(10.0)
+
+
+# ---------------------------------------------------------------------------
+# decaying live window (injected clocks: no wall-time flakiness)
+# ---------------------------------------------------------------------------
+
+def test_decaying_quantile_half_life():
+    w = DecayingQuantile(half_life_s=30.0)
+    for _ in range(8):
+        w.observe(1e-3, now=0.0)
+    assert w.total(now=0.0) == pytest.approx(8.0)
+    assert w.total(now=30.0) == pytest.approx(4.0)      # one half-life
+    assert w.total(now=90.0) == pytest.approx(1.0)      # three
+    assert w.quantile(0.5, now=90.0) == pytest.approx(1e-3, rel=0.6)
+
+
+def test_decaying_quantile_spike_ages_out():
+    w = DecayingQuantile(half_life_s=30.0)
+    w.observe(1.0, now=0.0)                 # old spike
+    for t in range(1, 11):
+        w.observe(1e-4, now=300.0 + t)      # fresh fast samples
+    # ten half-lives later the spike's weight is ~1e-3: the median is
+    # back at the fast samples
+    assert w.quantile(0.5, now=311.0) == pytest.approx(1e-4, rel=0.6)
+    assert w.quantile(0.5, now=4000.0) is None or \
+        w.quantile(0.5, now=4000.0) < 1e-2  # fully decayed -> empty
+
+
+def test_observe_phase_feeds_registry_and_live():
+    obs.configure(enabled=True, reset=True)
+    latency.observe_phase("e2e", 0.01)
+    latency.observe_phase("e2e", 0.02)
+    s = latency.summary()
+    assert s["e2e"]["count"] == 2
+    assert s["e2e"]["p50"] == pytest.approx(0.015, rel=0.7)
+    live = latency.live_summary()
+    assert live["e2e"]["total"] == pytest.approx(2.0, abs=0.1)
+    # disabled: no registry traffic, no live window
+    obs.configure(enabled=False, reset=True)
+    latency.observe_phase("e2e", 0.01)
+    assert latency.summary() == {}
+    assert latency.live_summary() == {}
+
+
+# ---------------------------------------------------------------------------
+# ticket lifecycle clock (synthetic stamps, identity fetch)
+# ---------------------------------------------------------------------------
+
+def test_ticket_clock_phases():
+    obs.configure(enabled=True, reset=True)
+    clk = TicketClock()                     # identity fetch
+    clk.note_enqueue(0, 4, now=10.0)
+    # round packs tickets 0..2 (lane 3 unfilled), applied at 10.5
+    clk.note_round(np.array([0, 1, 2, -1]), 10.1, 10.2, 10.5)
+    clk.note_enqueue(4, 1, now=10.6)
+    clk.note_round(np.array([3, 4, -1, -1]), 10.7, 10.8, 11.0)
+    clk.note_collected([0, 1, 2, 3, 4], now=11.5)
+    assert clk.outstanding == 0
+    s = latency.summary()
+    assert s["pack"]["count"] == 2
+    assert s["pack"]["mean"] == pytest.approx(0.1, rel=1e-6)
+    assert s["queue"]["count"] == 5
+    assert s["apply"]["count"] == 5
+    assert s["e2e"]["count"] == 5
+    # e2e covers queue+apply per ticket, so the sums must dominate
+    e2e_sum = s["e2e"]["mean"] * s["e2e"]["count"]
+    part = (s["queue"]["mean"] * s["queue"]["count"]
+            + s["apply"]["mean"] * s["apply"]["count"])
+    assert e2e_sum >= part * (1 - 1e-9)
+
+
+def test_ticket_clock_refold_and_unknown_tickets():
+    obs.configure(enabled=True, reset=True)
+    clk = TicketClock()
+    clk.note_enqueue(0, 1, now=0.0)
+    clk.note_round(np.array([0]), 0.1, 0.2, 0.3)
+    clk.note_round(np.array([0]), 0.4, 0.5, 0.6)    # re-pack: first wins
+    clk.note_round(np.array([99]), 0.7, 0.8, 0.9)   # never enqueued
+    clk.note_collected([0, 77], now=1.0)            # 77 unknown: ignored
+    s = latency.summary()
+    assert s["queue"]["count"] == 1
+    assert s["queue"]["mean"] == pytest.approx(0.2, rel=1e-6)
+    assert s["e2e"]["count"] == 1
+    assert clk.outstanding == 0
+
+
+def test_ticket_clock_disabled_emits_nothing():
+    clk = TicketClock()
+    clk.note_enqueue(0, 2, now=0.0)
+    clk.note_round(np.array([0, 1]), 0.1, 0.2, 0.3)
+    clk.note_collected([0, 1], now=0.5)
+    assert latency.summary() == {}
+
+
+# ---------------------------------------------------------------------------
+# alert rules: grammar, thresholds, debounce, burn rate
+# ---------------------------------------------------------------------------
+
+def test_rule_parse_and_errors():
+    r = Rule("t", "p99(f2_latency_seconds{phase=e2e}) > 0.5")
+    assert (r.agg, r.metric, r.labels, r.op, r.threshold) == \
+        ("p99", "f2_latency_seconds", {"phase": "e2e"}, ">", 0.5)
+    Rule("t", "value(f2_host_chunks) >= 1e3")       # no labels is fine
+    for bad in ("p99()", "max(m) > 1", "p99(m) >> 1", "p99(m) > x",
+                "p99(m{phase}) > 1", ""):
+        with pytest.raises(RuleError):
+            Rule("bad", bad)
+    with pytest.raises(RuleError):
+        Rule("bad", "p99(m) > 1", kind="nope")
+
+
+def test_threshold_fire_resolve_and_debounce():
+    obs.configure(enabled=True, reset=True)
+    eng = AlertEngine()
+    eng.add("tail", "p99(f2_latency_seconds{phase=e2e}) > 0.1",
+            for_count=2)
+    # no data yet: cannot breach
+    assert eng.evaluate() == []
+    latency.observe_phase("e2e", 1.0)
+    assert eng.evaluate() == []                 # breach 1 of 2 (debounce)
+    tr = eng.evaluate()
+    assert [t["event"] for t in tr] == ["fired"]
+    assert eng.any_firing()
+    ev = obs.journal.events("alert.fired")
+    assert len(ev) == 1 and ev[0]["rule"] == "tail"
+    # drown the spike in fast observations: p99 falls below threshold
+    for _ in range(500):
+        latency.observe_phase("e2e", 1e-4)
+    tr = eng.evaluate()
+    assert [t["event"] for t in tr] == ["resolved"]
+    assert not eng.any_firing()
+    assert len(obs.journal.events("alert.resolved")) == 1
+
+
+def test_rate_rule_needs_two_samples():
+    obs.configure(enabled=True, reset=True)
+    eng = AlertEngine()
+    eng.add("r", "rate(f2_test_total) > 10")
+    obs.count("f2_test_total", 5)
+    assert eng.evaluate(now=0.0) == []          # first sample: no rate yet
+    obs.count("f2_test_total", 100)
+    tr = eng.evaluate(now=1.0)                  # 100/s > 10
+    assert [t["event"] for t in tr] == ["fired"]
+    tr = eng.evaluate(now=2.0)                  # no increments: 0/s
+    assert [t["event"] for t in tr] == ["resolved"]
+
+
+def test_burn_rate_ewma_smooths():
+    obs.configure(enabled=True, reset=True)
+    eng = AlertEngine()
+    eng.add("b", "value(f2_pressure) > 0.9", kind="burn_rate", alpha=0.5)
+    obs.gauge_set("f2_pressure", 1.0)
+    tr = eng.evaluate()                     # EWMA seeds at 1.0: breach
+    assert [t["event"] for t in tr] == ["fired"]
+    obs.gauge_set("f2_pressure", 0.0)
+    vals = []
+    for _ in range(4):
+        eng.evaluate()
+        vals.append(eng.rules["b"].last_value)
+    assert vals == sorted(vals, reverse=True)   # monotone EWMA decay
+    assert vals[-1] < 0.9 and not eng.any_firing()
+
+
+def test_engine_disabled_is_noop():
+    eng = AlertEngine()
+    eng.add("t", "value(f2_x) > 0")
+    assert eng.evaluate() == []             # obs disabled: no-op
+    assert eng.evaluations == 0
+    rules.maybe_evaluate()                  # module hook: also a no-op
+    assert rules.ENGINE.evaluations == 0
+
+
+# ---------------------------------------------------------------------------
+# serve endpoints: pure render + one real socket lap
+# ---------------------------------------------------------------------------
+
+def _prom_parseable(text):
+    """Every non-comment line is `name{labels} value` with a float
+    value — the scrape-parseability check."""
+    n = 0
+    for line in text.strip().splitlines():
+        if line.startswith("#"):
+            continue
+        name_part, _, value = line.rpartition(" ")
+        assert name_part and not name_part.startswith("{"), line
+        float(value)                        # raises on a malformed line
+        n += 1
+    return n
+
+
+def test_render_metrics_and_healthz():
+    obs.configure(enabled=True, reset=True)
+    latency.observe_phase("e2e", 0.01)
+    code, ctype, body = serve.render("/metrics")
+    assert code == 200 and ctype.startswith("text/plain")
+    assert _prom_parseable(body.decode()) > 0
+    assert "f2_latency_seconds_bucket" in body.decode()
+
+    code, _, body = serve.render("/healthz")
+    assert code == 200 and json.loads(body)["status"] == "ok"
+
+    rules.add_rule("tail", "count(f2_latency_seconds{phase=e2e}) >= 1")
+    code, _, body = serve.render("/healthz")    # render evaluates rules
+    doc = json.loads(body)
+    assert code == 503 and doc["firing"] == ["tail"]
+
+    code, _, body = serve.render("/snapshot.json")
+    snap = json.loads(body)
+    assert "live_latency" in snap and "alerts" in snap
+    assert snap["alerts"]["rules"][0]["firing"] is True
+
+    code, _, body = serve.render("/trace.json")
+    assert set(json.loads(body)) >= {"traceEvents"}
+    assert serve.render("/nope") is None
+
+
+def test_serve_real_socket_scrape():
+    obs.configure(enabled=True, reset=True)
+    latency.observe_phase("fsync", 2e-3)
+    srv, thread = serve.start(port=0)
+    try:
+        port = srv.server_address[1]
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/metrics", timeout=10) as r:
+            assert r.status == 200
+            assert _prom_parseable(r.read().decode()) > 0
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/healthz", timeout=10) as r:
+            assert json.loads(r.read())["status"] == "ok"
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/nope", timeout=10)
+        assert ei.value.code == 404
+    finally:
+        srv.shutdown()
+        srv.server_close()
+        thread.join(timeout=10)
+
+
+# ---------------------------------------------------------------------------
+# alert fault injection: a latency fault provably fires through the
+# store's own fold points, journaling the sequence
+# ---------------------------------------------------------------------------
+
+def test_alert_fires_through_store_fold_points():
+    from repro.core.sharded import ShardedKV
+    from repro.core.types import F2Config
+    obs.configure(enabled=True, reset=True)
+    rules.add_rule("deferral",
+                   "count(f2_deferral_rounds{facade=sharded,path=apply})"
+                   " >= 1")
+    cfg = F2Config(hot_index_size=1 << 8, hot_capacity=1 << 9,
+                   hot_mem=1 << 6, cold_capacity=1 << 11, cold_mem=1 << 6,
+                   n_chunks=1 << 6, chunklog_capacity=1 << 9,
+                   chunklog_mem=1 << 5, rc_capacity=1 << 6, value_width=2,
+                   chain_max=48)
+    kv = ShardedKV(cfg, 2, trigger=0.6, compact_batch=64, donate=False)
+    keys = np.arange(1, 65, dtype=np.int32)
+    kv.upsert(keys, np.stack([keys, keys], 1).astype(np.int32))
+    assert not rules.ENGINE.any_firing()
+    kv.stats()                              # fold point runs the engine
+    assert rules.ENGINE.any_firing()
+    ev = obs.journal.events("alert.fired")
+    assert len(ev) == 1 and ev[0]["rule"] == "deferral"
+    # /healthz now reports the degradation
+    code, _, body = serve.render("/healthz")
+    assert code == 503 and json.loads(body)["firing"] == ["deferral"]
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property (seeded oracles above are the always-on fallback)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.floats(min_value=2e-6, max_value=9.0,
+                              allow_nan=False, allow_infinity=False),
+                    min_size=1, max_size=200),
+           st.floats(min_value=0.0, max_value=1.0))
+    def test_quantile_within_bucket_ratio_property(vals, q):
+        edges = LATENCY_LOG_BUCKETS
+        counts = _bin_counts(vals, edges)
+        est = quantile(edges, counts, q)
+        assert est is not None
+        true = float(np.percentile(vals, q * 100.0,
+                                   method="inverted_cdf"))
+        ratio = 10.0 ** (1.0 / 5)
+        assert true / ratio * (1 - 1e-9) <= est <= true * ratio * (1 + 1e-9)
+else:
+    @pytest.mark.skip(
+        reason="hypothesis not installed (pip install '.[test]')")
+    def test_quantile_within_bucket_ratio_property():
+        pass

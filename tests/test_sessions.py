@@ -587,6 +587,75 @@ def test_session_lifecycle():
 
 
 # ---------------------------------------------------------------------------
+# ticket latency clock: phase oracle + disabled path bit-exactness
+# ---------------------------------------------------------------------------
+
+def _drive_for_clock(svc, seed):
+    """A fixed interleaving of enqueues / steps / polls / drains; returns
+    the per-poll and per-drain outputs for bit-exact comparison."""
+    rng = np.random.default_rng(seed)
+    a, b = svc.open_session(), svc.open_session()
+    outs = []
+    for _ in range(4):
+        tks = {}
+        for s in (a, b):
+            keys, ops, vals = mixed_enqueue(rng, 64, 8)
+            tks[s.sid] = s.enqueue(keys, ops, vals)
+        svc.step()
+        svc.step()
+        for s in (a, b):
+            done, st, rv = s.poll(tks[s.sid])
+            outs.append((np.asarray(done), np.asarray(st), np.asarray(rv)))
+    svc.run_until_idle()
+    for s in (a, b):
+        tk, st, rv = s.drain()
+        outs.append((np.asarray(tk), np.asarray(st), np.asarray(rv)))
+    return outs
+
+
+def test_ticket_latency_oracle_and_disabled_bit_exact():
+    """With obs enabled, a fully-drained run's phase histograms satisfy
+    the lifecycle oracle: every collected ticket has exactly one queue,
+    apply and e2e observation, all durations are positive, and the e2e
+    total dominates queue+apply (e2e spans both, minus no overlap).  The
+    disabled twin — identical op stream — returns bit-exact client
+    results and records nothing."""
+    from repro import obs
+    from repro.obs import latency
+    obs.configure(enabled=False, reset=True)
+    try:
+        svc_off, _, _ = make_service(S=2, W=8, N=2, C=16)
+        outs_off = _drive_for_clock(svc_off, seed=5)
+        assert latency.summary() == {}      # disabled: nothing recorded
+
+        obs.configure(enabled=True, reset=True)
+        svc_on, _, _ = make_service(S=2, W=8, N=2, C=16)
+        outs_on = _drive_for_clock(svc_on, seed=5)
+
+        for (xa, ya, za), (xb, yb, zb) in zip(outs_off, outs_on):
+            np.testing.assert_array_equal(xa, xb)
+            np.testing.assert_array_equal(ya, yb)
+            np.testing.assert_array_equal(za, zb)
+
+        assert svc_on._clock.outstanding == 0   # fully drained
+        s = latency.summary()
+        n = svc_on.collected
+        assert n > 0
+        assert s["queue"]["count"] == n
+        assert s["apply"]["count"] == n
+        assert s["e2e"]["count"] == n
+        assert s["pack"]["count"] == svc_on.pack_rounds
+        for phase in ("queue", "apply", "e2e", "pack"):
+            assert s[phase]["mean"] > 0.0, phase
+            assert s[phase]["p50"] > 0.0, phase
+        e2e_sum = s["e2e"]["mean"] * n
+        part = (s["queue"]["mean"] + s["apply"]["mean"]) * n
+        assert e2e_sum >= part * (1 - 1e-9)
+    finally:
+        obs.configure(enabled=False, reset=True)
+
+
+# ---------------------------------------------------------------------------
 # Hypothesis properties (seeded fallbacks above always run)
 # ---------------------------------------------------------------------------
 
